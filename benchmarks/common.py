@@ -1,0 +1,76 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Scaling note (EXPERIMENTS.md): the container has 2 CPU cores, so the
+benchmarks default to the LIGHT CNN (same V=5 structure, ~30x fewer FLOPs)
+and reduced rounds. Set REPRO_BENCH_FULL=1 for paper-scale settings.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
+
+
+def fed_setup(dataset: str = "mnist", n: int = 2400, n_clients: int = 10,
+              seed: int = 0, alpha: Optional[float] = None):
+    from repro.data import dirichlet_partition, iid_partition, make_image_dataset
+    from repro.data.federated import rho_weights
+
+    ds = make_image_dataset(dataset, n=n, seed=seed)
+    train, test = ds.split(0.9, seed=seed)
+    if alpha is None:
+        parts = iid_partition(len(train.x), n_clients, seed=seed)
+    else:
+        parts = dirichlet_partition(train.y, n_clients, alpha=alpha, seed=seed)
+    return train, test, parts, rho_weights(parts)
+
+
+def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
+               n_clients: int = 10, batch: int = 16, tau: int = 1,
+               lr: float = 0.05, eval_every: int = 20, seed: int = 0) -> Dict:
+    """Train one scheme; returns accuracy curve + comm accounting."""
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.core.simulator import FedSimulator, SimConfig
+    from repro.data.federated import client_batches
+
+    train, test, parts, rho = fed_setup(dataset, n_clients=n_clients, seed=seed)
+    sim = FedSimulator(LIGHT_CONFIG,
+                       SimConfig(scheme=scheme, cut=cut, n_clients=n_clients,
+                                 batch=batch, tau=tau, lr=lr),
+                       rho=rho, seed=seed)
+    rng = np.random.RandomState(seed)
+    accs, rounds_axis, losses, drifts = [], [], [], []
+    for r in range(rounds):
+        xs, ys = client_batches(train, parts, batch, rng)
+        if tau > 1:
+            sel = [client_batches(train, parts, batch, rng) for _ in range(tau)]
+            xs = np.stack([s[0] for s in sel], axis=1)
+            ys = np.stack([s[1] for s in sel], axis=1)
+        else:
+            xs, ys = xs[:, None], ys[:, None]
+        m = sim.run_round(xs, ys)
+        losses.append(m["loss"])
+        drifts.append(m["client_drift"])
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            accs.append(sim.evaluate(test.x, test.y))
+            rounds_axis.append(r + 1)
+    cb = sim.comm_bytes_per_round()
+    # plain-SGD training oscillates; report the mean of the last few evals
+    tail = accs[-3:] if len(accs) >= 3 else accs
+    return {"scheme": scheme, "cut": cut, "accs": accs, "rounds": rounds_axis,
+            "losses": losses, "drifts": drifts, "comm": cb,
+            "final_acc": float(np.mean(tail))}
+
+
+def rounds_to_acc(result: Dict, target: float) -> Optional[int]:
+    for r, a in zip(result["rounds"], result["accs"]):
+        if a >= target:
+            return r
+    return None
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,43 @@
+"""Fig. 4 — communication overhead vs test accuracy across schemes.
+
+Paper claim: SFL-GA reaches a given accuracy with far less traffic than
+traditional SFL; PSL sits between (no client-model aggregation, but
+per-client gradient unicast).
+"""
+from __future__ import annotations
+
+from benchmarks.common import FULL, run_scheme
+
+
+def run(dataset: str = "mnist", rounds: int = None):
+    rounds = rounds or (150 if FULL else 60)
+    out = []
+    for scheme in ("sfl_ga", "psl", "sfl", "fl"):
+        r = run_scheme(scheme, 2, rounds, dataset)
+        per_round = r["comm"]["total_bytes"]
+        curve = [(per_round * rr / 1e6, a) for rr, a in zip(r["rounds"],
+                                                            r["accs"])]
+        out.append({"scheme": scheme, "mb_per_round": per_round / 1e6,
+                    "final_acc": r["final_acc"], "mb_acc_curve": curve})
+    return out
+
+
+def main():
+    datasets = ["mnist", "fmnist", "cifar10"] if FULL else ["mnist"]
+    for ds in datasets:
+        print(f"# fig4 dataset={ds}")
+        rows = run(ds)
+        for row in rows:
+            print(f"  {row['scheme']}: {row['mb_per_round']:.3f} MB/round, "
+                  f"final_acc={row['final_acc']:.3f}")
+        # traffic to reach 90% of the best final accuracy
+        target = 0.9 * max(r["final_acc"] for r in rows)
+        for row in rows:
+            hit = next((mb for mb, a in row["mb_acc_curve"] if a >= target),
+                       None)
+            print(f"  {row['scheme']}: MB to reach acc {target:.3f}: "
+                  f"{'%.2f' % hit if hit else 'not reached'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Fig. 5 — accuracy vs wall-clock latency across schemes.
+
+Latency per round comes from the wireless system model (eq. 29) with
+optimal resource allocation (P2.1). FL pays full-model on-device compute
+(the paper's point: it is slowest to converge in wall-clock).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FULL, run_scheme
+
+
+def _round_latency(scheme: str, cut: int, seed: int = 0) -> float:
+    """Expected per-round latency under the paper's §V-A system constants."""
+    from repro.ccc.convex import solve_p21
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.models import cnn
+    from repro.sysmodel.comm import CommParams, path_loss_gain
+    from repro.sysmodel.comp import CompParams
+
+    rng = np.random.RandomState(seed)
+    gains = path_loss_gain(rng.uniform(0.05, 0.5, 10), rng)
+    comm, comp = CommParams(), CompParams()
+    batch = 16
+    if scheme == "fl":
+        # full model on client CPU + model exchange, no split
+        w = (comp.client_fwd_flops + comp.client_bwd_flops
+             + comp.server_fwd_flops + comp.server_bwd_flops)
+        t_comp = batch * w / comp.client_cpu_max
+        q_bits = cnn.total_params(LIGHT_CONFIG) * 32
+        from repro.sysmodel.comm import downlink_rate, uplink_rate
+
+        bw = np.full(10, comm.total_bandwidth / 10)
+        r_up = uplink_rate(bw, np.full(10, comm.client_power), gains, comm)
+        t_up = float(np.max(q_bits / r_up))
+        t_dn = float(np.max(q_bits / downlink_rate(gains, comm)))
+        return t_comp + t_up + t_dn
+    X_bits = cnn.smashed_numel(LIGHT_CONFIG, cut) * batch * 32
+    r = solve_p21(gains, X_bits, batch, comm, comp)
+    lat = r.total
+    if scheme == "sfl":  # client-model aggregation round-trips
+        from repro.sysmodel.comm import downlink_rate, uplink_rate
+
+        phi_bits = cnn.phi(LIGHT_CONFIG, cut) * 32
+        bw = np.full(10, comm.total_bandwidth / 10)
+        r_up = uplink_rate(bw, np.full(10, comm.client_power), gains, comm)
+        lat += float(np.max(phi_bits / r_up)) \
+            + float(np.max(phi_bits / downlink_rate(gains, comm)))
+    return lat
+
+
+def run(dataset: str = "mnist", rounds: int = None):
+    rounds = rounds or (150 if FULL else 60)
+    out = []
+    for scheme in ("sfl_ga", "sfl", "psl", "fl"):
+        r = run_scheme(scheme, 2, rounds, dataset)
+        lat = _round_latency(scheme, 2)
+        out.append({"scheme": scheme, "latency_per_round_s": lat,
+                    "final_acc": r["final_acc"],
+                    "time_acc_curve": [(lat * rr, a) for rr, a in
+                                       zip(r["rounds"], r["accs"])]})
+    return out
+
+
+def main():
+    print("# fig5 accuracy vs latency (mnist)")
+    for row in run():
+        print(f"  {row['scheme']}: {row['latency_per_round_s']:.3f} s/round, "
+              f"final_acc={row['final_acc']:.3f}, "
+              f"time_to_final={row['time_acc_curve'][-1][0]:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 6 — latency under different resource strategies.
+
+Compares Algorithm 1 (DDQN cut + convex allocation) against:
+fixed-cut + optimal allocation, fixed-cut + fixed (equal-split) allocation,
+and random-cut + optimal allocation. Metric: cumulative latency + weighted
+cost over a horizon.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FULL
+from repro.ccc.env import CuttingPointEnv, cnn_env_config
+from repro.ccc.strategy import (fixed_alloc_policy_cost, fixed_cut_policy_cost,
+                                random_cut_policy_cost, run_algorithm1)
+
+
+def run(episodes: int = None, horizon: int = 10):
+    episodes = episodes or (200 if FULL else 60)
+    mk = lambda seed: CuttingPointEnv(cnn_env_config(
+        horizon=horizon, batch=16, epsilon=0.001, seed=seed))
+    res = run_algorithm1(mk(7), episodes=episodes)
+
+    env = mk(7)
+    s = env.reset()
+    alg1_lat, alg1_cost, done = 0.0, 0.0, False
+    while not done:
+        a = res.agent.act(s, greedy=True)
+        s, r, done, info = env.step(a)
+        alg1_lat += info["latency"]
+        alg1_cost += -r
+    rows = [{"strategy": "algorithm1(ddqn+convex)", "latency": alg1_lat,
+             "cost": alg1_cost, "policy": res.greedy_policy}]
+    for v in (1, 2):
+        f = fixed_cut_policy_cost(mk(7), v, rounds=horizon)
+        rows.append({"strategy": f"fixed_cut_v{v}_opt_alloc", **f})
+        g = fixed_alloc_policy_cost(mk(7), v, rounds=horizon)
+        rows.append({"strategy": f"fixed_cut_v{v}_fixed_alloc", **g})
+    rows.append({"strategy": "random_cut_opt_alloc",
+                 **random_cut_policy_cost(mk(7), rounds=horizon)})
+    return rows
+
+
+def main():
+    print("# fig6 resource strategies (10-round horizon)")
+    for row in run():
+        extra = f" policy={row['policy']}" if "policy" in row else ""
+        print(f"  {row['strategy']}: latency={row['latency']:.2f}s "
+              f"cost={row['cost']:.2f}{extra}")
+
+
+if __name__ == "__main__":
+    main()

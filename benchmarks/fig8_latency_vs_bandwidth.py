@@ -1,0 +1,73 @@
+"""Fig. 8 — per-round latency vs total bandwidth, per scheme.
+
+Paper claim: all schemes speed up with bandwidth; SFL-GA is lowest
+(broadcast downlink + no model aggregation); SFL slightly above PSL
+(client-model aggregation traffic); FL worst (full-model exchange +
+on-device training).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ccc.convex import solve_p21
+from repro.configs.paper_cnn import LIGHT_CONFIG
+from repro.models import cnn
+from repro.sysmodel.comm import CommParams, downlink_rate, path_loss_gain, uplink_rate
+from repro.sysmodel.comp import CompParams
+
+BANDWIDTHS = (5e6, 10e6, 20e6, 40e6)
+
+
+def _lat(scheme: str, comm: CommParams, gains, cut=2, batch=16) -> float:
+    comp = CompParams()
+    N = len(gains)
+    if scheme == "fl":
+        w = (comp.client_fwd_flops + comp.client_bwd_flops
+             + comp.server_fwd_flops + comp.server_bwd_flops)
+        t_comp = batch * w / comp.client_cpu_max
+        q_bits = cnn.total_params(LIGHT_CONFIG) * 32
+        bw = np.full(N, comm.total_bandwidth / N)
+        r_up = uplink_rate(bw, np.full(N, comm.client_power), gains, comm)
+        return t_comp + float(np.max(q_bits / r_up)) \
+            + float(np.max(q_bits / downlink_rate(gains, comm)))
+    X_bits = cnn.smashed_numel(LIGHT_CONFIG, cut) * batch * 32
+    r = solve_p21(gains, X_bits, batch, comm, comp)
+    lat = r.total
+    if scheme == "psl":
+        # unicast downlink instead of single broadcast: N gradient payloads
+        # share the band — approximate as N sequential broadcasts
+        r_dn = downlink_rate(gains, comm)
+        lat += (N - 1) * float(np.max(X_bits / r_dn))
+    if scheme == "sfl":
+        r_dn = downlink_rate(gains, comm)
+        lat += (N - 1) * float(np.max(X_bits / r_dn))
+        phi_bits = cnn.phi(LIGHT_CONFIG, cut) * 32
+        bw = np.full(N, comm.total_bandwidth / N)
+        r_up = uplink_rate(bw, np.full(N, comm.client_power), gains, comm)
+        lat += float(np.max(phi_bits / r_up)) \
+            + float(np.max(phi_bits / downlink_rate(gains, comm)))
+    return lat
+
+
+def run():
+    rng = np.random.RandomState(0)
+    gains = path_loss_gain(rng.uniform(0.05, 0.5, 10), rng)
+    rows = []
+    for bw in BANDWIDTHS:
+        comm = CommParams(total_bandwidth=bw)
+        rows.append({"bandwidth_mhz": bw / 1e6,
+                     **{s: _lat(s, comm, gains)
+                        for s in ("sfl_ga", "psl", "sfl", "fl")}})
+    return rows
+
+
+def main():
+    print("# fig8 latency (s/round) vs bandwidth (MHz)")
+    print("  MHz, sfl_ga, psl, sfl, fl")
+    for row in run():
+        print(f"  {row['bandwidth_mhz']:.0f}, {row['sfl_ga']:.3f}, "
+              f"{row['psl']:.3f}, {row['sfl']:.3f}, {row['fl']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks (CPU timings are indicative only — the Pallas
+kernels run in interpret mode here; the ref path is the jnp oracle)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run():
+    from repro.kernels import ops
+
+    rows = []
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(k2, (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 256, 2, 64), jnp.float32)
+    rows.append(("flash_attention_ref_256", _time(
+        jax.jit(lambda a, b, c: ops.flash_attention(a, b, c, backend="jnp")),
+        q, k, v)))
+
+    x = jax.random.normal(k1, (1, 256, 4, 64))
+    dt = jax.nn.softplus(jax.random.normal(k2, (1, 256, 4))) * 0.1
+    A = -jnp.exp(jax.random.normal(k3, (4,)) * 0.5)
+    B = jax.random.normal(k1, (1, 256, 1, 64)) * 0.3
+    C = jax.random.normal(k2, (1, 256, 1, 64)) * 0.3
+    rows.append(("ssd_ref_256", _time(
+        jax.jit(lambda *a: ops.ssd(*a, chunk=64, backend="jnp")[0]),
+        x, dt, A, B, C)))
+
+    g = jax.random.normal(k1, (8, 1024, 512))
+    rho = jnp.full((8,), 0.125)
+    rows.append(("grad_agg_ref_8x1024x512", _time(
+        jax.jit(lambda a, b: ops.grad_agg(a, b, backend="jnp")), g, rho)))
+    return rows
+
+
+def main():
+    for name, us in run():
+        print(f"  {name}: {us:.0f} us/call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Benchmark driver — one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention. Each
+"call" is the full benchmark routine; ``derived`` carries the headline
+metric(s) the paper figure reports.
+
+Fast mode by default (2-core container); REPRO_BENCH_FULL=1 for
+paper-scale rounds/episodes/datasets.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def _bench(name, fn):
+    t0 = time.time()
+    try:
+        derived = fn()
+        us = (time.time() - t0) * 1e6
+        print(f"{name},{us:.0f},{derived}")
+    except Exception as e:  # pragma: no cover
+        traceback.print_exc()
+        print(f"{name},-1,ERROR:{type(e).__name__}")
+
+
+def bench_fig3():
+    from benchmarks import fig3_convergence_vs_cut as f
+
+    rows = f.run()
+    accs = {r["scheme"]: r["final_acc"] for r in rows}
+    drifts = {r["scheme"]: r["drift"] for r in rows}
+    # headline: acc degrades with v; drift grows with v
+    return ("acc_v1=%.3f acc_v4=%.3f sfl_ref=%.3f drift_v1=%.1e drift_v4=%.1e"
+            % (accs["sfl_ga_v1"], accs["sfl_ga_v4"], accs["sfl_ref"],
+               drifts["sfl_ga_v1"], drifts["sfl_ga_v4"]))
+
+
+def bench_fig4():
+    from benchmarks import fig4_comm_overhead as f
+
+    rows = {r["scheme"]: r for r in f.run()}
+    return ("MB/round sfl_ga=%.3f psl=%.3f sfl=%.3f fl=%.3f"
+            % tuple(rows[s]["mb_per_round"]
+                    for s in ("sfl_ga", "psl", "sfl", "fl")))
+
+
+def bench_fig5():
+    from benchmarks import fig5_latency_schemes as f
+
+    rows = {r["scheme"]: r for r in f.run()}
+    return ("s/round sfl_ga=%.3f sfl=%.3f psl=%.3f fl=%.3f"
+            % tuple(rows[s]["latency_per_round_s"]
+                    for s in ("sfl_ga", "sfl", "psl", "fl")))
+
+
+def bench_fig6():
+    from benchmarks import fig6_resource_strategies as f
+
+    rows = {r["strategy"]: r for r in f.run()}
+    a1 = rows["algorithm1(ddqn+convex)"]
+    fx = rows["fixed_cut_v2_fixed_alloc"]
+    rd = rows["random_cut_opt_alloc"]
+    return ("latency alg1=%.2f fixed_alloc_v2=%.2f random=%.2f"
+            % (a1["latency"], fx["latency"], rd["latency"]))
+
+
+def bench_fig7():
+    from benchmarks import fig7_ddqn_convergence as f
+
+    rows = f.run()
+    return " ".join("eps=%g:%.1f->%.1f" % (r["epsilon"], r["first_rewards"],
+                                           r["last_rewards"]) for r in rows)
+
+
+def bench_fig8():
+    from benchmarks import fig8_latency_vs_bandwidth as f
+
+    rows = f.run()
+    lo, hi = rows[0], rows[-1]
+    return ("sfl_ga@5MHz=%.3fs sfl_ga@40MHz=%.3fs fl@40MHz=%.3fs"
+            % (lo["sfl_ga"], hi["sfl_ga"], hi["fl"]))
+
+
+def bench_roofline():
+    from benchmarks import roofline as f
+
+    rows = f.load()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    sk = [r for r in rows if r.get("status") == "skipped"]
+    er = [r for r in rows if r.get("status") == "error"]
+    if not rows:
+        return "no dryrun results (run repro.launch.dryrun --all)"
+    bn = {}
+    for r in ok:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    return f"cells ok={len(ok)} skipped={len(sk)} err={len(er)} bottlenecks={bn}"
+
+
+def bench_kernels():
+    from benchmarks import kernels_bench as f
+
+    rows = f.run()
+    return " ".join(f"{n}={us:.0f}us" for n, us in rows)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    _bench("kernels_micro", bench_kernels)
+    _bench("fig8_latency_vs_bandwidth", bench_fig8)
+    _bench("roofline_table", bench_roofline)
+    _bench("fig6_resource_strategies", bench_fig6)
+    _bench("fig7_ddqn_convergence", bench_fig7)
+    _bench("fig3_convergence_vs_cut", bench_fig3)
+    _bench("fig4_comm_overhead", bench_fig4)
+    _bench("fig5_latency_schemes", bench_fig5)
+
+
+if __name__ == "__main__":
+    main()

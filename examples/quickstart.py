@@ -1,0 +1,50 @@
+"""Quickstart: the SFL-GA protocol in ~60 lines, end to end.
+
+Trains the paper's CNN (light variant) with 10 federated clients on a
+synthetic MNIST-like task, comparing SFL-GA against traditional SFL —
+watch the per-round communication bytes differ while accuracy tracks.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.paper_cnn import LIGHT_CONFIG
+from repro.core.simulator import FedSimulator, SimConfig
+from repro.data import iid_partition, make_image_dataset
+from repro.data.federated import client_batches, rho_weights
+
+
+def main():
+    # 1) data: synthetic MNIST-like, split across 10 clients (IID)
+    ds = make_image_dataset("mnist", n=2400, seed=0)
+    train, test = ds.split(0.9)
+    parts = iid_partition(len(train.x), n_clients=10, seed=0)
+    rho = rho_weights(parts)  # the paper's ρ^n = D^n / D
+
+    for scheme in ("sfl_ga", "sfl"):
+        # 2) simulator: cut the V=5 CNN at v=2 — conv layers on clients
+        sim = FedSimulator(
+            LIGHT_CONFIG,
+            SimConfig(scheme=scheme, cut=2, n_clients=10, batch=16, lr=0.1),
+            rho=rho, seed=0)
+
+        # 3) federated rounds: upload smashed data, server update,
+        #    aggregated-gradient broadcast (eq. 5), client backprop
+        rng = np.random.RandomState(0)
+        for r in range(40):
+            xs, ys = client_batches(train, parts, batch=16, rng=rng)
+            metrics = sim.run_round(xs[:, None], ys[:, None])
+
+        acc = sim.evaluate(test.x, test.y)
+        comm = sim.comm_bytes_per_round()
+        print(f"{scheme:>7}: acc={acc:.3f} loss={metrics['loss']:.3f} "
+              f"traffic={comm['total_bytes']/1e6:.3f} MB/round "
+              f"(up {comm['up_bytes']/1e6:.3f} / down {comm['down_bytes']/1e6:.3f})")
+
+    print("\nSFL-GA reaches comparable accuracy with ~2x less traffic — "
+          "the downlink is ONE broadcast and client models are never "
+          "aggregated (paper Figs. 3-4).")
+
+
+if __name__ == "__main__":
+    main()

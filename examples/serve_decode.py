@@ -1,0 +1,18 @@
+"""Serving example: prefill + batched greedy decode for two architecture
+families — a dense GQA model and an attention-free Mamba-2 (whose decode
+state is O(1) in context length — the long_500k story).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ("granite-8b", "mamba2-130m"):
+        print(f"\n=== {arch} (reduced config) ===")
+        serve_mod.main(["--arch", arch, "--preset", "smoke", "--batch", "2",
+                        "--prompt-len", "32", "--gen", "12"])
+
+
+if __name__ == "__main__":
+    main()

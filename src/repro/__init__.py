@@ -1,0 +1,5 @@
+"""repro: communication-and-computation efficient Split Federated Learning
+(SFL-GA) in JAX — multi-pod training/serving framework reproducing and
+extending Liang et al., 2025 (cs.DC)."""
+
+__version__ = "1.0.0"

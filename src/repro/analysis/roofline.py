@@ -1,0 +1,373 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = coll_bytes  / (chips * LINK_BW)
+
+XLA's ``compiled.cost_analysis()`` does NOT multiply while-loop bodies by
+their trip counts (our stacks are scan-over-layers!), so we walk the
+optimized HLO ourselves: a call-graph pass propagates multipliers (fusions,
+while bodies via the ``known_trip_count`` backend config) and accumulates
+
+* dot/convolution FLOPs (2 * prod(result) * prod(contracting dims)),
+* bytes touched by dots (operands + result — a useful lower bound on HBM
+  traffic for the matmul-dominated steps),
+* collective bytes: all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute contribute max(operand, result) bytes each.
+
+All quantities are PER-DEVICE (the compiled module is the per-device SPMD
+program), so roofline terms divide by peak rates only — except that we
+also report the global aggregate (x chips) for cross-mesh comparisons.
+
+Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+
+
+def _shape_dims(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _shape_bytes_all(text: str) -> int:
+    """Sum bytes of every typed shape appearing in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Module:
+    """Lightweight parse of an HLO module text."""
+
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.shapes: Dict[str, Dict[str, Tuple[str, List[int]]]] = {}
+        self.entry = None
+        cur = None
+        for raw in hlo.splitlines():
+            line = raw.strip()
+            # NB: params may be tuple-typed with nested parens — match greedily
+            m = re.match(
+                r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$", line)
+            if m:
+                cur = m.group(2)
+                self.comps[cur] = []
+                self.shapes[cur] = {}
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if line == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            self.comps[cur].append(line)
+            dm = _DEF_RE.match(line)
+            if dm:
+                sh = _shape_dims(dm.group(2))
+                if sh:
+                    self.shapes[cur][dm.group(1)] = sh
+        if self.entry is None:
+            for name in self.comps:
+                if "main" in name:
+                    self.entry = name
+                    break
+        if self.entry is None and self.comps:
+            self.entry = next(iter(self.comps))
+
+    def operand_shape(self, comp: str, op: str):
+        s = self.shapes.get(comp, {}).get(op)
+        if s is None:
+            for c in self.shapes.values():  # fallback: global lookup
+                if op in c:
+                    return c[op]
+        return s
+
+
+_CALL_KEYS = ("to_apply=", "calls=", "body=", "condition=")
+
+
+def _called(line: str) -> List[str]:
+    out = []
+    for key in _CALL_KEYS:
+        for m in re.finditer(re.escape(key) + r"%?([\w\.\-]+)", line):
+            out.append(m.group(1))
+    for m in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+        out += [x.strip().lstrip("%") for x in m.group(1).split(",")]
+    return out
+
+
+def _trip_count(line: str, mod: _Module) -> int:
+    m = re.search(r'known_trip_count":\s*{"n":"(\d+)"', line)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%?([\w\.\-]+)", line)
+    if mc and mc.group(1) in mod.comps:
+        consts = [int(c.group(1))
+                  for cl in mod.comps[mc.group(1)]
+                  for c in re.finditer(r"constant\((\d+)\)", cl)]
+        if consts:
+            return max(consts)
+    return 1
+
+
+_DOT_ARGS_RE = re.compile(r"dot\(\s*%([\w\.\-]+)\s*,\s*%([\w\.\-]+)\s*\)")
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    coll_count_by_kind: Dict[str, int] = field(default_factory=dict)
+    # TPU projection: the CPU backend has no native bf16, so XLA upcasts
+    # bf16 dots to f32 and collectives get hoisted above the converts,
+    # doubling their bytes relative to what the same program compiles to on
+    # TPU. When a collective's operand comes from a convert(-fusion) we
+    # charge bf16 bytes here; both numbers are reported.
+    coll_bytes_tpu_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def coll_bytes(self) -> int:
+        return sum(self.coll_bytes_by_kind.values())
+
+    @property
+    def coll_bytes_tpu(self) -> int:
+        return sum(self.coll_bytes_tpu_by_kind.values())
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    mod = _Module(hlo)
+    stats = HloStats()
+    mults: Dict[str, int] = {}
+
+    def visit(name: str, mult: int, depth: int = 0):
+        if name not in mod.comps or depth > 64:
+            return
+        mults[name] = mults.get(name, 0) + mult
+        for line in mod.comps[name]:
+            callees = _called(line)
+            if not callees:
+                continue
+            factor = mult
+            if " while(" in line or re.search(r"=\s*\(?.*\bwhile\(", line):
+                factor = mult * _trip_count(line, mod)
+            seen = set()
+            for c in callees:
+                if c in seen:
+                    continue
+                seen.add(c)
+                # body AND condition both execute per iteration; condition
+                # flops are negligible, count once.
+                visit(c, factor, depth + 1)
+
+    if mod.entry:
+        visit(mod.entry, 1)
+
+    for name, lines in mod.comps.items():
+        mult = mults.get(name, 0)
+        if mult == 0:
+            continue
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            rhs = dm.group(2) if dm else line
+            res = _shape_dims(rhs)
+            # --- dots ---
+            if " dot(" in rhs or rhs.startswith("dot("):
+                am = _DOT_ARGS_RE.search(rhs)
+                if am and res:
+                    lhs_shape = mod.operand_shape(name, am.group(1))
+                    contr = 1
+                    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                    if lhs_shape and cm and cm.group(1):
+                        for d in cm.group(1).split(","):
+                            di = int(d)
+                            if di < len(lhs_shape[1]):
+                                contr *= lhs_shape[1][di]
+                    result_elems = 1
+                    for d in res[1]:
+                        result_elems *= d
+                    stats.flops += mult * 2.0 * result_elems * contr
+                    # bytes: result + both operands
+                    b = result_elems * _DTYPE_BYTES[res[0]]
+                    for opn in am.groups():
+                        s = mod.operand_shape(name, opn)
+                        if s:
+                            n = 1
+                            for d in s[1]:
+                                n *= d
+                            b += n * _DTYPE_BYTES[s[0]]
+                    stats.dot_bytes += mult * b
+                continue
+            # --- convolutions (rare: depthwise in mamba, CNN sim) ---
+            if " convolution(" in rhs and res:
+                km = re.search(r"convolution\(\s*%[\w\.\-]+\s*,\s*%([\w\.\-]+)",
+                               rhs)
+                rhs_shape = mod.operand_shape(name, km.group(1)) if km else None
+                result_elems = 1
+                for d in res[1]:
+                    result_elems *= d
+                if rhs_shape:
+                    kn = 1
+                    for d in rhs_shape[1]:
+                        kn *= d
+                    gm = re.search(r"feature_group_count=(\d+)", rhs)
+                    groups = int(gm.group(1)) if gm else 1
+                    out_feat = max(res[1][-1], 1) if res[1] else 1
+                    per_out = max(kn // max(out_feat, 1), 1)
+                    stats.flops += mult * 2.0 * result_elems * per_out
+                continue
+            # --- collectives ---
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in rhs or f"{kind}-start(" in rhs \
+                        or rhs.startswith(f"{kind}("):
+                    lhs_text = line.split("=")[0]
+                    result_b = _shape_bytes_all(rhs.split(kind)[0] + lhs_text)
+                    arg_names = re.findall(
+                        rf"{kind}(?:-start)?\(([^)]*)\)", rhs)
+                    ab = 0
+                    if arg_names:
+                        for opn in re.findall(r"%([\w\.\-]+)", arg_names[0]):
+                            s = mod.operand_shape(name, opn)
+                            if s:
+                                n = 1
+                                for d in s[1]:
+                                    n *= d
+                                ab += n * _DTYPE_BYTES[s[0]]
+                    sz = max(result_b, ab)
+                    stats.coll_bytes_by_kind[kind] = \
+                        stats.coll_bytes_by_kind.get(kind, 0) + mult * sz
+                    stats.coll_count_by_kind[kind] = \
+                        stats.coll_count_by_kind.get(kind, 0) + mult
+                    # TPU projection: f32 collective fed by a convert fusion
+                    # => would be bf16 on the TPU target
+                    sz_tpu = sz
+                    if "f32[" in rhs and arg_names and \
+                            "convert" in arg_names[0]:
+                        sz_tpu = sz // 2
+                    stats.coll_bytes_tpu_by_kind[kind] = \
+                        stats.coll_bytes_tpu_by_kind.get(kind, 0) + mult * sz_tpu
+                    break
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per device (parsed, trip-count aware)
+    hlo_bytes: float  # per device
+    coll_bytes: float  # per device
+    model_flops: float  # global useful FLOPs (6ND-style)
+    coll_detail: Dict[str, int]
+    xla_flops: float = 0.0
+    per_device_mem: Optional[float] = None
+    coll_bytes_tpu: float = 0.0  # TPU dtype projection (see HloStats)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def t_collective_tpu(self) -> float:
+        return (self.coll_bytes_tpu or self.coll_bytes) / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips) — 1.0 means no waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "model_flops": self.model_flops, "xla_flops": self.xla_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_collective_tpu_s": self.t_collective_tpu,
+            "coll_bytes_tpu_per_dev": self.coll_bytes_tpu,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "coll_detail": self.coll_detail,
+            "per_device_mem_bytes": self.per_device_mem,
+        }
+
+
+def analyze(compiled, lowered, *, arch: str, shape: str, mesh_tag: str,
+            chips: int, model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    stats = analyze_hlo(hlo)
+    # bytes: prefer XLA's estimate when it is larger (covers elementwise
+    # traffic); fall back to dot bytes x1 (parsed) otherwise.
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    byts = max(xla_bytes, stats.dot_bytes)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(arch=arch, shape=shape, mesh=mesh_tag, chips=chips,
+                    hlo_flops=stats.flops, hlo_bytes=byts,
+                    coll_bytes=float(stats.coll_bytes),
+                    model_flops=model_flops,
+                    coll_detail=dict(stats.coll_bytes_by_kind),
+                    xla_flops=float(ca.get("flops", 0.0)),
+                    per_device_mem=mem,
+                    coll_bytes_tpu=float(stats.coll_bytes_tpu))

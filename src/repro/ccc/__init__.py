@@ -1,0 +1,4 @@
+from repro.ccc.convex import AllocationResult, latency_fixed_alloc, solve_p21  # noqa: F401
+from repro.ccc.ddqn import DDQNAgent, DDQNConfig  # noqa: F401
+from repro.ccc.env import CuttingEnvConfig, CuttingPointEnv, cnn_env_config  # noqa: F401
+from repro.ccc.strategy import run_algorithm1  # noqa: F401

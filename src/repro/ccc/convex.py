@@ -1,0 +1,171 @@
+"""P2.1 — convex resource allocation (eq. 32), solved without CVX.
+
+Structure (see paper §IV-B-1): given the cut v, per round minimize
+χ + ψ subject to per-client latency constraints (31b)/(31c) and pooled
+budgets Σ B_n ≤ B (30f), Σ f_sn ≤ f_max^s (30d).
+
+Monotonicity gives p_n* = p_max and f_n* = f_max (uplink rate and client
+compute latency are monotone), and ψ has no pooled variables, so
+ψ* = max_n ψ_n(f_max) directly. The remaining problem —
+
+    min χ  s.t.  X/r_n(B_n) + l_F^n + s_n / f_sn ≤ χ,  ΣB ≤ B, Σf ≤ F
+
+— is solved by bisection on χ with a two-resource feasibility oracle:
+for fixed χ each client's feasible (B_n, f_sn) region has a convex Pareto
+frontier parametrized by the uplink-latency share θ_n; a Lagrangian sweep
+over λ (price of server compute in bandwidth units) picks the per-client
+point minimizing B_n + λ f_sn, and feasibility holds iff some λ satisfies
+both budgets. Everything is vectorized numpy (the oracle runs inside the
+DDQN reward loop ~10^4 times).
+
+Key physical subtlety: r_n(B) = B log2(1 + p g_n / (B N0)) saturates at
+p g_n / (N0 ln 2) as B→∞, so uplink latency has a positive infimum
+u_min_n = X N0 ln2 / (p g_n); χ below max_n(l_F^n + u_min_n + s_n/F) is
+infeasible no matter the allocation.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.sysmodel.comm import CommParams, downlink_rate, uplink_rate
+from repro.sysmodel.comp import CompParams, client_bp_latency, client_fp_latency
+
+LN2 = math.log(2.0)
+
+
+def _invert_rate(target_rate: np.ndarray, power, gains, noise_psd,
+                 b_hi: float, iters: int = 40) -> np.ndarray:
+    """Smallest B with r(B) >= target (vectorized bisection); inf where
+    even b_hi cannot reach it (rate saturation)."""
+    target = np.asarray(target_rate, np.float64)
+    lo = np.full_like(target, 1e-3)
+    hi = np.full_like(target, b_hi)
+    r_hi = uplink_rate(hi, power, gains, _P)  # set by caller via module global
+    infeasible = target > r_hi
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        r = uplink_rate(mid, power, gains, _P)
+        lo = np.where(r < target, mid, lo)
+        hi = np.where(r < target, hi, mid)
+    out = hi
+    return np.where(infeasible, np.inf, out)
+
+
+_P: CommParams = CommParams()  # module-level for the vectorized helpers
+
+
+@dataclass
+class AllocationResult:
+    chi: float
+    psi: float
+    total: float
+    bandwidth: np.ndarray  # (N,)
+    f_server: np.ndarray  # (N,)
+    f_client: np.ndarray  # (N,)
+    p_tx: np.ndarray  # (N,)
+    feasible: bool
+
+
+def solve_p21(gains: np.ndarray, smashed_bits: float, n_samples: float,
+              comm: CommParams, comp: CompParams,
+              theta_grid: int = 24, lam_grid: int = 24,
+              chi_iters: int = 40) -> AllocationResult:
+    """Solve P2.1 for one round. gains: (N,) linear channel gains."""
+    global _P
+    _P = comm
+    N = len(gains)
+    g = np.asarray(gains, np.float64)
+    p = comm.client_power
+    X = float(smashed_bits)
+
+    # monotone-optimal point variables
+    f_client = np.full(N, comp.client_cpu_max)
+    p_tx = np.full(N, p)
+
+    # ψ: no pooled resources (downlink is broadcast; client BP at f_max)
+    r_dn = downlink_rate(g, comm)
+    psi = float(np.max(X / np.maximum(r_dn, 1e-9)
+                       + client_bp_latency(n_samples, comp, f_client)))
+
+    # fixed per-client terms of χ
+    l_F = client_fp_latency(n_samples, comp, f_client)  # (N,)
+    s_work = n_samples * (comp.server_fwd_flops + comp.server_bwd_flops) \
+        / comp.flops_per_cycle  # server cycles needed per client
+    u_min = X * comm.noise_psd * LN2 / (p * g)  # uplink latency infimum
+
+    B_tot = comm.total_bandwidth
+    F_tot = comp.server_cpu_max
+    lam0 = B_tot / F_tot  # natural price scale
+    lams = lam0 * np.logspace(-4, 4, lam_grid)
+
+    def oracle(chi: float):
+        """Feasibility + allocation for a candidate χ."""
+        c = chi - l_F  # latency budget for uplink + server per client
+        # server compute needs f = s/(c - θ); uplink needs r(B) = X/θ
+        room = c - u_min
+        if np.any(room <= 1e-9):
+            return None
+        frac = (np.arange(1, theta_grid + 1) / (theta_grid + 1.0))
+        theta = u_min[:, None] + room[:, None] * frac[None, :]  # (N,K)
+        f_need = s_work / np.maximum(c[:, None] - theta, 1e-12)  # (N,K)
+        B_need = _invert_rate(X / theta, p, g[:, None], comm.noise_psd,
+                              b_hi=B_tot * 4.0)  # (N,K)
+        best = None
+        for lam in lams:
+            costs = B_need + lam * f_need
+            k = np.argmin(costs, axis=1)
+            Bn = B_need[np.arange(N), k]
+            fn = f_need[np.arange(N), k]
+            if Bn.sum() <= B_tot and fn.sum() <= F_tot:
+                best = (Bn, fn)
+                break
+        return best
+
+    # bisection bounds
+    lo = float(np.max(l_F + u_min) + s_work / F_tot)
+    hi = max(lo * 2, 1.0)
+    for _ in range(60):  # grow hi until feasible
+        if oracle(hi) is not None:
+            break
+        hi *= 2.0
+    else:
+        return AllocationResult(np.inf, psi, np.inf, np.full(N, np.nan),
+                                np.full(N, np.nan), f_client, p_tx, False)
+
+    alloc = oracle(hi)
+    for _ in range(chi_iters):
+        mid = 0.5 * (lo + hi)
+        a = oracle(mid)
+        if a is None:
+            lo = mid
+        else:
+            hi, alloc = mid, a
+    Bn, fn = alloc
+    return AllocationResult(chi=hi, psi=psi, total=hi + psi, bandwidth=Bn,
+                            f_server=fn, f_client=f_client, p_tx=p_tx,
+                            feasible=True)
+
+
+def latency_fixed_alloc(gains: np.ndarray, smashed_bits: float,
+                        n_samples: float, comm: CommParams,
+                        comp: CompParams) -> Dict[str, float]:
+    """Benchmark baseline (Fig. 6 'fixed resources'): equal bandwidth and
+    equal server-CPU split, max power/clock."""
+    N = len(gains)
+    bw = np.full(N, comm.total_bandwidth / N)
+    f_s = np.full(N, comp.server_cpu_max / N)
+    f_c = np.full(N, comp.client_cpu_max)
+    p = np.full(N, comm.client_power)
+    r_up = uplink_rate(bw, p, gains, comm)
+    chi = float(np.max(smashed_bits / np.maximum(r_up, 1e-9)
+                       + client_fp_latency(n_samples, comp, f_c)
+                       + n_samples * (comp.server_fwd_flops + comp.server_bwd_flops)
+                       / (f_s * comp.flops_per_cycle)))
+    r_dn = downlink_rate(gains, comm)
+    psi = float(np.max(smashed_bits / np.maximum(r_dn, 1e-9)
+                       + client_bp_latency(n_samples, comp, f_c)))
+    return {"chi": chi, "psi": psi, "total": chi + psi}

@@ -1,0 +1,132 @@
+"""Double-DQN (§IV-B-2, eqs. 38-40) in pure JAX.
+
+Q-network: MLP state -> |A| action values. Double-DQN target (eq. 40):
+   y = r + γ Q_target(s', argmax_a Q_online(s', a))
+Replay buffer is host-side numpy; the update step is jit-compiled.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import adamw, apply_updates
+
+
+def init_qnet(key, state_dim: int, n_actions: int, hidden: int = 64):
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def lin(k, i, o):
+        return {"w": jax.random.normal(k, (i, o), jnp.float32) * np.sqrt(2.0 / i),
+                "b": jnp.zeros((o,), jnp.float32)}
+
+    return {"l1": lin(k1, state_dim, hidden), "l2": lin(k2, hidden, hidden),
+            "l3": lin(k3, hidden, n_actions)}
+
+
+def qnet_apply(params, s):
+    h = jax.nn.relu(s @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.relu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return h @ params["l3"]["w"] + params["l3"]["b"]
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int):
+        self.capacity = capacity
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity,), np.int32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+        self.n = 0
+        self.ptr = 0
+
+    def add(self, s, a, r, s2, done):
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i], self.s2[i], self.done[i] = s, a, r, s2, done
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.n = min(self.n + 1, self.capacity)
+
+    def sample(self, batch: int, rng: np.random.RandomState):
+        idx = rng.randint(0, self.n, size=batch)
+        return (self.s[idx], self.a[idx], self.r[idx], self.s2[idx],
+                self.done[idx])
+
+
+@dataclass
+class DDQNConfig:
+    state_dim: int
+    n_actions: int
+    hidden: int = 64
+    lr: float = 1e-3
+    gamma: float = 0.9
+    batch: int = 64
+    buffer: int = 20000
+    target_update: int = 100  # hard update period (gradient steps)
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 2000
+    seed: int = 0
+
+
+class DDQNAgent:
+    def __init__(self, cfg: DDQNConfig):
+        self.cfg = cfg
+        key = jax.random.key(cfg.seed)
+        self.params = init_qnet(key, cfg.state_dim, cfg.n_actions, cfg.hidden)
+        self.target = jax.tree.map(jnp.copy, self.params)
+        self.opt = adamw(cfg.lr)
+        self.opt_state = self.opt.init(self.params)
+        self.buffer = ReplayBuffer(cfg.buffer, cfg.state_dim)
+        self.rng = np.random.RandomState(cfg.seed)
+        self.steps = 0
+        self._update = jax.jit(self._update_fn)
+        self._q = jax.jit(qnet_apply)
+
+    # --------------------------------------------------------------
+    def epsilon(self) -> float:
+        c = self.cfg
+        t = min(1.0, self.steps / c.eps_decay_steps)
+        return c.eps_start + (c.eps_end - c.eps_start) * t
+
+    def act(self, state: np.ndarray, greedy: bool = False) -> int:
+        if not greedy and self.rng.rand() < self.epsilon():
+            return int(self.rng.randint(self.cfg.n_actions))
+        q = self._q(self.params, jnp.asarray(state[None]))
+        return int(jnp.argmax(q[0]))
+
+    # --------------------------------------------------------------
+    def _update_fn(self, params, target, opt_state, s, a, r, s2, done):
+        gamma = self.cfg.gamma
+
+        def loss_fn(p):
+            q = qnet_apply(p, s)
+            q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+            # double-DQN: online net picks a*, target net evaluates (eq. 40)
+            a_star = jnp.argmax(qnet_apply(p, s2), axis=1)
+            q_t = qnet_apply(target, s2)
+            q_next = jnp.take_along_axis(q_t, a_star[:, None], axis=1)[:, 0]
+            y = r + gamma * (1.0 - done) * jax.lax.stop_gradient(q_next)
+            return jnp.mean(jnp.square(q_sa - y))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = self.opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    def observe(self, s, a, r, s2, done) -> float:
+        self.buffer.add(s, a, r, s2, float(done))
+        self.steps += 1
+        loss = 0.0
+        if self.buffer.n >= self.cfg.batch:
+            batch = self.buffer.sample(self.cfg.batch, self.rng)
+            self.params, self.opt_state, l = self._update(
+                self.params, self.target, self.opt_state,
+                *map(jnp.asarray, batch))
+            loss = float(l)
+        if self.steps % self.cfg.target_update == 0:
+            self.target = jax.tree.map(jnp.copy, self.params)
+        return loss

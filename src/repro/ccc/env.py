@@ -1,0 +1,136 @@
+"""MDP for the cutting-point subproblem P2.2 (§IV-B-2, eqs. 34-35).
+
+State  (eq. 34): per-client channel gains at round t (log-normalized) plus
+the normalized cumulative cost Σ_{i<t}(Γ + χ_i + ψ_i).
+Action (eq. 34): cutting point v ∈ {1..V-1}.
+Reward (eq. 35): -(w·Γ(φ(v)) + χ_t + ψ_t) when the privacy constraint
+log(1+φ(v)/q) ≥ ε holds, else the penalty -C. χ/ψ come from solving P2.1.
+
+Γ(φ) = γ0 · φ/q (linear, monotone — satisfies Assumption 4; the paper
+leaves Γ unspecified, see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.ccc.convex import AllocationResult, solve_p21
+from repro.sysmodel.comm import CommParams, path_loss_gain
+from repro.sysmodel.comp import CompParams, scale_by_cut
+from repro.sysmodel.privacy import privacy_ok
+
+
+@dataclass
+class CuttingEnvConfig:
+    phis: Tuple[int, ...]  # φ(v) for v = 1..V-1 (parameter counts)
+    smashed_elems: Tuple[int, ...]  # per-sample smashed size for v = 1..V-1
+    flop_fracs: Tuple[float, ...]  # client FLOP fraction for v = 1..V-1
+    total_params: int  # q
+    n_clients: int = 10
+    batch: int = 32
+    horizon: int = 20  # T rounds per episode
+    w: float = 1.0  # convergence-vs-latency weight (eq. 30)
+    gamma0: float = 10.0  # Γ(φ) = gamma0 * φ / q
+    epsilon: float = 0.001  # privacy threshold ε
+    penalty: float = 50.0  # C (reward = -C when infeasible)
+    bytes_per_elem: int = 4
+    dist_km_range: Tuple[float, float] = (0.05, 0.5)
+    seed: int = 0
+
+
+class CuttingPointEnv:
+    """Gym-like environment; channel redrawn per round (block fading)."""
+
+    def __init__(self, cfg: CuttingEnvConfig,
+                 comm: Optional[CommParams] = None,
+                 comp: Optional[CompParams] = None):
+        self.cfg = cfg
+        self.comm = comm or CommParams()
+        self.base_comp = comp or CompParams()
+        self.rng = np.random.RandomState(cfg.seed)
+        self.n_actions = len(cfg.phis)
+        self.state_dim = cfg.n_clients + 1
+        self._dists = None
+        self.reset()
+
+    # --------------------------------------------------------------
+    def _draw_gains(self) -> np.ndarray:
+        if self._dists is None:
+            lo, hi = self.cfg.dist_km_range
+            self._dists = self.rng.uniform(lo, hi, size=self.cfg.n_clients)
+        return path_loss_gain(self._dists, self.rng)
+
+    def _state(self) -> np.ndarray:
+        # log-gain normalized to ~[-1,1]; cumulative cost normalized by horizon
+        g = np.log10(self.gains) / 10.0 + 1.0
+        cum = self.cum_cost / (self.cfg.horizon * 10.0)
+        return np.concatenate([g, [cum]]).astype(np.float32)
+
+    def reset(self) -> np.ndarray:
+        self.t = 0
+        self.cum_cost = 0.0
+        self.gains = self._draw_gains()
+        return self._state()
+
+    def gamma_fn(self, v: int) -> float:
+        """Γ(φ_t(v)) — Assumption 4 instantiation."""
+        return self.cfg.gamma0 * self.cfg.phis[v - 1] / self.cfg.total_params
+
+    def cost_terms(self, v: int) -> Tuple[float, float, float, AllocationResult]:
+        cfg = self.cfg
+        comp = scale_by_cut(self.base_comp, cfg.flop_fracs[v - 1])
+        X_bits = cfg.smashed_elems[v - 1] * cfg.batch * cfg.bytes_per_elem * 8
+        alloc = solve_p21(self.gains, X_bits, cfg.batch, self.comm, comp)
+        return self.gamma_fn(v), alloc.chi, alloc.psi, alloc
+
+    def step(self, action: int):
+        """action ∈ [0, V-2] maps to v = action+1."""
+        cfg = self.cfg
+        v = action + 1
+        gamma, chi, psi, alloc = self.cost_terms(v)
+        ok = privacy_ok(cfg.phis[v - 1], cfg.total_params, cfg.epsilon)
+        if ok and alloc.feasible:
+            cost = cfg.w * gamma + chi + psi
+            reward = -cost
+        else:
+            cost = cfg.penalty
+            reward = -cfg.penalty
+        self.cum_cost += cost
+        self.t += 1
+        done = self.t >= cfg.horizon
+        self.gains = self._draw_gains()
+        return self._state(), float(reward), done, {
+            "v": v, "chi": chi, "psi": psi, "gamma": gamma,
+            "privacy_ok": ok, "latency": chi + psi}
+
+
+def cnn_env_config(light: bool = True, flop_aware: bool = False,
+                   **kw) -> CuttingEnvConfig:
+    """Environment wired to the paper's CNN φ(v)/X(v) splits.
+
+    flop_aware=False (default, paper-faithful): the per-sample workloads are
+    the §V-A constants (5.6 / 86.01 MFLOPs) independent of v — the paper
+    treats computation split as fixed and lets v drive communication,
+    convergence (Γ) and privacy. flop_aware=True recomputes the client
+    fraction from the CNN's actual per-block FLOPs (a documented extension).
+    """
+    from repro.configs.paper_cnn import CONFIG, LIGHT_CONFIG
+    from repro.models import cnn
+
+    ccfg = LIGHT_CONFIG if light else CONFIG
+    V = ccfg.num_layers
+    params = cnn.init_cnn(__import__("jax").random.key(0), ccfg)
+    phis = tuple(cnn.phi(ccfg, v, params) for v in range(1, V))
+    smashed = tuple(cnn.smashed_numel(ccfg, v) for v in range(1, V))
+    total = cnn.total_params(ccfg, params)
+    base = CompParams()
+    paper_frac = base.client_fwd_flops / (base.client_fwd_flops
+                                          + base.server_fwd_flops)
+    if flop_aware:
+        fracs = tuple(cnn.client_flop_fraction(ccfg, v) for v in range(1, V))
+    else:
+        fracs = tuple(paper_frac for _ in range(1, V))
+    return CuttingEnvConfig(phis=phis, smashed_elems=smashed, flop_fracs=fracs,
+                            total_params=total, **kw)

@@ -1,0 +1,100 @@
+"""Algorithm 1 — the joint CCC strategy: DDQN over cutting points with
+convex resource allocation inside the reward (paper §IV-B)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.ccc.ddqn import DDQNAgent, DDQNConfig
+from repro.ccc.env import CuttingPointEnv
+
+
+@dataclass
+class CCCResult:
+    episode_rewards: List[float]
+    episode_latencies: List[float]
+    greedy_policy: List[int]  # chosen v per round of a greedy rollout
+    agent: DDQNAgent
+
+
+def run_algorithm1(env: CuttingPointEnv, episodes: int = 200,
+                   agent: Optional[DDQNAgent] = None,
+                   log_every: int = 0) -> CCCResult:
+    """Alg. 1: for each episode, roll the MDP; each reward internally solves
+    P2.1; transitions go to the replay buffer; DDQN updates per step."""
+    if agent is None:
+        agent = DDQNAgent(DDQNConfig(state_dim=env.state_dim,
+                                     n_actions=env.n_actions,
+                                     seed=env.cfg.seed))
+    ep_rewards, ep_lat = [], []
+    for ep in range(episodes):
+        s = env.reset()
+        total_r, total_l = 0.0, 0.0
+        done = False
+        while not done:
+            a = agent.act(s)
+            s2, r, done, info = env.step(a)
+            agent.observe(s, a, r, s2, done)
+            s = s2
+            total_r += r
+            total_l += info["latency"] if np.isfinite(info["latency"]) else 0.0
+        ep_rewards.append(total_r)
+        ep_lat.append(total_l)
+        if log_every and (ep + 1) % log_every == 0:
+            print(f"  episode {ep+1}/{episodes} reward {total_r:.2f} "
+                  f"eps {agent.epsilon():.2f}")
+    # greedy rollout to expose the learned cutting-point policy
+    s = env.reset()
+    policy = []
+    done = False
+    while not done:
+        a = agent.act(s, greedy=True)
+        policy.append(a + 1)
+        s, _, done, _ = env.step(a)
+    return CCCResult(ep_rewards, ep_lat, policy, agent)
+
+
+def fixed_cut_policy_cost(env: CuttingPointEnv, v: int, rounds: int = 20) -> Dict:
+    """Benchmark: fixed cutting layer with optimal resource allocation."""
+    env.reset()
+    lat, cost = 0.0, 0.0
+    for _ in range(rounds):
+        gamma, chi, psi, alloc = env.cost_terms(v)
+        lat += chi + psi
+        cost += env.cfg.w * gamma + chi + psi
+        env.gains = env._draw_gains()
+    return {"latency": lat, "cost": cost}
+
+
+def fixed_alloc_policy_cost(env: CuttingPointEnv, v: int, rounds: int = 20) -> Dict:
+    """Benchmark: fixed cut AND fixed (equal-split) resources."""
+    from repro.ccc.convex import latency_fixed_alloc
+    from repro.sysmodel.comp import scale_by_cut
+
+    env.reset()
+    cfg = env.cfg
+    lat, cost = 0.0, 0.0
+    for _ in range(rounds):
+        comp = scale_by_cut(env.base_comp, cfg.flop_fracs[v - 1])
+        X_bits = cfg.smashed_elems[v - 1] * cfg.batch * cfg.bytes_per_elem * 8
+        r = latency_fixed_alloc(env.gains, X_bits, cfg.batch, env.comm, comp)
+        lat += r["total"]
+        cost += cfg.w * env.gamma_fn(v) + r["total"]
+        env.gains = env._draw_gains()
+    return {"latency": lat, "cost": cost}
+
+
+def random_cut_policy_cost(env: CuttingPointEnv, rounds: int = 20,
+                           seed: int = 0) -> Dict:
+    rng = np.random.RandomState(seed)
+    env.reset()
+    lat, cost = 0.0, 0.0
+    for _ in range(rounds):
+        v = int(rng.randint(1, env.n_actions + 1))
+        gamma, chi, psi, _ = env.cost_terms(v)
+        lat += chi + psi
+        cost += env.cfg.w * gamma + chi + psi
+        env.gains = env._draw_gains()
+    return {"latency": lat, "cost": cost}

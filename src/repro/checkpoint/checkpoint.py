@@ -1,0 +1,70 @@
+"""Checkpointing: msgpack-framed pytree snapshots (no orbax in container).
+
+Format: a single file with a msgpack header {treedef, shapes, dtypes, meta}
+followed by raw little-endian array payloads. Restores onto host then lets
+the caller device_put with the right shardings.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
+    leaves, treedef = _flatten(tree)
+    arrs = [np.asarray(l) for l in leaves]
+    header = {
+        "treedef": str(treedef),
+        "shapes": [list(a.shape) for a in arrs],
+        "dtypes": [str(a.dtype) for a in arrs],  # e.g. "float32", "bfloat16"
+        "meta": meta or {},
+        "version": 1,
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(header, use_bin_type=True))
+        for a in arrs:
+            f.write(a.tobytes(order="C"))
+    os.replace(tmp, path)
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bfloat16 et al.
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    leaves, treedef = _flatten(like)
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f, raw=False)
+        header = unpacker.unpack()
+        offset = unpacker.tell()
+        f.seek(offset)
+        out = []
+        for i, l in enumerate(leaves):
+            shape = tuple(header["shapes"][i])
+            dtype = _resolve_dtype(header["dtypes"][i])
+            want = np.asarray(l)
+            if shape != want.shape:
+                raise ValueError(f"leaf {i}: checkpoint shape {shape} != model {want.shape}")
+            n = int(np.prod(shape)) * dtype.itemsize
+            buf = f.read(n)
+            out.append(np.frombuffer(buf, dtype=dtype).reshape(shape))
+    return jax.tree.unflatten(treedef, out), header["meta"]

@@ -1,0 +1,2 @@
+from repro.core.gradagg import client_param_average, gradagg, uniform_rho  # noqa: F401
+from repro.core.simulator import FedSimulator, SimConfig  # noqa: F401

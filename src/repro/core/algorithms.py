@@ -1,0 +1,241 @@
+"""Datacenter-scale SFL train/serve steps for the LLM zoo.
+
+Parameter layout under split training:
+
+* ``params["client"]`` — embedding + layers[:cut], with a **leading client
+  axis N** (each federated client owns its own copy; sharded over the
+  ("pod","data") mesh axes so the copy lives where its data lives).
+* ``params["server"]`` — layers[cut:] + final norm + head, shared (the
+  τ=1 equivalent of the paper's per-client server replicas + eq. 7
+  aggregation; see DESIGN.md §2).
+
+Algorithms:
+
+* ``sfl_ga`` — gradagg() at the boundary (one X(v)-byte all-reduce);
+  client params get NO cross-client collective (the paper's saving).
+* ``sfl``    — per-client cotangents; client params ρ-averaged every round
+  (an extra φ(v)-byte all-reduce — the traffic SFL-GA removes).
+* ``psl``    — per-client cotangents, no client averaging (personalized).
+
+Batch layout: tokens/labels (N, B/N, S) — the leading axis is the client
+axis, sharded over ("pod","data").
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.gradagg import client_param_average, gradagg, uniform_rho
+from repro.models import lm as lm_mod
+from repro.models import transformer as tf
+from repro.optim.optimizers import Optimizer, apply_updates
+
+ALGOS = ("sfl_ga", "sfl", "psl")
+
+
+def split_lm_params(params: Dict, n_clients: int) -> Dict:
+    """Re-layout init_lm() output into {client: stacked, server: flat}.
+
+    All clients start from the same w^c_0 (paper §II-B), so stacking is a
+    broadcast of the shared init.
+    """
+    client = {"embed": params["embed"], "groups": params["client"]}
+    client = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), client)
+    server = {"groups": params["server"], "final_norm": params["final_norm"]}
+    if "head" in params:
+        server["head"] = params["head"]
+    return {"client": client, "server": server}
+
+
+def merge_lm_params(split: Dict, rho: Optional[jnp.ndarray] = None) -> Dict:
+    """Global eval/serve model: ρ-weighted mean of client copies + server."""
+    n = jax.tree.leaves(split["client"])[0].shape[0]
+    w = (uniform_rho(n) if rho is None else rho)
+
+    def mean(p):
+        ww = w.reshape((n,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(p.astype(jnp.float32) * ww, axis=0).astype(p.dtype)
+
+    client = jax.tree.map(mean, split["client"])
+    out = {"embed": client["embed"], "client": client["groups"],
+           "server": split["server"]["groups"],
+           "final_norm": split["server"]["final_norm"]}
+    if "head" in split["server"]:
+        out["head"] = split["server"]["head"]
+    return out
+
+
+def _client_forward_one(cparams, plan, tokens, inputs_embeds, impl, remat, dtype):
+    full = {"embed": cparams["embed"], "client": cparams["groups"]}
+    return lm_mod.client_forward(full, plan, tokens, inputs_embeds,
+                                 impl=impl, remat=remat, dtype=dtype)
+
+
+def _server_forward(sparams, plan, smashed, impl, remat):
+    full = {"client": [], "server": sparams["groups"],
+            "final_norm": sparams["final_norm"]}
+    if "head" in sparams:
+        full["head"] = sparams["head"]
+    return lm_mod.server_forward(full, plan, smashed, impl=impl, remat=remat)
+
+
+def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
+                 rho: jnp.ndarray) -> Callable:
+    cfg = plan.cfg
+    dtype = jnp.dtype(tcfg.compute_dtype)
+    impl = "jnp"
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]  # (N, b, S) int32 — or embeds (N, b, S, d)
+        labels = batch["labels"]  # (N, b, S)
+        n = tokens.shape[0]
+        if tokens.ndim == 4:  # stubbed-modality inputs: precomputed embeds
+            smashed, aux_c = jax.vmap(
+                lambda cp, e: _client_forward_one(cp, plan, None, e, impl,
+                                                  tcfg.remat, dtype)
+            )(params["client"], tokens.astype(dtype))
+        else:
+            smashed, aux_c = jax.vmap(
+                lambda cp, t: _client_forward_one(cp, plan, t, None, impl,
+                                                  tcfg.remat, dtype)
+            )(params["client"], tokens)
+        if tcfg.algo == "sfl_ga":
+            smashed = gradagg(smashed, rho)  # eq. 5: the paper's op
+        nb, b, S, d = smashed.shape
+        logits, aux_s = _server_forward(params["server"], plan,
+                                        smashed.reshape(nb * b, S, d),
+                                        impl, tcfg.remat)
+        ce = lm_mod.cross_entropy(logits, labels.reshape(nb * b, S))
+        loss = ce + 0.01 * (jnp.sum(aux_c) + aux_s)
+        return loss, {"ce": ce}
+
+    return loss_fn
+
+
+def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
+                    n_clients: int, rho: Optional[jnp.ndarray] = None) -> Callable:
+    assert tcfg.algo in ALGOS, tcfg.algo
+    rho = uniform_rho(n_clients) if rho is None else rho
+    loss_fn = make_loss_fn(plan, tcfg, rho)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if tcfg.algo == "sfl":
+            # traditional SFL: aggregate client-side models every round —
+            # the φ(v)-byte collective SFL-GA eliminates.
+            params = dict(params,
+                          client=client_param_average(params["client"], rho))
+        return params, opt_state, dict(metrics, loss=loss)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (used by the decode/prefill dry-run shapes)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(plan: lm_mod.ModelPlan, dtype=jnp.bfloat16) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = lm_mod.prefill(
+            params, plan, tokens=batch.get("tokens"),
+            inputs_embeds=batch.get("inputs_embeds"),
+            max_len=batch["tokens"].shape[1] if "tokens" in batch
+            else batch["inputs_embeds"].shape[1],
+            dtype=dtype)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(plan: lm_mod.ModelPlan, dtype=jnp.bfloat16) -> Callable:
+    def decode_step(params, token, caches):
+        return lm_mod.decode_step(params, plan, token, caches, dtype=dtype)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (bytes per round) — paper Fig. 4 at LLM scale
+# ---------------------------------------------------------------------------
+
+def comm_bytes_per_round(cfg: ModelConfig, plan: lm_mod.ModelPlan, algo: str,
+                         n_clients: int, per_client_batch: int, seq: int,
+                         tau: int = 1, bytes_per_elem: int = 2) -> Dict[str, int]:
+    """Edge-protocol traffic accounting (who sends what over the WAN).
+
+    X(v) = smashed-data bytes per client per epoch; φ(v) = client-model bytes.
+    """
+    from repro.core.split import client_param_numel
+
+    X = per_client_batch * seq * cfg.d_model * bytes_per_elem
+    labels = per_client_batch * seq * 4
+    phi = client_param_numel(plan) * bytes_per_elem
+    N = n_clients
+    if algo == "sfl_ga":
+        up = N * tau * (X + labels)
+        down = tau * X  # ONE broadcast of the aggregated gradient
+    elif algo == "sfl":
+        up = N * tau * (X + labels) + N * phi
+        down = N * tau * X + N * phi
+    elif algo == "psl":
+        up = N * tau * (X + labels)
+        down = N * tau * X
+    elif algo == "fl":
+        from repro.core.split import total_param_numel
+
+        q = total_param_numel(plan) * bytes_per_elem
+        up, down = N * q, N * q
+    else:
+        raise ValueError(algo)
+    return {"up_bytes": int(up), "down_bytes": int(down),
+            "total_bytes": int(up + down)}
+
+
+# ---------------------------------------------------------------------------
+# Whisper (enc-dec) split training — smashed data = (residual, enc states)
+# ---------------------------------------------------------------------------
+
+def make_whisper_train_step(cfg: ModelConfig, tcfg: TrainConfig, opt: Optimizer,
+                            n_clients: int, rho: Optional[jnp.ndarray] = None):
+    from repro.models import encdec
+
+    assert tcfg.algo in ALGOS
+    rho = uniform_rho(n_clients) if rho is None else rho
+    dtype = jnp.dtype(tcfg.compute_dtype)
+
+    def loss_fn(params, batch):
+        fe = batch["frame_embeds"].astype(dtype)  # (N, b, F, d)
+        toks, labels = batch["tokens"], batch["labels"]  # (N, b, S)
+        x, enc = jax.vmap(
+            lambda cp, f, t: encdec.whisper_client_forward(cp, cfg, f, t, dtype)
+        )(params["client"], fe, toks)
+        if tcfg.algo == "sfl_ga":
+            # both boundary tensors are aggregated + broadcast (eq. 5)
+            x = gradagg(x, rho)
+            enc = gradagg(enc, rho)
+        n, b = x.shape[:2]
+        logits = encdec.whisper_server_forward(
+            params["server"], cfg, x.reshape((n * b,) + x.shape[2:]),
+            enc.reshape((n * b,) + enc.shape[2:]))
+        ce = lm_mod.cross_entropy(logits, labels.reshape(n * b, -1))
+        return ce, {"ce": ce}
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if tcfg.algo == "sfl":
+            params = dict(params,
+                          client=client_param_average(params["client"], rho))
+        return params, opt_state, dict(metrics, loss=loss)
+
+    return train_step

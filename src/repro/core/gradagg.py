@@ -1,0 +1,64 @@
+"""The paper's core op: aggregated smashed-data gradient broadcast (eq. 5).
+
+``gradagg(x, rho)`` is the SFL-GA boundary operator:
+
+* forward: identity on the smashed data (N, B, S, d) — the protocol changes
+  nothing about the forward values;
+* backward: the cotangent s^n of each client is replaced by the aggregate
+  s = Σ_n ρ^n s^n broadcast to every client (eq. 5) — N appears because the
+  client axis is the leading dim.
+
+On the TPU mesh the client axis is sharded over ("pod","data"), so the
+backward lowers to exactly one all-reduce of X(v) bytes — versus the
+O(φ(v)) client-side parameter all-reduce that traditional SFL needs. This
+single custom_vjp is how the paper's communication saving becomes a
+measurable HLO-collective difference (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def gradagg(x: jnp.ndarray, rho: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, ...) per-client smashed data; rho: (N,) aggregation weights."""
+    return x
+
+
+def _fwd(x, rho):
+    return x, (rho, x.shape[0])
+
+
+def _bwd(res, g):
+    rho, n = res
+    w = rho.reshape((n,) + (1,) * (g.ndim - 1)).astype(jnp.float32)
+    agg = jnp.sum(g.astype(jnp.float32) * w, axis=0, keepdims=True)
+    # broadcast the aggregate back to every client (the "gradient broadcast")
+    gb = jnp.broadcast_to(agg, g.shape).astype(g.dtype)
+    return gb, jnp.zeros_like(rho)
+
+
+gradagg.defvjp(_fwd, _bwd)
+
+
+def uniform_rho(n: int) -> jnp.ndarray:
+    return jnp.full((n,), 1.0 / n, jnp.float32)
+
+
+def client_param_average(params, rho: Optional[jnp.ndarray] = None):
+    """Traditional-SFL client-side model aggregation (the traffic SFL-GA
+    eliminates): ρ-weighted mean over the leading client axis, broadcast
+    back. Lowers to an all-reduce of φ(v) bytes over the client axis."""
+
+    def avg(p):
+        n = p.shape[0]
+        w = (uniform_rho(n) if rho is None else rho).reshape(
+            (n,) + (1,) * (p.ndim - 1))
+        m = jnp.sum(p.astype(jnp.float32) * w, axis=0, keepdims=True)
+        return jnp.broadcast_to(m, p.shape).astype(p.dtype)
+
+    return jax.tree.map(avg, params)

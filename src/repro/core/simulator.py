@@ -1,0 +1,197 @@
+"""Faithful CNN-scale federated simulator for the paper's experiments.
+
+Implements the literal SFL-GA protocol of §II-A/B, plus the three benchmark
+schemes (§V): traditional SFL [11], PSL, and FL. Clients are vectorized
+with vmap over the leading axis; per-round batches have shape
+(N, τ, B, ...). Everything inside ``round_fn`` is one jit-compiled step.
+
+Protocol details (see DESIGN.md §2):
+* SFL-GA: server backward produces per-client smashed-data gradients s^n;
+  the ρ-weighted aggregate s = Σ ρ^n s^n (eq. 5) is broadcast; every client
+  back-props the SAME cotangent through its OWN Jacobian (client models may
+  drift — the drift is Γ(φ(v)) of Assumption 4 and is reported as a metric).
+  No client-side aggregation. Server-side models aggregated per round (eq. 7).
+* SFL: per-client cotangents; BOTH sides aggregated per round.
+* PSL: per-client cotangents; only server side aggregated (personalized
+  client models).
+* FL: full model per client, local SGD, full aggregation per round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.models import cnn
+
+SCHEMES = ("sfl_ga", "sfl", "psl", "fl")
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    scheme: str = "sfl_ga"
+    cut: int = 1  # v
+    n_clients: int = 10
+    batch: int = 32
+    tau: int = 1
+    lr: float = 0.05
+    bytes_per_elem: int = 4
+
+
+def _stack(tree, n):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape) + 0.0, tree)
+
+
+class FedSimulator:
+    def __init__(self, cnn_cfg: CNNConfig, sim: SimConfig,
+                 rho: Optional[np.ndarray] = None, seed: int = 0):
+        assert sim.scheme in SCHEMES
+        assert 1 <= sim.cut < cnn_cfg.num_layers or sim.scheme == "fl"
+        self.cfg = cnn_cfg
+        self.sim = sim
+        self.rho = jnp.asarray(
+            rho if rho is not None else np.full(sim.n_clients, 1.0 / sim.n_clients),
+            jnp.float32)
+        params = cnn.init_cnn(jax.random.key(seed), cnn_cfg)
+        v = sim.cut
+        if sim.scheme == "fl":
+            self.state = {"client": _stack(params, sim.n_clients), "server": []}
+        else:
+            self.state = {
+                "client": _stack(params[:v], sim.n_clients),
+                "server": _stack(params[v:], sim.n_clients),  # per-client replicas (eq. 6)
+            }
+        self._round_jit = jax.jit(self._round)
+
+    # ------------------------------------------------------------------
+    def _epoch_split(self, carry, batch):
+        """One local epoch of split training (any of sfl_ga / sfl / psl)."""
+        cfg, sim, v = self.cfg, self.sim, self.sim.cut
+        cp, sp = carry
+        x, y = batch  # (N,B,H,W,C), (N,B)
+
+        def client_fwd(c, xb):
+            return cnn.client_forward(c, xb, cfg, v)
+
+        smashed = jax.vmap(client_fwd)(cp, x)  # (N,B,...)
+
+        def srv_loss(s, sm, yb):
+            return cnn.server_loss(s, sm, yb, cfg, v)
+
+        loss_n, (gs_n, s_n) = jax.vmap(
+            lambda s, sm, yb: jax.value_and_grad(srv_loss, argnums=(0, 1))(s, sm, yb)
+        )(sp, smashed, y)
+
+        if sim.scheme == "sfl_ga":
+            # eq. 5: aggregate smashed-data gradients, broadcast to all
+            w = self.rho.reshape((-1,) + (1,) * (s_n.ndim - 1))
+            s_ct = jnp.broadcast_to(jnp.sum(s_n * w, axis=0, keepdims=True),
+                                    s_n.shape)
+        else:  # sfl / psl: per-client cotangent
+            s_ct = s_n
+
+        def client_grad(c, xb, ct):
+            _, vjp = jax.vjp(lambda cc: client_fwd(cc, xb), c)
+            return vjp(ct)[0]
+
+        gc_n = jax.vmap(client_grad)(cp, x, s_ct)
+        lr = sim.lr
+        cp = jax.tree.map(lambda p, g: p - lr * g, cp, gc_n)
+        sp = jax.tree.map(lambda p, g: p - lr * g, sp, gs_n)
+        return (cp, sp), jnp.sum(loss_n * self.rho)
+
+    def _epoch_fl(self, carry, batch):
+        cfg, sim = self.cfg, self.sim
+        cp, _ = carry
+        x, y = batch
+
+        def full_loss(p, xb, yb):
+            return cnn.server_loss(p, xb, yb, cfg, 0)
+
+        loss_n, g_n = jax.vmap(jax.value_and_grad(full_loss))(cp, x, y)
+        cp = jax.tree.map(lambda p, g: p - sim.lr * g, cp, g_n)
+        return (cp, []), jnp.sum(loss_n * self.rho)
+
+    def _aggregate(self, tree):
+        w = self.rho
+
+        def avg(p):
+            ww = w.reshape((-1,) + (1,) * (p.ndim - 1))
+            m = jnp.sum(p * ww, axis=0, keepdims=True)
+            return jnp.broadcast_to(m, p.shape)
+
+        return jax.tree.map(avg, tree)
+
+    def _round(self, state, x, y):
+        """x: (N, τ, B, H, W, C); y: (N, τ, B)."""
+        epoch = self._epoch_fl if self.sim.scheme == "fl" else self._epoch_split
+        xs = jnp.moveaxis(x, 1, 0)  # (τ, N, B, ...)
+        ys = jnp.moveaxis(y, 1, 0)
+        (cp, sp), losses = jax.lax.scan(
+            lambda c, b: epoch(c, b), (state["client"], state["server"]), (xs, ys))
+
+        if self.sim.scheme in ("sfl_ga", "sfl", "psl"):
+            sp = self._aggregate(sp)  # eq. 7 — server-side aggregation
+        if self.sim.scheme == "sfl":
+            cp = self._aggregate(cp)  # traditional SFL client aggregation
+        if self.sim.scheme == "fl":
+            cp = self._aggregate(cp)
+
+        # client drift: max_n ||w_c^n - mean||^2 — the Γ(φ(v)) proxy
+        def drift(p):
+            m = jnp.mean(p, axis=0, keepdims=True)
+            return jnp.sum(jnp.square(p - m))
+
+        d = sum(jax.tree.leaves(jax.tree.map(drift, cp)))
+        return {"client": cp, "server": sp}, losses.mean(), d
+
+    # ------------------------------------------------------------------
+    def run_round(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
+        self.state, loss, drift = self._round_jit(self.state, x, y)
+        return {"loss": float(loss), "client_drift": float(drift)}
+
+    def global_params(self):
+        """ρ-weighted mean model for evaluation."""
+        mean = jax.tree.map(lambda p: jnp.sum(
+            p * self.rho.reshape((-1,) + (1,) * (p.ndim - 1)), axis=0),
+            self.state)
+        return list(mean["client"]) + list(mean["server"])
+
+    def evaluate(self, x: np.ndarray, y: np.ndarray, batch: int = 512) -> float:
+        params = self.global_params()
+        correct = 0
+        for i in range(0, len(x), batch):
+            logits = cnn.forward_blocks(params, jnp.asarray(x[i:i + batch]),
+                                        self.cfg, 0, self.cfg.num_layers)
+            correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i:i + batch])))
+        return correct / len(x)
+
+    # ------------------------------------------------------------------
+    def comm_bytes_per_round(self) -> Dict[str, int]:
+        """Paper Fig. 4 accounting. Downlink broadcast counted once for
+        SFL-GA (the point of the scheme); unicast per client otherwise."""
+        cfg, sim = self.cfg, self.sim
+        be = sim.bytes_per_elem
+        N, tau, B = sim.n_clients, sim.tau, sim.batch
+        if sim.scheme == "fl":
+            q = cnn.total_params(cfg) * be
+            return {"up_bytes": N * q, "down_bytes": N * q,
+                    "total_bytes": 2 * N * q}
+        X = cnn.smashed_numel(cfg, sim.cut) * B * be
+        labels = B * 4
+        phi_b = cnn.phi(cfg, sim.cut) * be
+        up = N * tau * (X + labels)
+        if sim.scheme == "sfl_ga":
+            down = tau * X
+        elif sim.scheme == "psl":
+            down = N * tau * X
+        else:  # sfl: smashed grads + client model aggregation round-trips
+            up += N * phi_b
+            down = N * tau * X + N * phi_b
+        return {"up_bytes": int(up), "down_bytes": int(down),
+                "total_bytes": int(up + down)}

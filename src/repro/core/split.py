@@ -1,0 +1,108 @@
+"""Split-model bookkeeping: φ(v), X(v), FLOP partitions per cutting point.
+
+These feed the paper's system models: φ(v) → privacy constraint (eq. 17)
+and SFL client-model traffic; X(v) → up/downlink payloads (eqs. 12-13);
+γ^c/γ^s FLOPs → computation latency (eqs. 14-16).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as lm_mod
+from repro.models.attention import attn_flops_per_token
+from repro.models.blocks import mlp_flops_per_token
+from repro.models.moe import moe_flops_per_token
+from repro.models.ssm import ssm_flops_per_token
+from repro.models.transformer import layer_specs
+
+
+def _group_numel(groups_params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(groups_params))
+
+
+def client_param_numel(plan: lm_mod.ModelPlan) -> int:
+    """φ(v) in parameters, from layer shapes (no allocation)."""
+    counts = _layer_param_counts(plan.cfg)
+    emb = plan.cfg.vocab_size * plan.cfg.d_model
+    return emb + sum(counts[:plan.cut])
+
+
+def total_param_numel(plan: lm_mod.ModelPlan) -> int:
+    counts = _layer_param_counts(plan.cfg)
+    cfg = plan.cfg
+    emb = cfg.vocab_size * cfg.d_model
+    head = 0 if cfg.tie_embeddings and plan.cut == 0 else cfg.vocab_size * cfg.d_model
+    return emb + head + sum(counts)
+
+
+def _layer_param_counts(cfg: ModelConfig):
+    """Per-layer parameter counts, by spec."""
+    hd = cfg.resolved_head_dim
+    counts = []
+    for mixer, ffn in layer_specs(cfg):
+        c = 2 * cfg.d_model  # norms
+        if mixer == "attn":
+            c += cfg.d_model * hd * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+        else:
+            s = cfg.ssm
+            d_inner = s.expand * cfg.d_model
+            H = d_inner // s.head_dim
+            gn = s.n_groups * s.state_dim
+            c += cfg.d_model * (2 * d_inner + 2 * gn + H)  # in_proj
+            c += s.conv_dim * (d_inner + 2 * gn)  # conv
+            c += d_inner * cfg.d_model + d_inner  # out_proj + norm
+        if ffn == "dense":
+            nm = 3 if cfg.mlp_act == "swiglu" else 2
+            c += nm * cfg.d_model * cfg.d_ff
+        elif ffn == "moe":
+            m = cfg.moe
+            c += m.num_experts * 3 * cfg.d_model * m.d_ff_expert
+            c += cfg.d_model * m.num_experts  # router
+            if m.num_shared_experts:
+                c += 3 * cfg.d_model * m.d_ff_expert * m.num_shared_experts
+        counts.append(c)
+    return counts
+
+
+def flops_per_token_per_layer(cfg: ModelConfig, context: int):
+    """Forward FLOPs/token per layer (backward ≈ 2x)."""
+    out = []
+    for mixer, ffn in layer_specs(cfg):
+        f = 0
+        if mixer == "attn":
+            f += attn_flops_per_token(cfg, context)
+        else:
+            f += ssm_flops_per_token(cfg)
+        if ffn == "dense":
+            f += mlp_flops_per_token(cfg.d_model, cfg.d_ff, cfg.mlp_act)
+        elif ffn == "moe":
+            f += moe_flops_per_token(cfg)
+        out.append(f)
+    return out
+
+
+def split_flops(cfg: ModelConfig, cut: int, context: int) -> Dict[str, float]:
+    """γ_F^c, γ_B^c, γ_F^s, γ_B^s per token (eqs. 14-16 analogues)."""
+    per_layer = flops_per_token_per_layer(cfg, context)
+    head = 2 * cfg.d_model * cfg.vocab_size
+    cf = sum(per_layer[:cut])
+    sf = sum(per_layer[cut:]) + head
+    return {"client_fwd": cf, "client_bwd": 2 * cf,
+            "server_fwd": sf, "server_bwd": 2 * sf}
+
+
+def model_flops_train_step(cfg: ModelConfig, tokens: int, context: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D-style estimate for the roofline table."""
+    per_layer = flops_per_token_per_layer(cfg, context)
+    head = 2 * cfg.d_model * cfg.vocab_size
+    fwd = (sum(per_layer) + head) * tokens
+    return 3.0 * fwd  # fwd + 2x bwd
+
+
+def model_flops_serve(cfg: ModelConfig, tokens: int, context: int) -> float:
+    per_layer = flops_per_token_per_layer(cfg, context)
+    head = 2 * cfg.d_model * cfg.vocab_size
+    return float((sum(per_layer) + head) * tokens)

@@ -1,0 +1,6 @@
+from repro.data.federated import dirichlet_partition, iid_partition  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticImageDataset,
+    make_image_dataset,
+    synthetic_token_batches,
+)

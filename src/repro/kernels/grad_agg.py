@@ -1,0 +1,50 @@
+"""ρ-weighted smashed-gradient aggregation kernel (paper eq. 5).
+
+out[t, d] = Σ_n ρ[n] · g[n, t, d] — the server-side reduction performed on
+every round before the gradient broadcast. Memory-bound by construction;
+the kernel exists so the paper's core op is a single fused VMEM pass
+(one read of g, one write of out) instead of a materialized
+weighted-multiply + reduce pair.
+
+Tiles: (N, bt, bd) input blocks reduced to (bt, bd) output blocks; the
+client axis N is small (≤ tens) and rides along fully inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _grad_agg_kernel(g_ref, rho_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)  # (N, bt, bd)
+    rho = rho_ref[...].astype(jnp.float32)  # (N, 1)
+    o_ref[...] = jnp.einsum("ntd,nz->td", g, rho).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d", "interpret"))
+def grad_agg_reduce(g, rho, block_t: int = 256, block_d: int = 256,
+                    interpret: bool = True):
+    """g: (N, T, D) per-client smashed grads; rho: (N,). Returns (T, D)."""
+    N, T, D = g.shape
+    block_t = min(block_t, T)
+    block_d = min(block_d, D)
+    assert T % block_t == 0 and D % block_d == 0, (T, D, block_t, block_d)
+    rho2 = rho.reshape(N, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _grad_agg_kernel,
+        out_shape=jax.ShapeDtypeStruct((T, D), g.dtype),
+        grid=(T // block_t, D // block_d),
+        in_specs=[
+            pl.BlockSpec((N, block_t, block_d), lambda i, j: (0, i, j)),
+            pl.BlockSpec((N, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_d), lambda i, j: (i, j)),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(g, rho2)

@@ -1,0 +1,114 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``backend`` selection: "pallas" runs the kernel (interpret=True on CPU —
+the TPU target executes the same kernel compiled); "jnp" runs the oracle.
+Model code calls these, so swapping a kernel in/out is a config flag.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.grad_agg import grad_agg_reduce
+from repro.kernels.ssd_scan import ssd_intra_chunk
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    backend: str = "pallas", block_q: int = 128,
+                    block_k: int = 128):
+    """q: (B, S, Hq, D), k/v: (B, T, Hkv, D) — model layout (BSHD)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if backend == "jnp":
+        out = ref.sdpa_ref(qt, kt, vt, causal, window)
+    else:
+        D = q.shape[-1]
+        if D not in (64, 128):  # pad head_dim to the MXU lane width
+            pad = 128 - D
+            scale_fix = jnp.sqrt((D + pad) / D).astype(qt.dtype)
+            qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, pad))) * scale_fix
+            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+            out = flash_attention_bhsd(qt, kt, vt, causal, window,
+                                       block_q, block_k,
+                                       interpret=not _ON_TPU)[..., :D]
+        else:
+            out = flash_attention_bhsd(qt, kt, vt, causal, window,
+                                       block_q, block_k,
+                                       interpret=not _ON_TPU)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def ssd(x, dt, A, B, C, chunk: int, initial_state=None, backend: str = "pallas"):
+    """Full SSD: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+    Shapes as in repro.models.ssm.ssd_chunked.
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    if backend == "jnp":
+        return ref.ssd_ref(x, dt, A, B, C, chunk, initial_state)
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0
+    c = s // chunk
+    rep = h // g
+    dtf = dt.astype(jnp.float32)
+    xdt = (x.astype(jnp.float32) * dtf[..., None])
+    dA = dtf * A.astype(jnp.float32)  # (b,s,h)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    # -> (b, h, c, Q, ...)
+    xdt_c = xdt.reshape(b, c, chunk, h, p).transpose(0, 3, 1, 2, 4)
+    dA_c = dA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)
+    B_c = Bf.reshape(b, c, chunk, h, n).transpose(0, 3, 1, 2, 4)
+    C_c = Cf.reshape(b, c, chunk, h, n).transpose(0, 3, 1, 2, 4)
+
+    y_diag, states = ssd_intra_chunk(xdt_c, dA_c, B_c, C_c,
+                                     interpret=not _ON_TPU)
+
+    # inter-chunk recurrence (jnp; c is small)
+    A_cs = jnp.cumsum(dA_c, axis=-1)  # (b,h,c,Q)
+    chunk_sum = A_cs[..., -1]  # (b,h,c)
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, decay_c = inp  # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * jnp.exp(decay_c)[..., None, None] + st_c
+        return new, prev
+
+    st_seq = jnp.moveaxis(states, 2, 0)  # (c,b,h,p,n)
+    dc_seq = jnp.moveaxis(chunk_sum, 2, 0)  # (c,b,h)
+    final, prevs = jax.lax.scan(step, init, (st_seq, dc_seq))
+    prev_states = jnp.moveaxis(prevs, 0, 2)  # (b,h,c,p,n)
+
+    # off-diagonal: y_off[q] = C[q] @ prev_state * exp(A_cs[q])
+    y_off = jnp.einsum("bhcqn,bhcpn,bhcq->bhcqp", C_c, prev_states,
+                       jnp.exp(A_cs))
+    y = (y_diag.astype(jnp.float32) + y_off)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def grad_agg(g, rho, backend: str = "pallas"):
+    """Σ_n ρ_n g_n over the client axis. g: (N, T, D) or (N, B, S, D)."""
+    shape = g.shape
+    if g.ndim == 4:
+        g = g.reshape(shape[0], shape[1] * shape[2], shape[3])
+    if backend == "jnp":
+        out = ref.grad_agg_ref(g, rho)
+    else:
+        out = grad_agg_reduce(g, rho, interpret=not _ON_TPU)
+    if len(shape) == 4:
+        out = out.reshape(shape[1], shape[2], shape[3])
+    return out

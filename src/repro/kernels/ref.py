@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sdpa_ref(q, k, v, causal: bool = True, window=None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D). Plain softmax attention."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) / jnp.sqrt(D)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vf).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked-SSD oracle — delegates to the model's reference impl."""
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, A, B, C, chunk, initial_state)
+
+
+def ssd_sequential_ref(x, dt, A, B, C, initial_state=None):
+    """O(S) recurrent oracle (validates the chunked algorithm itself)."""
+    from repro.models.ssm import ssd_step
+
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        y, state = ssd_step(state, x_t, dt_t, A, B_t, C_t)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def grad_agg_ref(g, rho):
+    """out = Σ_n ρ_n g_n. g: (N, T, D); rho: (N,)."""
+    return jnp.einsum("ntd,n->td", g.astype(jnp.float32),
+                      rho.astype(jnp.float32)).astype(g.dtype)

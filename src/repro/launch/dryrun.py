@@ -1,0 +1,137 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, print memory/cost analysis, and dump roofline inputs.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); 512 placeholder host devices back both the (16,16)
+single-pod mesh and the (2,16,16) multi-pod mesh.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh single --out results/dryrun
+  python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape decode_32k \
+      --mesh multi --algo sfl_ga --cut 2
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis import roofline as rl  # noqa: E402
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.core.split import model_flops_serve, model_flops_train_step  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_case  # noqa: E402
+
+
+def run_case(arch: str, shape_name: str, mesh_tag: str, *, algo="sfl_ga",
+             cut=None, fsdp=None, expert_parallel=False, remat=True,
+             policy="tp", verbose=True, extra_overrides=None):
+    mesh = make_production_mesh(multi_pod=(mesh_tag == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    case = build_case(arch, shape_name, mesh, algo=algo, cut=cut, fsdp=fsdp,
+                      expert_parallel=expert_parallel, remat=remat,
+                      policy=policy, extra_overrides=extra_overrides)
+    if case is None:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": "skipped",
+                "reason": "long_500k unsupported for this family (DESIGN.md §5)"}
+    with mesh:
+        lowered = case.lower()
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        mflops = model_flops_train_step(cfg, shape.global_batch * shape.seq_len,
+                                        shape.seq_len)
+    else:
+        ntok = (shape.global_batch * shape.seq_len if shape.kind == "prefill"
+                else shape.global_batch)
+        mflops = model_flops_serve(cfg, ntok, shape.seq_len)
+
+    roof = rl.analyze(compiled, lowered, arch=arch, shape=shape_name,
+                      mesh_tag=mesh_tag, chips=chips, model_flops=mflops)
+    mem_text = ""
+    try:
+        mem_text = str(compiled.memory_analysis())
+    except Exception as e:  # pragma: no cover
+        mem_text = f"<memory_analysis unavailable: {e}>"
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_tag} ({chips} chips) ==")
+        print(f"  compile: {t_compile:.1f}s  meta={case.meta}")
+        print(f"  memory_analysis: {mem_text}")
+        ca = compiled.cost_analysis() or {}
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        print(f"  collectives: {roof.coll_detail}")
+        print(f"  roofline: compute={roof.t_compute:.4f}s "
+              f"memory={roof.t_memory:.4f}s collective={roof.t_collective:.4f}s"
+              f" -> bottleneck={roof.bottleneck} "
+              f"useful_flops_ratio={roof.useful_flops_ratio:.3f}")
+    out = roof.to_dict()
+    out.update({"status": "ok", "compile_s": t_compile, "meta": case.meta,
+                "memory_analysis": mem_text})
+    return out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--algo", default="sfl_ga")
+    p.add_argument("--cut", type=int, default=None)
+    p.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    p.add_argument("--expert-parallel", action="store_true")
+    p.add_argument("--no-remat", action="store_true")
+    p.add_argument("--policy", default="tp", choices=["tp", "fsdp2d"])
+    p.add_argument("--all", action="store_true", help="run the full matrix")
+    p.add_argument("--out", default=None, help="append JSONL results here")
+    args = p.parse_args(argv)
+
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+    # --all expands unspecified dimensions; explicit --arch/--shape filter.
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_tag in meshes:
+                try:
+                    r = run_case(arch, shape, mesh_tag, algo=args.algo,
+                                 cut=args.cut, fsdp=fsdp,
+                                 expert_parallel=args.expert_parallel,
+                                 remat=not args.no_remat, policy=args.policy)
+                except Exception as e:
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                         "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                results.append(r)
+                if args.out:
+                    os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                                exist_ok=True)
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(r) + "\n")
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    print(f"\n== dry-run summary: {ok} ok, {sk} skipped, {failures} failed, "
+          f"{len(results)} total ==")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

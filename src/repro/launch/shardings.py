@@ -1,0 +1,232 @@
+"""Sharding rules: param-tree path -> PartitionSpec.
+
+Baseline policy (hillclimbed in EXPERIMENTS.md §Perf):
+
+* client-side params: leading client axis over ("pod","data"); within a
+  client copy, tensor-parallel dims over "model".
+* server-side params: tensor-parallel over "model"; with ``fsdp=True`` an
+  additional large dim over "data" (ZeRO-3: all-gather per layer).
+* MoE experts: expert dim over "data" when ``fsdp`` or ``expert_parallel``
+  (kimi-k2's 1T params cannot replicate across data), else replicated
+  across data with d_ff over "model".
+* Dims are sharded only when divisible by the axis size — otherwise
+  replicated (e.g. MQA kv=1 heads).
+
+Activations: batch/client dims over ("pod","data"), vocab logits over
+"model"; KV caches batch over ("pod","data"), kv-heads over "model" when
+divisible.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import client_axes, model_axis_size
+
+# param names whose -1 dim is tensor-parallel (column parallel)
+_COL = {"wq", "wk", "wv", "gate", "up", "in_proj", "head"}
+# param names whose -2 dim is tensor-parallel (row parallel)
+_ROW = {"wo", "down", "out_proj"}
+_EXPERT_COL = {"w_gate", "w_up"}  # (E, d, f): f over model
+_EXPERT_ROW = {"w_down"}  # (E, f, d): f over model (dim -2)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"[{p.idx}]")
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return tuple(names)
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def param_spec_fsdp2d(path, leaf, *, mesh, client: bool) -> P:
+    """"fsdp2d" policy: no tensor parallelism — every >=2D server weight is
+    flat-sharded over ("data","model") on its largest dim and the batch is
+    sharded over BOTH axes. Eliminates the per-layer Megatron activation
+    all-reduces in exchange for per-layer param all-gathers; wins whenever
+    layer params < activations (see EXPERIMENTS.md §Perf granite-8b)."""
+    names = _path_names(path)
+    shape = leaf.shape
+    ndim = len(shape)
+    spec = [None] * ndim
+    off = 0
+    caxes = client_axes(mesh)
+    if client:
+        spec[0] = caxes if len(caxes) > 1 else caxes[0]
+        off = 1
+    if ndim - off < 2:
+        return P(*spec)
+    total = mesh.shape["model"] * mesh.shape.get("data", 1)
+    # largest shardable dim (prefer the last dims, ties -> later dim)
+    cand = sorted(range(off, ndim), key=lambda i: (shape[i], i))
+    for i in reversed(cand):
+        if client and _divisible(shape[i], mesh.shape["model"]):
+            spec[i] = "model"  # client copies shard within their own devices
+            return P(*spec)
+        if not client and _divisible(shape[i], total):
+            spec[i] = ("data", "model")
+            return P(*spec)
+        if not client and _divisible(shape[i], mesh.shape["model"]):
+            spec[i] = "model"
+            return P(*spec)
+    return P(*spec)
+
+
+def param_spec(path, leaf, *, mesh, client: bool, fsdp: bool = False,
+               expert_parallel: bool = False, policy: str = "tp") -> P:
+    if policy == "fsdp2d":
+        return param_spec_fsdp2d(path, leaf, mesh=mesh, client=client)
+    names = _path_names(path)
+    shape = leaf.shape
+    msize = model_axis_size(mesh)
+    caxes = client_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in ("data",) if a in mesh.axis_names]))
+
+    ndim = len(shape)
+    spec = [None] * ndim
+    off = 0
+    if client:
+        spec[0] = caxes if len(caxes) > 1 else caxes[0]
+        off = 1
+
+    owner = None  # param name that decides the policy
+    for n in reversed(names):
+        if n in _COL | _ROW | _EXPERT_COL | _EXPERT_ROW | {"table", "router",
+                                                           "conv_w", "conv_b"}:
+            owner = n
+            break
+        if n in {"w", "b"}:
+            continue
+    leafname = names[-1] if names else ""
+
+    def try_set(axis_idx: int, mesh_axis: str, size: int):
+        ai = axis_idx if axis_idx >= 0 else ndim + axis_idx
+        if ai >= off and spec[ai] is None and _divisible(shape[ai], size):
+            spec[ai] = mesh_axis
+            return True
+        return False
+
+    if leafname == "b" or ndim <= 1 + off:
+        # biases / norms / scalars: shard long vectors over model when they
+        # follow a column-parallel weight; otherwise replicate.
+        if owner in _COL and ndim - off == 1:
+            try_set(-1, "model", msize)
+        return P(*spec)
+
+    if owner == "table":  # embedding (vocab, d): vocab over model
+        try_set(-2, "model", msize)
+        if fsdp and not client:
+            try_set(-1, "data", dsize)
+    elif owner == "router":
+        pass  # small; replicate
+    elif owner in _EXPERT_COL:
+        if expert_parallel:
+            # expert parallelism: activations stay d-sharded through the
+            # dispatch, so contract d locally (d over "model", f unsharded)
+            try_set(-2, "model", msize)  # d
+        else:
+            try_set(-1, "model", msize)  # f
+        if (expert_parallel or fsdp) and not client:
+            try_set(-3, "data", dsize)  # E (client axis already owns "data")
+    elif owner in _EXPERT_ROW:
+        if expert_parallel:
+            try_set(-1, "model", msize)  # d (output stays d-sharded)
+        else:
+            try_set(-2, "model", msize)  # f
+        if (expert_parallel or fsdp) and not client:
+            try_set(-3, "data", dsize)  # E
+    elif owner in _COL:
+        try_set(-1, "model", msize)
+        if fsdp and not client:
+            try_set(-2, "data", dsize)
+    elif owner in _ROW:
+        try_set(-2, "model", msize)
+        if fsdp and not client:
+            try_set(-1, "data", dsize)
+    elif owner == "conv_w":
+        try_set(-1, "model", msize)  # depthwise channels
+    # everything else (norm scales, A_log, D, dt_bias): replicate
+    return P(*spec)
+
+
+def param_shardings(tree, *, mesh, client: bool, fsdp: bool = False,
+                    expert_parallel: bool = False, policy: str = "tp"):
+    """NamedSharding tree matching ``tree`` (of arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh=mesh, client=client, fsdp=fsdp,
+                             expert_parallel=expert_parallel, policy=policy)),
+        tree)
+
+
+def split_param_shardings(split_tree, *, mesh, fsdp: bool = False,
+                          expert_parallel: bool = False, policy: str = "tp"):
+    """Shardings for the {client, server} split layout of core.algorithms."""
+    return {
+        "client": param_shardings(split_tree["client"], mesh=mesh, client=True,
+                                  expert_parallel=expert_parallel, policy=policy),
+        "server": param_shardings(split_tree["server"], mesh=mesh, client=False,
+                                  fsdp=fsdp, expert_parallel=expert_parallel,
+                                  policy=policy),
+    }
+
+
+def _client_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in client_axes(mesh)]))
+
+
+def batch_sharding(mesh, ndim: int, policy: str = "tp"):
+    """(N, b, S[, d]) batches: client axis over ("pod","data"); under
+    "fsdp2d" the per-client batch additionally shards over "model"."""
+    caxes = client_axes(mesh)
+    spec = [caxes if len(caxes) > 1 else caxes[0]] + [None] * (ndim - 1)
+    if policy == "fsdp2d" and ndim >= 2:
+        spec[1] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def serve_batch_sharding(mesh, ndim: int, batch: Optional[int] = None):
+    """(B, ...) serving batches: batch over ("pod","data") when divisible,
+    replicated otherwise (long_500k decodes a single stream)."""
+    if batch is not None and batch % _client_size(mesh) != 0:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return batch_sharding(mesh, ndim)
+
+
+def cache_shardings(cache_tree, mesh):
+    """KV caches (repeat, B, cap, Hkv, hd) / SSM states: batch over client
+    axes when divisible; else sequence-parallel KV (cap dim over "data" —
+    how a single 524k-token stream fits); kv-heads over model when
+    divisible (MQA kv=1 stays replicated)."""
+    caxes = client_axes(mesh)
+    cax = caxes if len(caxes) > 1 else caxes[0]
+    msize = model_axis_size(mesh)
+    csize = _client_size(mesh)
+    dsize = mesh.shape.get("data", 1)
+
+    def spec(leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:  # stacked length scalars
+            return NamedSharding(mesh, P())
+        s = [None] * len(shape)
+        # leading dim is the scan-stack (repeat); batch is dim 1
+        if _divisible(shape[1], csize):
+            s[1] = cax
+        elif len(shape) == 5 and _divisible(shape[2], dsize) and shape[2] > 1024:
+            s[2] = "data"  # sequence-parallel KV cache
+        if len(shape) == 5 and _divisible(shape[3], msize):
+            s[3] = "model"
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, cache_tree)

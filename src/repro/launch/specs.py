@@ -1,0 +1,291 @@
+"""Dry-run case construction: (step fn, ShapeDtypeStruct args, shardings)
+for every (architecture x input-shape x mesh) cell.
+
+No arrays are ever allocated here — params/optimizer/caches are
+jax.eval_shape skeletons and inputs are ShapeDtypeStructs, exactly the
+shannon/kernels dry-run pattern.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig, TrainConfig
+from repro.core import algorithms as alg
+from repro.launch import shardings as shd
+from repro.launch.mesh import client_axes, n_client_shards
+from repro.models import encdec, lm
+from repro.optim import make_optimizer
+
+# archs whose server params must be FSDP-sharded over "data" (too big for
+# model-axis-only sharding on 16 GB chips)
+FSDP_ARCHS = {"command-r-35b", "qwen3-moe-30b-a3b", "jamba-v0.1-52b",
+              "granite-20b", "kimi-k2-1t-a32b"}
+
+# long_500k policy (DESIGN.md §5): native for ssm/hybrid/sliding-window;
+# sliding-window serving variant for other decoder-only archs; whisper skips.
+LONG_SKIP = {"whisper-tiny"}
+SLIDING_FOR_LONG = 4096
+
+
+@dataclass
+class DryRunCase:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def lower(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings).lower(*self.args)
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _client_ax(mesh):
+    ca = client_axes(mesh)
+    return ca if len(ca) > 1 else ca[0]
+
+
+def default_cut(cfg: ModelConfig) -> int:
+    """v default for dry-runs: small client side (paper Thm 2 favours small
+    φ(v)) but at least one layer."""
+    return max(1, min(2, cfg.num_layers - 1))
+
+
+def serve_config(cfg: ModelConfig, shape: InputShape) -> Optional[ModelConfig]:
+    """Adjust the config for a serving shape; None => skip (documented)."""
+    if shape.name == "long_500k":
+        if cfg.name in LONG_SKIP:
+            return None
+        if cfg.arch_type in ("ssm", "hybrid") or cfg.sliding_window:
+            return cfg  # natively sub-quadratic decode
+        return cfg.with_overrides(sliding_window=SLIDING_FOR_LONG)
+    return cfg
+
+
+def build_case(arch: str, shape_name: str, mesh, *, algo: str = "sfl_ga",
+               cut: Optional[int] = None, fsdp: Optional[bool] = None,
+               expert_parallel: bool = False, remat: bool = True,
+               policy: str = "tp",
+               extra_overrides: Optional[dict] = None) -> Optional[DryRunCase]:
+    cfg = get_config(arch)
+    if extra_overrides:
+        cfg = cfg.with_overrides(**extra_overrides)
+    if expert_parallel and cfg.moe is not None:
+        cfg = cfg.with_overrides(expert_axis="data",
+                                 routing_groups=mesh.shape.get("data", 1))
+    shape = INPUT_SHAPES[shape_name]
+    fsdp = (arch in FSDP_ARCHS) if fsdp is None else fsdp
+    if shape.kind == "train":
+        return _build_train_case(cfg, arch, shape, mesh, algo=algo,
+                                 cut=cut or default_cut(cfg), fsdp=fsdp,
+                                 expert_parallel=expert_parallel, remat=remat,
+                                 policy=policy)
+    scfg = serve_config(cfg, shape)
+    if scfg is None:
+        return None
+    if shape.kind == "prefill":
+        return _build_prefill_case(scfg, arch, shape, mesh, fsdp=fsdp,
+                                   expert_parallel=expert_parallel)
+    return _build_decode_case(scfg, arch, shape, mesh, fsdp=fsdp,
+                              expert_parallel=expert_parallel)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def _build_train_case(cfg, arch, shape, mesh, *, algo, cut, fsdp,
+                      expert_parallel, remat, policy="tp") -> DryRunCase:
+    N = n_client_shards(mesh)
+    assert shape.global_batch % N == 0
+    b = shape.global_batch // N
+    S = shape.seq_len
+    dt = jnp.bfloat16
+    tcfg = TrainConfig(model=cfg, algo=algo, cut_layer=cut, remat=remat,
+                       fsdp=fsdp, expert_parallel=expert_parallel)
+    opt = make_optimizer("sgd", 1e-3)
+    cax = _client_ax(mesh)
+
+    if cfg.arch_type == "audio":
+        params_struct = jax.eval_shape(
+            lambda: _whisper_split_stacked(cfg, cut, N, dt))
+        step = alg.make_whisper_train_step(cfg, tcfg, opt, N)
+        F = cfg.encoder.num_frames
+        batch = {
+            "frame_embeds": _struct((N, b, F, cfg.d_model), dt),
+            "tokens": _struct((N, b, S), jnp.int32),
+            "labels": _struct((N, b, S), jnp.int32),
+        }
+        batch_shd = {
+            "frame_embeds": shd.batch_sharding(mesh, 4),
+            "tokens": shd.batch_sharding(mesh, 3),
+            "labels": shd.batch_sharding(mesh, 3),
+        }
+    else:
+        plan = lm.build_plan(cfg, cut)
+        params_struct = jax.eval_shape(
+            lambda: alg.split_lm_params(
+                lm.init_lm(jax.random.key(0), plan, dt), N))
+        step = alg.make_train_step(plan, tcfg, opt, N)
+        if cfg.arch_type == "vlm":
+            # stubbed ViT frontend: precomputed merged embeddings
+            tokens = _struct((N, b, S, cfg.d_model), dt)
+            tok_shd = shd.batch_sharding(mesh, 4, policy)
+        else:
+            tokens = _struct((N, b, S), jnp.int32)
+            tok_shd = shd.batch_sharding(mesh, 3, policy)
+        batch = {"tokens": tokens, "labels": _struct((N, b, S), jnp.int32)}
+        batch_shd = {"tokens": tok_shd,
+                     "labels": shd.batch_sharding(mesh, 3, policy)}
+
+    param_shd = shd.split_param_shardings(params_struct, mesh=mesh, fsdp=fsdp,
+                                          expert_parallel=expert_parallel,
+                                          policy=policy)
+    opt_struct = jax.eval_shape(opt.init, params_struct)
+    opt_shd = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_struct)
+
+    return DryRunCase(
+        arch=arch, shape=shape.name, kind="train", fn=step,
+        args=(params_struct, opt_struct, batch),
+        in_shardings=(param_shd, opt_shd, batch_shd),
+        meta={"cut": cut, "algo": algo, "fsdp": fsdp, "n_clients": N,
+              "tokens": shape.global_batch * S, "context": S},
+    )
+
+
+def _whisper_split_stacked(cfg, cut, N, dt):
+    p = encdec.split_whisper_params(jax.random.key(0), cfg, cut, dt)
+    client = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), p["client"])
+    return {"client": client, "server": p["server"]}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def _serve_params_struct(cfg, dt):
+    if cfg.arch_type == "audio":
+        return jax.eval_shape(
+            lambda: encdec.init_whisper(jax.random.key(0), cfg, dt))
+    plan = lm.build_plan(cfg, 0)
+    return plan, jax.eval_shape(lambda: lm.init_lm(jax.random.key(0), plan, dt))
+
+
+def _build_prefill_case(cfg, arch, shape, mesh, *, fsdp, expert_parallel):
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16
+
+    if cfg.arch_type == "audio":
+        params_struct = _serve_params_struct(cfg, dt)
+        param_shd = shd.param_shardings(params_struct, mesh=mesh, client=False,
+                                        fsdp=fsdp, expert_parallel=expert_parallel)
+        F = cfg.encoder.num_frames
+
+        def fn(params, frame_embeds, tokens):
+            return encdec.whisper_prefill(params, cfg, frame_embeds, tokens,
+                                          max_len=S, dtype=dt)
+
+        args = (params_struct, _struct((B, F, cfg.d_model), dt),
+                _struct((B, S), jnp.int32))
+        in_shd = (param_shd, shd.serve_batch_sharding(mesh, 3, B),
+                  shd.serve_batch_sharding(mesh, 2, B))
+    else:
+        plan, params_struct = _serve_params_struct(cfg, dt)
+        param_shd = shd.param_shardings(params_struct, mesh=mesh, client=False,
+                                        fsdp=fsdp, expert_parallel=expert_parallel)
+
+        if cfg.arch_type == "vlm":
+            inp = _struct((B, S, cfg.d_model), dt)
+            inp_shd = shd.serve_batch_sharding(mesh, 3, B)
+
+            def fn(params, embeds):
+                return lm.prefill(params, plan, inputs_embeds=embeds,
+                                  max_len=S, dtype=dt)
+        else:
+            inp = _struct((B, S), jnp.int32)
+            inp_shd = shd.serve_batch_sharding(mesh, 2, B)
+
+            def fn(params, tokens):
+                return lm.prefill(params, plan, tokens=tokens, max_len=S,
+                                  dtype=dt)
+
+        args = (params_struct, inp)
+        in_shd = (param_shd, inp_shd)
+
+    return DryRunCase(arch=arch, shape=shape.name, kind="prefill", fn=fn,
+                      args=args, in_shardings=in_shd,
+                      meta={"tokens": B * S, "context": S, "fsdp": fsdp})
+
+
+def _whisper_cache_struct(cfg, B, S, dt):
+    from repro.models.attention import KVCache
+
+    hd = cfg.resolved_head_dim
+    F = cfg.encoder.num_frames
+    caches = []
+    for _ in range(cfg.num_layers):
+        self_kv = KVCache(_struct((B, S, cfg.num_kv_heads, hd), dt),
+                          _struct((B, S, cfg.num_kv_heads, hd), dt),
+                          _struct((), jnp.int32))
+        cross = KVCache(_struct((B, F, cfg.num_kv_heads, hd), dt),
+                        _struct((B, F, cfg.num_kv_heads, hd), dt),
+                        _struct((), jnp.int32))
+        caches.append(encdec.DecLayerCache(self_kv, cross))
+    return caches
+
+
+def _build_decode_case(cfg, arch, shape, mesh, *, fsdp, expert_parallel):
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16
+
+    if cfg.arch_type == "audio":
+        params_struct = _serve_params_struct(cfg, dt)
+        param_shd = shd.param_shardings(params_struct, mesh=mesh, client=False,
+                                        fsdp=fsdp, expert_parallel=expert_parallel)
+        caches = _whisper_cache_struct(cfg, B, S, dt)
+        cache_shd = _whisper_cache_shd(caches, mesh)
+
+        def fn(params, token, caches):
+            return encdec.whisper_decode_step(params, cfg, token, caches, dtype=dt)
+
+        args = (params_struct, _struct((B, 1), jnp.int32), caches)
+        in_shd = (param_shd, shd.serve_batch_sharding(mesh, 2, B), cache_shd)
+    else:
+        plan, params_struct = _serve_params_struct(cfg, dt)
+        param_shd = shd.param_shardings(params_struct, mesh=mesh, client=False,
+                                        fsdp=fsdp, expert_parallel=expert_parallel)
+        cache_struct = jax.eval_shape(
+            lambda: lm.init_caches(plan, B, S, dt))
+        cache_shd = shd.cache_shardings(cache_struct, mesh)
+        step = alg.make_decode_step(plan, dt)
+        args = (params_struct, _struct((B, 1), jnp.int32), cache_struct)
+        in_shd = (param_shd, shd.serve_batch_sharding(mesh, 2, B), cache_shd)
+        fn = step
+
+    return DryRunCase(arch=arch, shape=shape.name, kind="decode", fn=fn,
+                      args=args, in_shardings=in_shd,
+                      meta={"tokens": B, "context": S, "fsdp": fsdp,
+                            "window": cfg.sliding_window})
+
+
+def _whisper_cache_shd(caches, mesh):
+    cax = _client_ax(mesh)
+
+    def spec(leaf):
+        if len(leaf.shape) == 4:
+            return NamedSharding(mesh, P(cax, None, None, None))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec, caches)

@@ -1,0 +1,1 @@
+from repro.models import attention, blocks, encdec, lm, moe, ssm, transformer  # noqa: F401

@@ -1,0 +1,176 @@
+"""Core building blocks: norms, linears, embeddings, RoPE, MLPs.
+
+Pure-JAX (no flax): params are nested dicts of arrays; ``init_*`` builds
+them, ``apply_*``-style functions consume them. All blocks take an explicit
+``dtype`` for compute; params are stored in the dtype they were initialized
+with (callers cast via :func:`cast_tree`).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def _rmsnorm_impl(scale, x32, eps: float):
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_cv(scale, x, eps: float):
+    return _rmsnorm_impl(scale, x.astype(jnp.float32), eps).astype(x.dtype)
+
+
+def _rmsnorm_cv_fwd(scale, x, eps):
+    return _rmsnorm_cv(scale, x, eps), (scale, x)
+
+
+def _rmsnorm_cv_bwd(eps, res, g):
+    # Statistics in f32, but the cotangent re-enters the residual stream in
+    # the activation dtype. Without this, XLA keeps the whole backward
+    # residual chain (and its tensor-parallel all-reduces) in f32 — 2x the
+    # collective bytes and f32 backward dots (EXPERIMENTS.md §Perf, iter 2).
+    scale, x = res
+    _, vjp = jax.vjp(lambda s, xf: _rmsnorm_impl(s, xf, eps),
+                     scale, x.astype(jnp.float32))
+    ds, dx = vjp(g.astype(jnp.float32))
+    return ds.astype(scale.dtype), dx.astype(x.dtype)
+
+
+_rmsnorm_cv.defvjp(_rmsnorm_cv_fwd, _rmsnorm_cv_bwd)
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    return _rmsnorm_cv(params["scale"], x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Linear / Embedding
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32,
+                scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(params, ids, dtype):
+    return params["table"].astype(dtype)[ids]
+
+
+def unembed(params, x):
+    """Tied unembedding: logits = x @ table^T."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE for Qwen2-VL)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_sin_cos(positions: jnp.ndarray, head_dim: int, theta: float,
+                 mrope_sections: Sequence[int] = ()) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """sin/cos of shape (..., seq, head_dim//2).
+
+    ``positions``: (B, S) int32 — or (3, B, S) for M-RoPE, where the three
+    planes are temporal/height/width position ids; section ``i`` of the
+    frequency axis uses plane ``sections_plane[i]`` (Qwen2-VL §3.1).
+    """
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        half = head_dim // 2
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        plane = jnp.concatenate(
+            [jnp.full((s,), i, jnp.int32) for i, s in enumerate(mrope_sections)]
+        )  # (half,) in {0,1,2}
+        pos = positions.astype(jnp.float32)[plane]  # (half, B, S)
+        ang = jnp.einsum("hbs,h->bsh", pos, freqs)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D). sin/cos: (B, S, D//2). Rotate-half convention."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    sin = sin[:, :, None, :].astype(jnp.float32)
+    cos = cos[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu", bias: bool = False,
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "gate": init_linear(k1, d_model, d_ff, bias, dtype),
+            "up": init_linear(k2, d_model, d_ff, bias, dtype),
+            "down": init_linear(k3, d_ff, d_model, bias, dtype),
+        }
+    return {
+        "up": init_linear(k1, d_model, d_ff, bias, dtype),
+        "down": init_linear(k2, d_ff, d_model, bias, dtype),
+    }
+
+
+def mlp(params, x, act: str = "swiglu"):
+    if act == "swiglu":
+        return linear(params["down"], jax.nn.silu(linear(params["gate"], x)) * linear(params["up"], x))
+    return linear(params["down"], jax.nn.gelu(linear(params["up"], x)))
+
+
+def mlp_flops_per_token(d_model: int, d_ff: int, act: str = "swiglu") -> int:
+    n_mats = 3 if act == "swiglu" else 2
+    return 2 * n_mats * d_model * d_ff

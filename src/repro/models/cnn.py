@@ -1,0 +1,133 @@
+"""The paper's CNN (§V-A, McMahan-style [33]) as a V=5-block split model.
+
+Blocks: conv32 -> conv64 -> fc512 -> fc128 -> fc_out. Cutting point
+v ∈ {1..4} puts blocks[:v] on the client (client-side model w^c, size φ(v))
+and blocks[v:] on the server (w^s). ``smashed_shape``/``phi`` feed the
+communication/privacy models (X_t(v), eq. 12-13; φ(v), eq. 17).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CNNConfig
+
+
+def _conv(params, x):
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def block_shapes(cfg: CNNConfig) -> List[Tuple[int, ...]]:
+    """Activation shape (per sample) after each block."""
+    s = cfg.image_size
+    shapes = [(s // 2, s // 2, cfg.conv_channels[0]),
+              (s // 4, s // 4, cfg.conv_channels[1]),
+              (cfg.fc_dim,), (cfg.fc_dim // 4,), (cfg.num_classes,)]
+    return shapes
+
+
+def init_cnn(key, cfg: CNNConfig) -> List[dict]:
+    ks = jax.random.split(key, 5)
+    s = cfg.image_size
+    flat = cfg.conv_channels[1] * (s // 4) * (s // 4)
+    c1, c2 = cfg.conv_channels
+
+    def conv_p(k, cin, cout):
+        w = jax.random.normal(k, (cfg.kernel_size, cfg.kernel_size, cin, cout),
+                              jnp.float32) * math.sqrt(2.0 / (cfg.kernel_size ** 2 * cin))
+        return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}
+
+    def fc_p(k, din, dout):
+        w = jax.random.normal(k, (din, dout), jnp.float32) * math.sqrt(2.0 / din)
+        return {"w": w, "b": jnp.zeros((dout,), jnp.float32)}
+
+    return [
+        conv_p(ks[0], cfg.channels, c1),
+        conv_p(ks[1], c1, c2),
+        fc_p(ks[2], flat, cfg.fc_dim),
+        fc_p(ks[3], cfg.fc_dim, cfg.fc_dim // 4),
+        fc_p(ks[4], cfg.fc_dim // 4, cfg.num_classes),
+    ]
+
+
+def apply_block(i: int, params, x, cfg: CNNConfig):
+    if i == 0 or i == 1:
+        x = _maxpool2(jax.nn.relu(_conv(params, x)))
+        if i == 1:
+            x = x.reshape(x.shape[0], -1)
+        return x
+    x = x @ params["w"] + params["b"]
+    if i < 4:
+        x = jax.nn.relu(x)
+    return x
+
+
+def forward_blocks(params_list, x, cfg: CNNConfig, start: int, stop: int):
+    for i in range(start, stop):
+        x = apply_block(i, params_list[i - start], x, cfg)
+    return x
+
+
+def client_forward(client_params, x, cfg: CNNConfig, v: int):
+    """Smashed data S = ℓ(w^c; ξ) (eq. 1)."""
+    return forward_blocks(client_params, x, cfg, 0, v)
+
+
+def server_logits(server_params, smashed, cfg: CNNConfig, v: int):
+    return forward_blocks(server_params, smashed, cfg, v, cfg.num_layers)
+
+
+def server_loss(server_params, smashed, y, cfg: CNNConfig, v: int):
+    logits = server_logits(server_params, smashed, cfg, v)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def phi(cfg: CNNConfig, v: int, params=None) -> int:
+    """Client-side model size φ(v) in parameter count (eq. 17 uses φ/q)."""
+    if params is None:
+        params = init_cnn(jax.random.key(0), cfg)
+    return sum(int(x.size) for b in params[:v] for x in jax.tree.leaves(b))
+
+
+def total_params(cfg: CNNConfig, params=None) -> int:
+    if params is None:
+        params = init_cnn(jax.random.key(0), cfg)
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def smashed_numel(cfg: CNNConfig, v: int) -> int:
+    """Per-sample element count of the smashed data at cut v → X_t(v)."""
+    return int(jnp.prod(jnp.asarray(block_shapes(cfg)[v - 1])))
+
+
+def block_flops(cfg: CNNConfig) -> List[int]:
+    """Per-sample forward FLOPs per block (convs dominate, unlike params)."""
+    s, k = cfg.image_size, cfg.kernel_size
+    c1, c2 = cfg.conv_channels
+    flat = c2 * (s // 4) * (s // 4)
+    return [
+        2 * s * s * k * k * cfg.channels * c1,
+        2 * (s // 2) * (s // 2) * k * k * c1 * c2,
+        2 * flat * cfg.fc_dim,
+        2 * cfg.fc_dim * (cfg.fc_dim // 4),
+        2 * (cfg.fc_dim // 4) * cfg.num_classes,
+    ]
+
+
+def client_flop_fraction(cfg: CNNConfig, v: int) -> float:
+    """Fraction of per-sample FLOPs below the cut (FLOP-aware extension;
+    the paper itself uses constant γ workloads from [13])."""
+    f = block_flops(cfg)
+    return float(sum(f[:v]) / sum(f))

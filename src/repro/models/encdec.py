@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder (audio backbone).
+
+The mel+conv frontend is a STUB per the assignment: callers provide
+precomputed frame embeddings (B, num_frames, d_model). This module is the
+transformer that consumes them: a bidirectional encoder and a causal decoder
+with cross-attention.
+
+SFL split: the encoder plus the first ``cut`` decoder layers are
+client-side (they touch the near-raw signal; cf. DESIGN.md privacy note).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.blocks import embed, init_embedding, init_mlp, init_rmsnorm, linear, mlp, rmsnorm, unembed
+
+
+class DecLayerCache(NamedTuple):
+    self_kv: attn_mod.KVCache
+    cross_kv: attn_mod.KVCache  # projected encoder KV; never updated
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_mod.init_attention(k1, cfg, dtype),
+        "norm2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, cfg.mlp_bias, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model, dtype),
+        "self_attn": attn_mod.init_attention(k1, cfg, dtype),
+        "norm_x": init_rmsnorm(cfg.d_model, dtype),
+        "cross_attn": attn_mod.init_attention(k2, cfg, dtype),
+        "norm2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_act, cfg.mlp_bias, dtype),
+    }
+
+
+def init_whisper(key, cfg: ModelConfig, dtype=jnp.float32):
+    enc = cfg.encoder
+    keys = jax.random.split(key, enc.num_layers + cfg.num_layers + 3)
+    return {
+        "enc_pos": (jax.random.normal(keys[0], (enc.num_frames, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+        "embed": init_embedding(keys[1], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": [
+            _init_enc_layer(keys[2 + i], cfg, dtype) for i in range(enc.num_layers)
+        ],
+        "dec_layers": [
+            _init_dec_layer(keys[2 + enc.num_layers + i], cfg, dtype)
+            for i in range(cfg.num_layers)
+        ],
+        "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frame_embeds):
+    """frame_embeds: (B, F, d) precomputed (stub frontend)."""
+    x = frame_embeds + params["enc_pos"].astype(frame_embeds.dtype)[None]
+    for p in params["enc_layers"]:
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        x = x + attn_mod.attend_train(p["attn"], cfg, h, None, causal=False)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer_train(p, cfg, x, enc_out, positions):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    x = x + attn_mod.attend_train(p["self_attn"], cfg, h, positions)
+    h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+    x = x + attn_mod.attend_train(p["cross_attn"], cfg, h, None, causal=False,
+                                  cross_kv_x=enc_out)
+    return x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+
+
+def whisper_forward(params, cfg: ModelConfig, frame_embeds, dec_tokens,
+                    cut: int = 0, boundary_fn=None, dtype=jnp.bfloat16):
+    """Training forward. Returns logits (B, S, vocab).
+
+    ``cut`` splits the decoder: encoder + dec_layers[:cut] are client-side;
+    ``boundary_fn`` (SFL-GA gradient aggregation) wraps the smashed data.
+    """
+    enc_out = encode(params, cfg, frame_embeds)
+    B, S = dec_tokens.shape
+    x = embed(params["embed"], dec_tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    for i, p in enumerate(params["dec_layers"]):
+        if boundary_fn is not None and i == cut:
+            x = boundary_fn(x)
+        x = _dec_layer_train(p, cfg, x, enc_out, positions)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x)
+
+
+def whisper_loss(params, cfg, frame_embeds, dec_tokens, labels, cut=0,
+                 boundary_fn=None, dtype=jnp.bfloat16):
+    from repro.models.lm import cross_entropy
+
+    logits = whisper_forward(params, cfg, frame_embeds, dec_tokens, cut,
+                             boundary_fn, dtype)
+    return cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def whisper_prefill(params, cfg: ModelConfig, frame_embeds, dec_tokens,
+                    max_len: int, dtype=jnp.bfloat16):
+    enc_out = encode(params, cfg, frame_embeds)
+    B, S = dec_tokens.shape
+    x = embed(params["embed"], dec_tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    caches = []
+    for p in params["dec_layers"]:
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, self_kv = attn_mod.attend_prefill(p["self_attn"], cfg, h, positions,
+                                               max_len)
+        x = x + out
+        # build static cross KV from encoder output
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        k = linear(p["cross_attn"]["wk"], enc_out).reshape(
+            B, enc_out.shape[1], cfg.num_kv_heads, hd)
+        v = linear(p["cross_attn"]["wv"], enc_out).reshape(
+            B, enc_out.shape[1], cfg.num_kv_heads, hd)
+        cross_kv = attn_mod.KVCache(k, v, jnp.asarray(enc_out.shape[1], jnp.int32))
+        x = x + attn_mod.attend_train(p["cross_attn"], cfg, hx, None, causal=False,
+                                      cross_kv_x=enc_out)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+        caches.append(DecLayerCache(self_kv, cross_kv))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x[:, -1:, :]), caches
+
+
+def whisper_decode_step(params, cfg: ModelConfig, token, caches,
+                        dtype=jnp.bfloat16):
+    """token: (B, 1). Returns (logits, new_caches)."""
+    x = embed(params["embed"], token, dtype)
+    new_caches = []
+    for p, c in zip(params["dec_layers"], caches):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, self_kv = attn_mod.attend_decode(p["self_attn"], cfg, h, c.self_kv)
+        x = x + out
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        out, _ = attn_mod.attend_decode(p["cross_attn"], cfg, hx, c.cross_kv,
+                                        cross=True)
+        x = x + out
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+        new_caches.append(DecLayerCache(self_kv, c.cross_kv))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# SFL split layout (client = encoder + embed + dec_layers[:cut])
+# ---------------------------------------------------------------------------
+
+def split_whisper_params(key, cfg: ModelConfig, cut: int, dtype=jnp.bfloat16):
+    """Init whisper directly in {client, server} split form. The tied
+    unembedding is untied: the head lives server-side (as for the LM zoo)."""
+    from repro.models.blocks import init_linear
+
+    kp, kh = jax.random.split(key)
+    params = init_whisper(kp, cfg, dtype)
+    client = {
+        "enc_pos": params["enc_pos"],
+        "embed": params["embed"],
+        "enc_layers": params["enc_layers"],
+        "enc_norm": params["enc_norm"],
+        "dec_layers": params["dec_layers"][:cut],
+    }
+    server = {
+        "dec_layers": params["dec_layers"][cut:],
+        "final_norm": params["final_norm"],
+        "head": init_linear(kh, cfg.d_model, cfg.vocab_size, False, dtype),
+    }
+    return {"client": client, "server": server}
+
+
+def whisper_client_forward(cparams, cfg: ModelConfig, frame_embeds, dec_tokens,
+                           dtype=jnp.bfloat16):
+    """Returns the smashed data: (decoder residual after dec_layers[:cut],
+    encoder states). Both cross the wire in split training."""
+    enc_p = {"enc_layers": cparams["enc_layers"], "enc_pos": cparams["enc_pos"],
+             "enc_norm": cparams["enc_norm"]}
+    enc_out = encode(enc_p, cfg, frame_embeds)
+    B, S = dec_tokens.shape
+    x = embed(cparams["embed"], dec_tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    for p in cparams["dec_layers"]:
+        x = _dec_layer_train(p, cfg, x, enc_out, positions)
+    return x, enc_out
+
+
+def whisper_server_forward(sparams, cfg: ModelConfig, x, enc_out):
+    from repro.models.blocks import linear
+
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    for p in sparams["dec_layers"]:
+        x = _dec_layer_train(p, cfg, x, enc_out, positions)
+    x = rmsnorm(sparams["final_norm"], x, cfg.norm_eps)
+    return linear(sparams["head"], x)

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch uses scatter-add/gather (not the GShard one-hot einsum) so compiled
+FLOPs stay close to useful expert FLOPs — this matters for the roofline's
+MODEL_FLOPS / HLO_FLOPs ratio. Tokens beyond an expert's capacity are
+dropped (standard Switch/GShard semantics, capacity_factor configurable).
+
+Expert weights have shape (E, d, f). Sharding (see launch/mesh.py):
+baseline shards f over "model"; with fsdp=True, E additionally over "data"
+(ZeRO-style all-gather per layer); with expert_parallel=True, E over "data"
+and the dispatch scatter becomes an all-to-all (hillclimb lever).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.blocks import init_linear, init_mlp, linear, mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": init_linear(kr, d, E, False, dtype),
+        "w_gate": (jax.random.normal(k1, (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(k2, (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(k3, (E, f, d), jnp.float32) / math.sqrt(f)).astype(dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks, d, m.d_ff_expert * m.num_shared_experts, "swiglu",
+                               False, dtype)
+    return p
+
+
+def _capacity(m: MoEConfig, num_tokens: int) -> int:
+    return max(1, int(math.ceil(m.top_k * num_tokens * m.capacity_factor / m.num_experts)))
+
+
+def route(params, m: MoEConfig, x2d) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (expert_idx (T,k), gates (T,k), aux_loss ())."""
+    logits = linear(params["router"], x2d).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss.
+    me = probs.mean(0)  # (E,)
+    ce = jnp.zeros((m.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / idx.size)
+    aux = m.num_experts * jnp.sum(me * ce)
+    return idx, gates.astype(x2d.dtype), aux
+
+
+# Tokens are processed in chunks of this size: dispatch buffers and the
+# position-in-expert cumsum stay O(chunk * E) instead of O(T * E), which is
+# what makes a 1M-token kimi-k2 step lowerable. Capacity is per-chunk
+# (slightly different drop semantics than global capacity; documented).
+MOE_CHUNK = 4096
+
+
+def _moe_chunk(params, cfg: ModelConfig, x2d) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch + expert compute + combine for one token chunk.
+
+    Routing/positions/capacity are computed per GROUP (cfg.routing_groups,
+    aligned with the data shards): the position-in-expert cumsum is then
+    embarrassingly parallel over the sharded group axis and never crosses a
+    shard (§Perf kimi iter B4). G=1 recovers global GShard capacity.
+    """
+    m = cfg.moe
+    T, d = x2d.shape
+    E = m.num_experts
+    G = cfg.routing_groups if (cfg.routing_groups > 1
+                               and T % cfg.routing_groups == 0) else 1
+    Tg = T // G
+    Cg = _capacity(m, Tg)
+    k = m.top_k
+    xg = x2d.reshape(G, Tg, d)
+
+    def route_group(xg_i):
+        idx, gates, aux = route(params, m, xg_i)  # (Tg, k)
+        onehot = jax.nn.one_hot(idx.reshape(-1), E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos = jnp.take_along_axis(pos, idx.reshape(-1, 1), axis=1).reshape(Tg, k)
+        keep = pos < Cg
+        slot = jnp.where(keep, idx * Cg + pos, E * Cg)  # group-local slot
+        # scatter (each kept slot unique -> add == set); slack row absorbs drops
+        buf = jnp.zeros((E * Cg + 1, d), x2d.dtype)
+        xk = jnp.broadcast_to(xg_i[:, None, :], (Tg, k, d)).reshape(Tg * k, d)
+        buf = buf.at[slot.reshape(-1)].add(xk)
+        return buf[: E * Cg].reshape(E, Cg, d), slot, gates, keep, aux
+
+    xe_g, slot, gates, keep, aux = jax.vmap(route_group)(xg)  # (G,E,Cg,d)
+    # group-major -> expert-major: THE all-to-all (tokens move to experts)
+    xe = jnp.moveaxis(xe_g, 0, 1).reshape(E, G * Cg, d)
+    if cfg.expert_axis is not None:
+        # expert parallelism: pin dispatched tokens to the expert shard with
+        # d kept model-sharded; expert einsums below contract d locally.
+        from jax.sharding import PartitionSpec as _P
+
+        xe = jax.lax.with_sharding_constraint(
+            xe, _P(cfg.expert_axis, None, "model"))
+
+    # expert FFN (swiglu) — batched over experts
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(x2d.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x2d.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                    params["w_down"].astype(x2d.dtype))
+    if cfg.expert_axis is not None:
+        from jax.sharding import PartitionSpec as _P
+
+        ye = jax.lax.with_sharding_constraint(
+            ye, _P(cfg.expert_axis, None, "model"))
+
+    # combine: back to group-major, gather per group, weight by gates
+    ye_g = jnp.moveaxis(ye.reshape(E, G, Cg, d), 1, 0)  # (G,E,Cg,d)
+
+    def combine_group(ye_i, slot_i, gates_i, keep_i):
+        flat = jnp.concatenate(
+            [ye_i.reshape(E * Cg, d), jnp.zeros((1, d), x2d.dtype)], 0)
+        yk = flat[slot_i.reshape(-1)].reshape(Tg, k, d)
+        w = gates_i.astype(x2d.dtype) * keep_i.astype(x2d.dtype)
+        return jnp.einsum("tkd,tk->td", yk, w)
+
+    y = jax.vmap(combine_group)(ye_g, slot, gates, keep).reshape(T, d)
+
+    if m.num_shared_experts:
+        y = y + mlp(params["shared"], x2d, "swiglu")
+    return y, aux.mean()
+
+
+# Global token count per chunk. Chunking is along the SEQUENCE axis so the
+# batch axis (sharded over "data"/clients) never crosses a scan step — a
+# token-major chunking would serialize data parallelism (each scan step
+# would gather one shard's tokens onto every device; §Perf kimi iter 1).
+MOE_GLOBAL_CHUNK = 65536
+
+
+def moe_apply(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    if T <= MOE_GLOBAL_CHUNK:
+        y, aux = _moe_chunk(params, cfg, x.reshape(T, d))
+        return y.reshape(B, S, d), aux
+    seq_chunk = max(1, MOE_GLOBAL_CHUNK // B)
+    n_chunks = -(-S // seq_chunk)
+    pad = n_chunks * seq_chunk - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    # (n_chunks, B, seq_chunk, d): batch sharding is preserved per step
+    xc = jnp.moveaxis(xp.reshape(B, n_chunks, seq_chunk, d), 1, 0)
+
+    def body(_, xi):
+        y, aux = _moe_chunk(params, cfg, xi.reshape(B * seq_chunk, d))
+        return None, (y.reshape(B, seq_chunk, d), aux)
+
+    _, (yc, aux) = jax.lax.scan(body, None, xc)
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, n_chunks * seq_chunk, d)[:, :S]
+    return y, aux.mean()
+
+
+def moe_flops_per_token(cfg: ModelConfig) -> int:
+    """Useful (active-param) FLOPs per token, excluding dropped-token slack."""
+    m = cfg.moe
+    f = 2 * 3 * cfg.d_model * m.d_ff_expert * m.top_k
+    f += 2 * cfg.d_model * m.num_experts  # router
+    if m.num_shared_experts:
+        f += 2 * 3 * cfg.d_model * m.d_ff_expert * m.num_shared_experts
+    return f

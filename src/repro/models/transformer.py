@@ -1,0 +1,234 @@
+"""Decoder stack: layer plans, scan-over-layers, train/prefill/decode.
+
+Layers are grouped into maximal runs with identical structure ("specs");
+each group is executed with ``lax.scan`` over stacked parameters so HLO size
+is O(groups), not O(layers) — essential for compiling 61-layer trillion-
+parameter configs 80 times in the dry-run matrix.
+
+A "spec" is (mixer, ffn) with mixer in {attn, ssm} and ffn in
+{dense, moe, none}. Hybrids (jamba) produce a periodic spec pattern that
+becomes one scan group with a multi-sublayer body.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.blocks import init_mlp, init_rmsnorm, mlp, rmsnorm
+
+Spec = Tuple[str, str]  # (mixer, ffn)
+
+
+def layer_specs(cfg: ModelConfig) -> List[Spec]:
+    out = []
+    for i in range(cfg.num_layers):
+        mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+        if cfg.arch_type == "ssm":
+            ffn = "none"
+        else:
+            ffn = "moe" if cfg.is_moe_layer(i) else "dense"
+        out.append((mixer, ffn))
+    return out
+
+
+@dataclass(frozen=True)
+class LayerGroup:
+    repeat: int  # scan length
+    period: Tuple[Spec, ...]  # sublayer specs within one scan step
+
+
+def group_specs(specs: Sequence[Spec], max_period: int = 8) -> List[LayerGroup]:
+    """Greedy: peel non-periodic prefix layers, then one periodic scan group."""
+    n = len(specs)
+    for prefix in range(0, min(3, n)):
+        rest = specs[prefix:]
+        for p in range(1, max_period + 1):
+            if len(rest) % p:
+                continue
+            if all(rest[i] == rest[i % p] for i in range(len(rest))):
+                groups = [LayerGroup(1, (s,)) for s in specs[:prefix]]
+                groups.append(LayerGroup(len(rest) // p, tuple(rest[:p])))
+                return groups
+    return [LayerGroup(1, (s,)) for s in specs]  # fallback: no scan
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg: ModelConfig, spec: Spec, dtype):
+    mixer, ffn = spec
+    p = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    k1, k2 = jax.random.split(key)
+    if mixer == "attn":
+        p["attn"] = attn_mod.init_attention(k1, cfg, dtype)
+    else:
+        p["ssm"] = ssm_mod.init_mamba2(k1, cfg, dtype)
+    if ffn != "none" and not (cfg.parallel_block and mixer == "attn"):
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+    if ffn == "dense":
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, cfg.mlp_bias, dtype)
+    elif ffn == "moe":
+        p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    return p
+
+
+def init_groups(key, cfg: ModelConfig, groups: Sequence[LayerGroup], dtype):
+    """Returns a list of stacked param trees, one per group."""
+    out = []
+    for g in groups:
+        key, sub = jax.random.split(key)
+
+        def one_layer(k):
+            ks = jax.random.split(k, len(g.period))
+            return tuple(_init_sublayer(ks[i], cfg, s, dtype)
+                         for i, s in enumerate(g.period))
+
+        keys = jax.random.split(sub, g.repeat)
+        out.append(jax.vmap(one_layer)(keys))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _sublayer_train(cfg, spec, p, x, positions, impl):
+    mixer, ffn = spec
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.parallel_block and mixer == "attn" and ffn == "dense":
+        a = attn_mod.attend_train(p["attn"], cfg, h, positions, impl)
+        m = mlp(p["mlp"], h, cfg.mlp_act)
+        return x + a + m, aux
+    if mixer == "attn":
+        x = x + attn_mod.attend_train(p["attn"], cfg, h, positions, impl)
+    else:
+        x = x + ssm_mod.mamba2_train(p["ssm"], cfg, h, use_kernel=(impl == "flash"))
+    if ffn == "dense":
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+    elif ffn == "moe":
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, rmsnorm(p["norm2"], x, cfg.norm_eps))
+        x = x + y
+    return x, aux
+
+
+def apply_groups_train(params_list, cfg: ModelConfig, groups, x, positions,
+                       impl: str = "jnp", remat: bool = True):
+    """Full-sequence forward through all groups. Returns (x, aux_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for g, gp in zip(groups, params_list):
+
+        def body(carry, layer_p):
+            xc, aux = carry
+            for i, s in enumerate(g.period):
+                xc, a = _sublayer_train(cfg, s, layer_p[i], xc, positions, impl)
+                aux = aux + a
+            return (xc, aux), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), gp)
+    return x, aux_total
+
+
+def _sublayer_prefill(cfg, spec, p, x, positions, max_len, impl):
+    mixer, ffn = spec
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.parallel_block and mixer == "attn" and ffn == "dense":
+        a, cache = attn_mod.attend_prefill(p["attn"], cfg, h, positions, max_len, impl)
+        m = mlp(p["mlp"], h, cfg.mlp_act)
+        return x + a + m, cache
+    if mixer == "attn":
+        out, cache = attn_mod.attend_prefill(p["attn"], cfg, h, positions, max_len, impl)
+        x = x + out
+    else:
+        out, cache = ssm_mod.mamba2_prefill(p["ssm"], cfg, h, use_kernel=(impl == "flash"))
+        x = x + out
+    if ffn == "dense":
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+    elif ffn == "moe":
+        y, _ = moe_mod.moe_apply(p["moe"], cfg, rmsnorm(p["norm2"], x, cfg.norm_eps))
+        x = x + y
+    return x, cache
+
+
+def apply_groups_prefill(params_list, cfg, groups, x, positions, max_len,
+                         impl: str = "jnp"):
+    """Returns (x, caches) — caches: list (per group) of stacked per-layer trees."""
+    caches = []
+    for g, gp in zip(groups, params_list):
+
+        def body(xc, layer_p):
+            layer_caches = []
+            for i, s in enumerate(g.period):
+                xc, c = _sublayer_prefill(cfg, s, layer_p[i], xc, positions,
+                                          max_len, impl)
+                layer_caches.append(c)
+            return xc, tuple(layer_caches)
+
+        x, gc = jax.lax.scan(body, x, gp)
+        caches.append(gc)
+    return x, caches
+
+
+def _sublayer_decode(cfg, spec, p, x, cache, impl):
+    mixer, ffn = spec
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.parallel_block and mixer == "attn" and ffn == "dense":
+        a, cache = attn_mod.attend_decode(p["attn"], cfg, h, cache, impl)
+        m = mlp(p["mlp"], h, cfg.mlp_act)
+        return x + a + m, cache
+    if mixer == "attn":
+        out, cache = attn_mod.attend_decode(p["attn"], cfg, h, cache, impl)
+        x = x + out
+    else:
+        out, cache = ssm_mod.mamba2_decode(p["ssm"], cfg, h, cache)
+        x = x + out
+    if ffn == "dense":
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+    elif ffn == "moe":
+        y, _ = moe_mod.moe_apply(p["moe"], cfg, rmsnorm(p["norm2"], x, cfg.norm_eps))
+        x = x + y
+    return x, cache
+
+
+def apply_groups_decode(params_list, cfg, groups, x, caches, impl: str = "jnp"):
+    """One-token decode. Returns (x, new_caches)."""
+    new_caches = []
+    for g, gp, gc in zip(groups, params_list, caches):
+
+        def body(xc, scanned):
+            layer_p, layer_c = scanned
+            outs = []
+            for i, s in enumerate(g.period):
+                xc, c = _sublayer_decode(cfg, s, layer_p[i], xc, layer_c[i], impl)
+                outs.append(c)
+            return xc, tuple(outs)
+
+        x, nc = jax.lax.scan(body, x, (gp, gc))
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def init_group_caches(cfg: ModelConfig, groups, batch: int, max_len: int, dtype):
+    """Cache skeleton matching apply_groups_decode's expectations."""
+    caches = []
+    for g in groups:
+        per_layer = []
+        for s in g.period:
+            if s[0] == "attn":
+                per_layer.append(attn_mod.init_cache(cfg, batch, max_len, dtype))
+            else:
+                per_layer.append(ssm_mod.init_ssm_cache(cfg, batch, dtype))
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g.repeat,) + a.shape), tuple(per_layer))
+        caches.append(stacked)
+    return caches

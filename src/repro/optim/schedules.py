@@ -1,0 +1,29 @@
+"""Learning-rate schedules as step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cd = cosine_decay(lr, max(1, total_steps - warmup), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.clip(s / jnp.maximum(warmup, 1), 0.0, 1.0)
+        return jnp.where(s < warmup, lr * w, cd(step - warmup))
+
+    return fn

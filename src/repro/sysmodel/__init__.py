@@ -1,0 +1,4 @@
+from repro.sysmodel.comm import CommParams, downlink_rate, uplink_rate  # noqa: F401
+from repro.sysmodel.comp import CompParams  # noqa: F401
+from repro.sysmodel.latency import LatencyModel, round_latency  # noqa: F401
+from repro.sysmodel.privacy import privacy_leakage, privacy_ok  # noqa: F401

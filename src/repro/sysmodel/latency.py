@@ -1,0 +1,50 @@
+"""Per-round latency (§IV eq. 29):
+
+l_t = max_n { l^U + l^F + l^s } + max_n { l^D + l^B }
+
+χ_t (uplink + client FP + server compute) and ψ_t (downlink + client BP)
+are the auxiliary variables of P2 (eq. 31).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from repro.sysmodel.comm import CommParams, downlink_rate, uplink_rate
+from repro.sysmodel.comp import (
+    CompParams,
+    client_bp_latency,
+    client_fp_latency,
+    server_latency,
+)
+
+
+@dataclass
+class LatencyModel:
+    comm: CommParams
+    comp: CompParams
+    smashed_bits: float  # X_t(v) in bits
+    n_samples_per_client: float  # D^n (mini-batch per round)
+
+    def chi_terms(self, bw, p_tx, gains, f_client, f_server) -> np.ndarray:
+        """Per-client uplink + client-FP + server latency (constraint 31b)."""
+        r_up = uplink_rate(bw, p_tx, gains, self.comm)
+        l_u = self.smashed_bits / np.maximum(r_up, 1e-9)
+        l_f = client_fp_latency(self.n_samples_per_client, self.comp, f_client)
+        l_s = server_latency(self.n_samples_per_client, self.comp, f_server)
+        return l_u + l_f + l_s
+
+    def psi_terms(self, gains, f_client) -> np.ndarray:
+        """Per-client downlink + client-BP latency (constraint 31c)."""
+        r_dn = downlink_rate(gains, self.comm)
+        l_d = self.smashed_bits / np.maximum(r_dn, 1e-9)
+        l_b = client_bp_latency(self.n_samples_per_client, self.comp, f_client)
+        return l_d + l_b
+
+
+def round_latency(model: LatencyModel, bw, p_tx, gains, f_client, f_server) -> Dict[str, float]:
+    chi = float(np.max(model.chi_terms(bw, p_tx, gains, f_client, f_server)))
+    psi = float(np.max(model.psi_terms(gains, f_client)))
+    return {"chi": chi, "psi": psi, "total": chi + psi}

@@ -1,0 +1,126 @@
+"""CCC tests: convex P2.1 solver properties, DDQN learning, privacy model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ccc.convex import latency_fixed_alloc, solve_p21
+from repro.ccc.ddqn import DDQNAgent, DDQNConfig
+from repro.ccc.env import CuttingPointEnv, cnn_env_config
+from repro.sysmodel.comm import CommParams, path_loss_gain, uplink_rate
+from repro.sysmodel.comp import CompParams
+from repro.sysmodel.privacy import min_cut_for_privacy, privacy_ok
+
+
+def _gains(n, seed=0):
+    rng = np.random.RandomState(seed)
+    return path_loss_gain(rng.uniform(0.05, 0.5, n), rng)
+
+
+class TestConvexSolver:
+    def test_respects_budgets(self):
+        g = _gains(10)
+        r = solve_p21(g, 16 * 1568 * 32, 16, CommParams(), CompParams())
+        assert r.feasible
+        assert r.bandwidth.sum() <= 20e6 * (1 + 1e-6)
+        assert r.f_server.sum() <= 100e9 * (1 + 1e-6)
+
+    def test_beats_fixed_allocation(self):
+        """Optimal allocation must not be worse than equal split."""
+        for seed in range(5):
+            g = _gains(10, seed)
+            comm, comp = CommParams(), CompParams()
+            opt = solve_p21(g, 16 * 1568 * 32, 16, comm, comp)
+            fix = latency_fixed_alloc(g, 16 * 1568 * 32, 16, comm, comp)
+            assert opt.chi <= fix["chi"] * (1 + 1e-3), (opt.chi, fix["chi"])
+
+    def test_chi_meets_per_client_constraints(self):
+        """KKT feasibility: χ* upper-bounds every client's latency chain."""
+        from repro.sysmodel.comp import client_fp_latency
+
+        g = _gains(8, 3)
+        comm, comp = CommParams(), CompParams()
+        X = 16 * 784 * 32
+        r = solve_p21(g, X, 16, comm, comp)
+        rate = uplink_rate(r.bandwidth, r.p_tx, g, comm)
+        l_u = X / rate
+        l_f = client_fp_latency(16, comp, r.f_client)
+        l_s = 16 * (comp.server_fwd_flops + comp.server_bwd_flops) / r.f_server
+        chain = l_u + l_f + l_s
+        assert np.all(chain <= r.chi * (1 + 1e-2)), (chain.max(), r.chi)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 200), n=st.integers(2, 12))
+    def test_property_feasible_and_bounded(self, seed, n):
+        g = _gains(n, seed)
+        r = solve_p21(g, 8 * 784 * 32, 8, CommParams(), CompParams())
+        assert r.feasible
+        assert 0 < r.chi < 1e4
+        assert 0 < r.psi < 1e4
+
+    def test_more_bandwidth_helps(self):
+        """Fig. 8 monotonicity: latency decreases with total bandwidth."""
+        g = _gains(10, 1)
+        comp = CompParams()
+        X = 16 * 1568 * 32
+        chis = []
+        for bw in (5e6, 10e6, 20e6, 40e6):
+            r = solve_p21(g, X, 16, CommParams(total_bandwidth=bw), comp)
+            chis.append(r.total)
+        assert all(chis[i] >= chis[i + 1] - 1e-6 for i in range(len(chis) - 1))
+
+
+class TestPrivacy:
+    def test_threshold(self):
+        assert privacy_ok(1000, 10000, 0.05)
+        assert not privacy_ok(100, 100000, 0.05)
+
+    def test_min_cut_monotone(self):
+        phis = [100, 1000, 10000, 50000]
+        v = min_cut_for_privacy(phis, 100000, 0.05)
+        assert v == 3  # log1p(10000/100000)=0.0953 >= 0.05
+
+    def test_env_penalizes_privacy_violation(self):
+        env = CuttingPointEnv(cnn_env_config(horizon=3, batch=8, epsilon=0.05))
+        env.reset()
+        # v=1 (tiny client model) must violate eps=0.05 for the light CNN
+        _, r, _, info = env.step(0)
+        assert not info["privacy_ok"]
+        assert r == -env.cfg.penalty
+
+
+class TestDDQN:
+    def test_learns_trivial_bandit(self):
+        """Sanity: DDQN must learn a 2-arm bandit (reward 1 for arm 1)."""
+        cfg = DDQNConfig(state_dim=2, n_actions=2, eps_decay_steps=300,
+                         target_update=50, lr=3e-3, seed=0)
+        agent = DDQNAgent(cfg)
+        rng = np.random.RandomState(0)
+        s = np.zeros(2, np.float32)
+        for t in range(600):
+            a = agent.act(s)
+            r = 1.0 if a == 1 else 0.0
+            agent.observe(s, a, r, s, True)
+        assert agent.act(s, greedy=True) == 1
+
+    def test_alg1_improves_over_random(self):
+        """Algorithm 1's greedy policy should beat the random-cut policy."""
+        from repro.ccc.strategy import (fixed_cut_policy_cost,
+                                        random_cut_policy_cost, run_algorithm1)
+
+        env = CuttingPointEnv(cnn_env_config(horizon=4, batch=8,
+                                             epsilon=0.001, seed=2))
+        res = run_algorithm1(env, episodes=40)
+        # greedy rollout cost
+        env2 = CuttingPointEnv(cnn_env_config(horizon=4, batch=8,
+                                              epsilon=0.001, seed=2))
+        greedy_cost = 0.0
+        s = env2.reset()
+        done = False
+        while not done:
+            a = res.agent.act(s, greedy=True)
+            s, r, done, _ = env2.step(a)
+            greedy_cost += -r
+        env3 = CuttingPointEnv(cnn_env_config(horizon=4, batch=8,
+                                              epsilon=0.001, seed=2))
+        rand = random_cut_policy_cost(env3, rounds=4, seed=0)
+        assert greedy_cost <= rand["cost"] * 1.15  # allow slack, short training

@@ -1,0 +1,113 @@
+"""Unit + property tests for the paper's core op (eq. 5) and the SFL-GA
+protocol invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gradagg import client_param_average, gradagg, uniform_rho
+
+
+def test_forward_identity():
+    x = jnp.arange(24, dtype=jnp.float32).reshape(4, 2, 3)
+    rho = uniform_rho(4)
+    np.testing.assert_array_equal(np.asarray(gradagg(x, rho)), np.asarray(x))
+
+
+def test_backward_aggregates_and_broadcasts():
+    n = 4
+    rho = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    x = jnp.ones((n, 5), jnp.float32)
+    # loss = sum(w_n * gradagg(x)_n) with distinct per-client weights w_n
+    w = jnp.arange(1.0, n + 1)[:, None]
+
+    def loss(x):
+        return jnp.sum(gradagg(x, rho) * w)
+
+    g = jax.grad(loss)(x)
+    # upstream cotangent for client n is w_n; aggregated = Σ ρ_n w_n
+    expected = float(jnp.sum(rho * jnp.arange(1.0, n + 1)))
+    np.testing.assert_allclose(np.asarray(g), expected, rtol=1e-6)
+    # every client received the SAME broadcast gradient
+    assert np.allclose(np.asarray(g), np.asarray(g)[0:1], atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 6), d=st.integers(1, 8), seed=st.integers(0, 999))
+def test_property_bwd_is_rho_weighted_mean(n, d, seed):
+    rng = np.random.RandomState(seed)
+    rho = rng.dirichlet([1.0] * n).astype(np.float32)
+    ct = rng.randn(n, d).astype(np.float32)  # upstream cotangents
+    x = jnp.zeros((n, d), jnp.float32)
+
+    def loss(x):
+        return jnp.sum(gradagg(x, jnp.asarray(rho)) * jnp.asarray(ct))
+
+    g = np.asarray(jax.grad(loss)(x))
+    agg = (rho[:, None] * ct).sum(0)
+    for i in range(n):
+        np.testing.assert_allclose(g[i], agg, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 5), seed=st.integers(0, 999))
+def test_property_client_average_preserves_weighted_mean(n, seed):
+    rng = np.random.RandomState(seed)
+    rho = jnp.asarray(rng.dirichlet([1.0] * n).astype(np.float32))
+    p = {"w": jnp.asarray(rng.randn(n, 3, 2).astype(np.float32))}
+    avg = client_param_average(p, rho)
+    # all clients equal after averaging
+    a = np.asarray(avg["w"])
+    assert np.allclose(a, a[0:1], atol=1e-6)
+    # and equal to the ρ-weighted mean
+    expected = np.einsum("n,nij->ij", np.asarray(rho), np.asarray(p["w"]))
+    np.testing.assert_allclose(a[0], expected, rtol=1e-5, atol=1e-6)
+
+
+def test_identical_data_makes_sflga_equal_sfl():
+    """With identical data on every client, per-client cotangents equal the
+    aggregate, so SFL-GA == SFL == PSL exactly (sanity anchor for Thm 2:
+    Γ -> 0 as client heterogeneity vanishes)."""
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.core.simulator import FedSimulator, SimConfig
+
+    rng = np.random.RandomState(0)
+    x = rng.rand(1, 1, 8, 28, 28, 1).astype(np.float32)
+    y = rng.randint(0, 10, (1, 1, 8)).astype(np.int32)
+    x = np.repeat(x, 4, axis=0)
+    y = np.repeat(y, 4, axis=0)
+    outs = {}
+    for scheme in ("sfl_ga", "sfl", "psl"):
+        sim = FedSimulator(LIGHT_CONFIG,
+                           SimConfig(scheme=scheme, cut=2, n_clients=4,
+                                     batch=8, lr=0.1), seed=0)
+        for _ in range(3):
+            sim.run_round(x, y)
+        outs[scheme] = [np.asarray(l) for l in jax.tree.leaves(sim.state)]
+    for a, b in zip(outs["sfl_ga"], outs["sfl"]):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    for a, b in zip(outs["sfl_ga"], outs["psl"]):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_drift_grows_with_cut():
+    """Assumption 4: the SFL-GA client drift (Γ proxy) is larger for larger
+    client-side models (deeper cut), under heterogeneous client data."""
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.core.simulator import FedSimulator, SimConfig
+
+    rng = np.random.RandomState(0)
+    drifts = {}
+    for cut in (1, 3):
+        sim = FedSimulator(LIGHT_CONFIG,
+                           SimConfig(scheme="sfl_ga", cut=cut, n_clients=4,
+                                     batch=8, lr=0.1), seed=0)
+        d = 0.0
+        for r in range(5):
+            x = rng.rand(4, 1, 8, 28, 28, 1).astype(np.float32)
+            y = rng.randint(0, 10, (4, 1, 8)).astype(np.int32)
+            m = sim.run_round(x, y)
+            d = m["client_drift"]
+        drifts[cut] = d
+    assert drifts[3] > drifts[1]

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned family (2 layers, d_model<=256, <=4 experts) runs one forward and
+one SFL-GA train step on CPU; output shapes checked, no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config, reduced_config
+from repro.core import algorithms as alg
+from repro.models import encdec, lm
+from repro.optim import make_optimizer
+
+DECODER_ARCHS = [a for a in ARCH_IDS if get_config(a).arch_type != "audio"]
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    plan = lm.build_plan(cfg, cut=1)
+    params0 = lm.init_lm(jax.random.key(0), plan, jnp.float32)
+    N, b, S = 2, 2, 32
+    split = alg.split_lm_params(params0, N)
+    tcfg = TrainConfig(model=cfg, algo="sfl_ga", cut_layer=1,
+                       compute_dtype="float32", remat=False)
+    opt = make_optimizer("sgd", 0.05)
+    step = jax.jit(alg.make_train_step(plan, tcfg, opt, N))
+    opt_state = opt.init(split)
+    rng = np.random.RandomState(0)
+    if cfg.arch_type == "vlm":
+        tokens = jnp.asarray(rng.randn(N, b, S, cfg.d_model), jnp.float32)
+    else:
+        tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (N, b, S)))
+    batch = {"tokens": tokens,
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (N, b, S)))}
+    params, opt_state, m = step(split, opt_state, batch)
+    assert np.isfinite(float(m["loss"])), arch
+    l2 = params, None
+    for x in jax.tree.leaves(params):
+        assert bool(jnp.all(jnp.isfinite(x))), arch
+    # one more step must reduce or at least produce finite loss
+    params, opt_state, m2 = step(params, opt_state, batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m["loss"]) + 1.0
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_serve_shapes(arch):
+    cfg = reduced_config(get_config(arch))
+    plan = lm.build_plan(cfg, 0)
+    params = lm.init_lm(jax.random.key(0), plan, jnp.float32)
+    B, S = 2, 32
+    rng = np.random.RandomState(0)
+    if cfg.arch_type == "vlm":
+        emb = jnp.asarray(rng.randn(B, S, cfg.d_model), jnp.float32)
+        logits, caches = lm.prefill(params, plan, inputs_embeds=emb,
+                                    max_len=S + 4, dtype=jnp.float32)
+    else:
+        toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)))
+        logits, caches = lm.prefill(params, plan, toks, max_len=S + 4,
+                                    dtype=jnp.float32)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, caches = lm.decode_step(params, plan, tok, caches,
+                                     dtype=jnp.float32)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_whisper_smoke():
+    cfg = reduced_config(get_config("whisper-tiny"))
+    N, b, S = 2, 2, 16
+    params = jax.eval_shape(
+        lambda: encdec.split_whisper_params(jax.random.key(0), cfg, 1,
+                                            jnp.float32))
+    # materialize for real
+    p = encdec.split_whisper_params(jax.random.key(0), cfg, 1, jnp.float32)
+    import repro.launch.specs as specs
+
+    stacked = specs._whisper_split_stacked(cfg, 1, N, jnp.float32)
+    tcfg = TrainConfig(model=cfg, algo="sfl_ga", cut_layer=1,
+                       compute_dtype="float32", remat=False)
+    opt = make_optimizer("sgd", 0.05)
+    step = jax.jit(alg.make_whisper_train_step(cfg, tcfg, opt, N))
+    rng = np.random.RandomState(0)
+    batch = {
+        "frame_embeds": jnp.asarray(
+            rng.randn(N, b, cfg.encoder.num_frames, cfg.d_model), jnp.float32),
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (N, b, S))),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (N, b, S))),
+    }
+    opt_state = opt.init(stacked)
+    params2, _, m = step(stacked, opt_state, batch)
+    assert np.isfinite(float(m["loss"]))
+    for x in jax.tree.leaves(params2):
+        assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_whisper_serve_smoke():
+    cfg = reduced_config(get_config("whisper-tiny"))
+    params = encdec.init_whisper(jax.random.key(0), cfg, jnp.float32)
+    rng = np.random.RandomState(0)
+    fe = jnp.asarray(rng.randn(2, cfg.encoder.num_frames, cfg.d_model),
+                     jnp.float32)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 8)))
+    logits, caches = encdec.whisper_prefill(params, cfg, fe, toks, 16,
+                                            dtype=jnp.float32)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, _ = encdec.whisper_decode_step(params, cfg, tok, caches,
+                                            dtype=jnp.float32)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
