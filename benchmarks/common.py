@@ -30,7 +30,9 @@ def fed_setup(dataset: str = "mnist", n: int = 2400, n_clients: int = 10,
 
 def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
                n_clients: int = 10, batch: int = 16, tau: int = 1,
-               lr: float = 0.05, eval_every: int = 20, seed: int = 0) -> Dict:
+               lr: float = 0.05, eval_every: int = 20, seed: int = 0,
+               uplink_codec: str = "fp32",
+               downlink_codec: str = "fp32") -> Dict:
     """Train one scheme; returns accuracy curve + comm accounting."""
     from repro.configs.paper_cnn import LIGHT_CONFIG
     from repro.core.simulator import FedSimulator, SimConfig
@@ -39,7 +41,9 @@ def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
     train, test, parts, rho = fed_setup(dataset, n_clients=n_clients, seed=seed)
     sim = FedSimulator(LIGHT_CONFIG,
                        SimConfig(scheme=scheme, cut=cut, n_clients=n_clients,
-                                 batch=batch, tau=tau, lr=lr),
+                                 batch=batch, tau=tau, lr=lr,
+                                 uplink_codec=uplink_codec,
+                                 downlink_codec=downlink_codec),
                        rho=rho, seed=seed)
     rng = np.random.RandomState(seed)
     accs, rounds_axis, losses, drifts = [], [], [], []
@@ -62,6 +66,7 @@ def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
     tail = accs[-3:] if len(accs) >= 3 else accs
     return {"scheme": scheme, "cut": cut, "accs": accs, "rounds": rounds_axis,
             "losses": losses, "drifts": drifts, "comm": cb,
+            "comm_bits": sim.comm_bits_per_round(),
             "final_acc": float(np.mean(tail))}
 
 

@@ -1,0 +1,44 @@
+"""Fig. 9 (extension) — accuracy vs cut-layer bit-width.
+
+Sweeps the transport codec on SFL-GA's uplink+downlink at a fixed cut and
+reports final accuracy against per-round traffic. The claim under test:
+int8 (≈3.9x smaller payloads) matches fp32 accuracy within noise, int4
+costs a little accuracy for ≈7.8x, and the codec saving multiplies the
+scheme-level saving of Fig. 4 (aggregation-broadcast vs unicast).
+"""
+from __future__ import annotations
+
+from benchmarks.common import FULL, run_scheme
+
+CODECS = ("fp32", "bf16", "fp8", "int8", "int4")
+
+
+def run(dataset: str = "mnist", rounds: int = None, cut: int = 2):
+    rounds = rounds or (150 if FULL else 60)
+    out = []
+    base_bits = None
+    for codec in CODECS:
+        r = run_scheme("sfl_ga", cut, rounds, dataset,
+                       uplink_codec=codec, downlink_codec=codec)
+        bits = r["comm_bits"]["total_bits"]
+        if base_bits is None:
+            base_bits = bits
+        out.append({"codec": codec, "final_acc": r["final_acc"],
+                    "kb_per_round": bits / 8e3,
+                    "ratio_vs_fp32": base_bits / bits,
+                    "curve": list(zip(r["rounds"], r["accs"]))})
+    return out
+
+
+def main():
+    datasets = ["mnist", "fmnist"] if FULL else ["mnist"]
+    for ds in datasets:
+        print(f"# fig9 dataset={ds} (sfl_ga, cut=2)")
+        for row in run(ds):
+            print(f"  {row['codec']:>5}: final_acc={row['final_acc']:.3f} "
+                  f"{row['kb_per_round']:8.1f} kB/round "
+                  f"({row['ratio_vs_fp32']:.2f}x vs fp32)")
+
+
+if __name__ == "__main__":
+    main()

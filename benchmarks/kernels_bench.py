@@ -41,6 +41,17 @@ def run():
     rho = jnp.full((8,), 0.125)
     rows.append(("grad_agg_ref_8x1024x512", _time(
         jax.jit(lambda a, b: ops.grad_agg(a, b, backend="jnp")), g, rho)))
+
+    # cut-layer codec kernels (jnp oracle backend; the Pallas kernels run
+    # the same math fused on TPU)
+    for bits in (8, 4):
+        rows.append((f"quantize_int{bits}_ref_8x1024x512", _time(
+            jax.jit(lambda a, b=bits: ops.quantize(a, seed=0, bits=b,
+                                                   backend="jnp")), g)))
+        q, s = ops.quantize(g, seed=0, bits=bits, backend="jnp")
+        rows.append((f"dequant_agg_int{bits}_ref_8x1024x512", _time(
+            jax.jit(lambda a, b, c, bb=bits: ops.dequant_agg(
+                a, b, c, bits=bb, backend="jnp")), q, s, rho)))
     return rows
 
 

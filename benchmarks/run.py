@@ -97,6 +97,15 @@ def bench_roofline():
     return f"cells ok={len(ok)} skipped={len(sk)} err={len(er)} bottlenecks={bn}"
 
 
+def bench_fig9():
+    from benchmarks import fig9_accuracy_vs_bits as f
+
+    rows = {r["codec"]: r for r in f.run()}
+    return ("acc fp32=%.3f int8=%.3f int4=%.3f int8_ratio=%.2fx"
+            % (rows["fp32"]["final_acc"], rows["int8"]["final_acc"],
+               rows["int4"]["final_acc"], rows["int8"]["ratio_vs_fp32"]))
+
+
 def bench_kernels():
     from benchmarks import kernels_bench as f
 
@@ -114,6 +123,7 @@ def main() -> None:
     _bench("fig3_convergence_vs_cut", bench_fig3)
     _bench("fig4_comm_overhead", bench_fig4)
     _bench("fig5_latency_schemes", bench_fig5)
+    _bench("fig9_accuracy_vs_bits", bench_fig9)
 
 
 if __name__ == "__main__":

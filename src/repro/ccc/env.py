@@ -19,6 +19,7 @@ import numpy as np
 from repro.ccc.convex import AllocationResult, solve_p21
 from repro.sysmodel.comm import CommParams, path_loss_gain
 from repro.sysmodel.comp import CompParams, scale_by_cut
+from repro.sysmodel.payload import payload_bits, spec_for
 from repro.sysmodel.privacy import privacy_ok
 
 
@@ -38,10 +39,20 @@ class CuttingEnvConfig:
     bytes_per_elem: int = 4
     dist_km_range: Tuple[float, float] = (0.05, 0.5)
     seed: int = 0
+    # joint cut+codec action space (documented extension): X_t(v) bits
+    # become codec-dependent and the convergence term gains a
+    # quantization-distortion penalty gamma_q · D(codec), so the agent
+    # trades uplink latency against gradient fidelity. The default single
+    # fp32 codec reduces exactly to the paper's action space.
+    codecs: Tuple[str, ...] = ("fp32",)
+    gamma_q: float = 100.0
 
 
 class CuttingPointEnv:
-    """Gym-like environment; channel redrawn per round (block fading)."""
+    """Gym-like environment; channel redrawn per round (block fading).
+
+    Action = cut index × codec index: ``a = (v-1) * n_codecs + c`` picks
+    cutting point v and transport codec cfg.codecs[c] jointly."""
 
     def __init__(self, cfg: CuttingEnvConfig,
                  comm: Optional[CommParams] = None,
@@ -50,7 +61,8 @@ class CuttingPointEnv:
         self.comm = comm or CommParams()
         self.base_comp = comp or CompParams()
         self.rng = np.random.RandomState(cfg.seed)
-        self.n_actions = len(cfg.phis)
+        self.n_codecs = len(cfg.codecs)
+        self.n_actions = len(cfg.phis) * self.n_codecs
         self.state_dim = cfg.n_clients + 1
         self._dists = None
         self.reset()
@@ -74,22 +86,38 @@ class CuttingPointEnv:
         self.gains = self._draw_gains()
         return self._state()
 
-    def gamma_fn(self, v: int) -> float:
-        """Γ(φ_t(v)) — Assumption 4 instantiation."""
-        return self.cfg.gamma0 * self.cfg.phis[v - 1] / self.cfg.total_params
+    def gamma_fn(self, v: int, codec: str = "fp32") -> float:
+        """Γ(φ_t(v)) — Assumption 4 instantiation — plus the codec's
+        quantization-distortion penalty (zero for fp32)."""
+        base = self.cfg.gamma0 * self.cfg.phis[v - 1] / self.cfg.total_params
+        return base + self.cfg.gamma_q * spec_for(codec).distortion
 
-    def cost_terms(self, v: int) -> Tuple[float, float, float, AllocationResult]:
+    def smashed_bits(self, v: int, codec: str = "fp32") -> float:
+        """X_t(v) on the wire under ``codec`` (fp32 keeps the paper's
+        bytes_per_elem accounting)."""
+        elems = self.cfg.smashed_elems[v - 1] * self.cfg.batch
+        if codec == "fp32":
+            return elems * self.cfg.bytes_per_elem * 8
+        return payload_bits(codec, elems)
+
+    def decode_action(self, action: int) -> Tuple[int, str]:
+        """action -> (cutting point v, codec name)."""
+        v_idx, c_idx = divmod(int(action), self.n_codecs)
+        return v_idx + 1, self.cfg.codecs[c_idx]
+
+    def cost_terms(self, v: int, codec: str = "fp32",
+                   ) -> Tuple[float, float, float, AllocationResult]:
         cfg = self.cfg
         comp = scale_by_cut(self.base_comp, cfg.flop_fracs[v - 1])
-        X_bits = cfg.smashed_elems[v - 1] * cfg.batch * cfg.bytes_per_elem * 8
+        X_bits = self.smashed_bits(v, codec)
         alloc = solve_p21(self.gains, X_bits, cfg.batch, self.comm, comp)
-        return self.gamma_fn(v), alloc.chi, alloc.psi, alloc
+        return self.gamma_fn(v, codec), alloc.chi, alloc.psi, alloc
 
     def step(self, action: int):
-        """action ∈ [0, V-2] maps to v = action+1."""
+        """action ∈ [0, n_actions-1] decodes to (v, codec)."""
         cfg = self.cfg
-        v = action + 1
-        gamma, chi, psi, alloc = self.cost_terms(v)
+        v, codec = self.decode_action(action)
+        gamma, chi, psi, alloc = self.cost_terms(v, codec)
         ok = privacy_ok(cfg.phis[v - 1], cfg.total_params, cfg.epsilon)
         if ok and alloc.feasible:
             cost = cfg.w * gamma + chi + psi
@@ -102,7 +130,8 @@ class CuttingPointEnv:
         done = self.t >= cfg.horizon
         self.gains = self._draw_gains()
         return self._state(), float(reward), done, {
-            "v": v, "chi": chi, "psi": psi, "gamma": gamma,
+            "v": v, "codec": codec, "bits": self.smashed_bits(v, codec),
+            "chi": chi, "psi": psi, "gamma": gamma,
             "privacy_ok": ok, "latency": chi + psi}
 
 

@@ -15,7 +15,9 @@ from repro.ccc.env import CuttingPointEnv
 class CCCResult:
     episode_rewards: List[float]
     episode_latencies: List[float]
-    greedy_policy: List[int]  # chosen v per round of a greedy rollout
+    # greedy rollout decisions per round: v when the env has a single
+    # codec (paper-faithful action space), else (v, codec) pairs
+    greedy_policy: List
     agent: DDQNAgent
 
 
@@ -45,13 +47,14 @@ def run_algorithm1(env: CuttingPointEnv, episodes: int = 200,
         if log_every and (ep + 1) % log_every == 0:
             print(f"  episode {ep+1}/{episodes} reward {total_r:.2f} "
                   f"eps {agent.epsilon():.2f}")
-    # greedy rollout to expose the learned cutting-point policy
+    # greedy rollout to expose the learned cutting-point (+codec) policy
     s = env.reset()
     policy = []
     done = False
     while not done:
         a = agent.act(s, greedy=True)
-        policy.append(a + 1)
+        v, codec = env.decode_action(a)
+        policy.append(v if env.n_codecs == 1 else (v, codec))
         s, _, done, _ = env.step(a)
     return CCCResult(ep_rewards, ep_lat, policy, agent)
 
@@ -92,8 +95,8 @@ def random_cut_policy_cost(env: CuttingPointEnv, rounds: int = 20,
     env.reset()
     lat, cost = 0.0, 0.0
     for _ in range(rounds):
-        v = int(rng.randint(1, env.n_actions + 1))
-        gamma, chi, psi, _ = env.cost_terms(v)
+        v, codec = env.decode_action(int(rng.randint(env.n_actions)))
+        gamma, chi, psi, _ = env.cost_terms(v, codec)
         lat += chi + psi
         cost += env.cfg.w * gamma + chi + psi
         env.gains = env._draw_gains()

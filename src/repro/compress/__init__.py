@@ -1,0 +1,24 @@
+"""Smashed-data compression subsystem for the cut-layer boundary."""
+from repro.compress.channel import (
+    broadcast_channel,
+    client_seeds,
+    downlink_seed,
+    unicast_channel,
+    uplink_channel,
+)
+from repro.compress.codecs import (
+    CastCodec,
+    Codec,
+    IntQuantCodec,
+    PassthroughCodec,
+    Payload,
+    TopKCodec,
+    codec_names,
+    get_codec,
+)
+
+__all__ = [
+    "CastCodec", "Codec", "IntQuantCodec", "PassthroughCodec", "Payload",
+    "TopKCodec", "broadcast_channel", "client_seeds", "codec_names",
+    "downlink_seed", "get_codec", "unicast_channel", "uplink_channel",
+]

@@ -1,0 +1,57 @@
+"""The lossy cut-layer channel: one implementation of "who encodes with
+which seed" shared by every integration point.
+
+``core.gradagg.make_gradagg_compressed`` and the federated simulator both
+model the same wire — per-client uplink payloads, one broadcast (or N
+unicast) downlink payloads — and must stay bit-identical to each other.
+These helpers are that single source of truth:
+
+* client n encodes with ``seed + n·GOLDEN`` so stochastic rounding
+  decorrelates across clients;
+* downlink seeds are the uplink's XOR ``DOWNLINK_MIX`` so the two
+  directions of one round never share a rounding pattern;
+* identity codecs short-circuit to the input object, keeping fp32 runs
+  bit-for-bit identical to uncompressed ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GOLDEN = 0x9E3779B1  # per-client seed stride (odd => bijective mod 2^32)
+DOWNLINK_MIX = 0x5BD1E995  # uplink/downlink seed decorrelation
+
+
+def client_seeds(seed, n: int) -> jnp.ndarray:
+    """(N,) uint32 per-client seeds derived from one round seed."""
+    return jnp.asarray(seed, jnp.uint32) \
+        + jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(GOLDEN)
+
+
+def downlink_seed(seed):
+    return jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(DOWNLINK_MIX)
+
+
+def uplink_channel(codec, x: jnp.ndarray, seed) -> jnp.ndarray:
+    """Per-client lossy uplink: x is (N, ...); client n round-trips its
+    slice through ``codec`` with its own seed."""
+    if codec.is_identity:
+        return x
+    return jax.vmap(codec.roundtrip)(x, client_seeds(seed, x.shape[0]))
+
+
+def unicast_channel(codec, x: jnp.ndarray, seed) -> jnp.ndarray:
+    """Per-client lossy downlink (sfl/psl unicast cotangents)."""
+    if codec.is_identity:
+        return x
+    return jax.vmap(codec.roundtrip)(
+        x, client_seeds(downlink_seed(seed), x.shape[0]))
+
+
+def broadcast_channel(codec, agg: jnp.ndarray, seed) -> jnp.ndarray:
+    """Single-payload lossy downlink: the SFL-GA aggregate is encoded
+    once — compression composes with the scheme's one-broadcast
+    structure. ``agg`` has no client axis."""
+    if codec.is_identity:
+        return agg
+    return codec.roundtrip(agg, downlink_seed(seed))

@@ -45,6 +45,64 @@ def _bwd(res, g):
 gradagg.defvjp(_fwd, _bwd)
 
 
+def make_gradagg_compressed(uplink=None, downlink=None):
+    """Codec-aware variant of ``gradagg`` — the SFL-GA boundary operator
+    with a lossy transport on both directions of the cut:
+
+    * forward: each client's smashed data x^n crosses the uplink through
+      ``uplink`` (encode on the client, decode on the server), so the
+      server computes against the reconstruction;
+    * backward: the ρ-weighted aggregate s = Σ ρ^n s^n (eq. 5) crosses the
+      downlink through ``downlink`` ONCE — compression composes with the
+      scheme's single-broadcast structure, so bits-down shrink by the
+      codec ratio on top of the paper's N× saving.
+
+    Codecs are given by name ('fp32', 'bf16', 'fp8', 'int8', 'int4',
+    'topkP') or as Codec instances and are static: build one closure per
+    configuration. The returned function is ``f(x, rho, seed=0)`` — pass
+    a fresh (traced is fine) uint32 ``seed`` every round so stochastic
+    rounding stays zero-mean across training instead of replaying one
+    draw. Channel semantics (per-client seed stride, downlink mix) come
+    from ``repro.compress.channel``, the same helpers the federated
+    simulator uses. With both codecs passthrough this is exactly
+    ``gradagg``, bit for bit.
+    """
+    import numpy as np
+
+    from repro.compress import (broadcast_channel, get_codec,
+                                uplink_channel)
+
+    up = get_codec(uplink)
+    down = get_codec(downlink)
+
+    @jax.custom_vjp
+    def gradagg_c(x: jnp.ndarray, rho: jnp.ndarray, seed=0) -> jnp.ndarray:
+        return uplink_channel(up, x, seed)
+
+    def fwd(x, rho, seed):
+        return gradagg_c(x, rho, seed), (rho, x.shape[0], seed)
+
+    def bwd(res, g):
+        rho, n, seed = res
+        w = rho.reshape((n,) + (1,) * (g.ndim - 1)).astype(jnp.float32)
+        agg = jnp.sum(g.astype(jnp.float32) * w, axis=0, keepdims=True)
+        agg = broadcast_channel(down, agg[0], seed)[None]
+        gb = jnp.broadcast_to(agg, g.shape).astype(g.dtype)
+        # seed is integer-typed: its cotangent is the symbolic float0
+        return gb, jnp.zeros_like(rho), np.zeros((), jax.dtypes.float0)
+
+    gradagg_c.defvjp(fwd, bwd)
+    return gradagg_c
+
+
+def gradagg_compressed(x: jnp.ndarray, rho: jnp.ndarray, uplink=None,
+                       downlink=None, seed=0) -> jnp.ndarray:
+    """One-shot convenience around ``make_gradagg_compressed`` (builds the
+    closure per call; hot loops should cache the factory's result and
+    feed it per-round seeds)."""
+    return make_gradagg_compressed(uplink, downlink)(x, rho, seed)
+
+
 def uniform_rho(n: int) -> jnp.ndarray:
     return jnp.full((n,), 1.0 / n, jnp.float32)
 

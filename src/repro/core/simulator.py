@@ -41,6 +41,14 @@ class SimConfig:
     tau: int = 1
     lr: float = 0.05
     bytes_per_elem: int = 4
+    # cut-layer transport codecs (repro.compress): 'fp32' is a strict
+    # no-op — the jit graph is unchanged and metrics reproduce the
+    # uncompressed run bit for bit. Codecs apply to the smashed-data /
+    # gradient payloads of the split schemes; model-sync payloads (fl,
+    # sfl client aggregation) stay fp32 in both math and accounting.
+    uplink_codec: str = "fp32"
+    downlink_codec: str = "fp32"
+    codec_seed: int = 0
 
 
 def _stack(tree, n):
@@ -50,10 +58,15 @@ def _stack(tree, n):
 class FedSimulator:
     def __init__(self, cnn_cfg: CNNConfig, sim: SimConfig,
                  rho: Optional[np.ndarray] = None, seed: int = 0):
+        from repro.compress import get_codec
+
         assert sim.scheme in SCHEMES
         assert 1 <= sim.cut < cnn_cfg.num_layers or sim.scheme == "fl"
         self.cfg = cnn_cfg
         self.sim = sim
+        self.up_codec = get_codec(sim.uplink_codec)
+        self.down_codec = get_codec(sim.downlink_codec)
+        self._t = 0  # round counter (drives codec stochastic-round seeds)
         self.rho = jnp.asarray(
             rho if rho is not None else np.full(sim.n_clients, 1.0 / sim.n_clients),
             jnp.float32)
@@ -71,14 +84,20 @@ class FedSimulator:
     # ------------------------------------------------------------------
     def _epoch_split(self, carry, batch):
         """One local epoch of split training (any of sfl_ga / sfl / psl)."""
+        from repro.compress import (broadcast_channel, unicast_channel,
+                                    uplink_channel)
+
         cfg, sim, v = self.cfg, self.sim, self.sim.cut
         cp, sp = carry
-        x, y = batch  # (N,B,H,W,C), (N,B)
+        x, y, seed = batch  # (N,B,H,W,C), (N,B), uint32 scalar
 
         def client_fwd(c, xb):
             return cnn.client_forward(c, xb, cfg, v)
 
         smashed = jax.vmap(client_fwd)(cp, x)  # (N,B,...)
+        # uplink: each client ships an encoded X(v); the server trains
+        # against the reconstruction (quantization-aware protocol)
+        smashed = uplink_channel(self.up_codec, smashed, seed)
 
         def srv_loss(s, sm, yb):
             return cnn.server_loss(s, sm, yb, cfg, v)
@@ -88,12 +107,14 @@ class FedSimulator:
         )(sp, smashed, y)
 
         if sim.scheme == "sfl_ga":
-            # eq. 5: aggregate smashed-data gradients, broadcast to all
+            # eq. 5: aggregate smashed-data gradients, broadcast to all;
+            # the broadcast is ONE downlink payload
             w = self.rho.reshape((-1,) + (1,) * (s_n.ndim - 1))
-            s_ct = jnp.broadcast_to(jnp.sum(s_n * w, axis=0, keepdims=True),
-                                    s_n.shape)
-        else:  # sfl / psl: per-client cotangent
-            s_ct = s_n
+            agg = jnp.sum(s_n * w, axis=0, keepdims=True)
+            agg = broadcast_channel(self.down_codec, agg[0], seed)[None]
+            s_ct = jnp.broadcast_to(agg, s_n.shape)
+        else:  # sfl / psl: per-client cotangent (unicast downlink)
+            s_ct = unicast_channel(self.down_codec, s_n, seed)
 
         def client_grad(c, xb, ct):
             _, vjp = jax.vjp(lambda cc: client_fwd(cc, xb), c)
@@ -108,7 +129,7 @@ class FedSimulator:
     def _epoch_fl(self, carry, batch):
         cfg, sim = self.cfg, self.sim
         cp, _ = carry
-        x, y = batch
+        x, y, _seed = batch  # no cut layer -> codecs do not apply
 
         def full_loss(p, xb, yb):
             return cnn.server_loss(p, xb, yb, cfg, 0)
@@ -127,13 +148,16 @@ class FedSimulator:
 
         return jax.tree.map(avg, tree)
 
-    def _round(self, state, x, y):
-        """x: (N, τ, B, H, W, C); y: (N, τ, B)."""
+    def _round(self, state, x, y, seed):
+        """x: (N, τ, B, H, W, C); y: (N, τ, B); seed: uint32 scalar."""
         epoch = self._epoch_fl if self.sim.scheme == "fl" else self._epoch_split
         xs = jnp.moveaxis(x, 1, 0)  # (τ, N, B, ...)
         ys = jnp.moveaxis(y, 1, 0)
+        seeds = jnp.asarray(seed, jnp.uint32) \
+            + jnp.arange(xs.shape[0], dtype=jnp.uint32) * jnp.uint32(65537)
         (cp, sp), losses = jax.lax.scan(
-            lambda c, b: epoch(c, b), (state["client"], state["server"]), (xs, ys))
+            lambda c, b: epoch(c, b), (state["client"], state["server"]),
+            (xs, ys, seeds))
 
         if self.sim.scheme in ("sfl_ga", "sfl", "psl"):
             sp = self._aggregate(sp)  # eq. 7 — server-side aggregation
@@ -152,8 +176,12 @@ class FedSimulator:
 
     # ------------------------------------------------------------------
     def run_round(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
-        self.state, loss, drift = self._round_jit(self.state, x, y)
-        return {"loss": float(loss), "client_drift": float(drift)}
+        seed = np.uint32((self.sim.codec_seed + self._t * 1000003) & 0xFFFFFFFF)
+        self._t += 1
+        self.state, loss, drift = self._round_jit(self.state, x, y, seed)
+        bits = self.comm_bits_per_round()
+        return {"loss": float(loss), "client_drift": float(drift),
+                "bits_up": bits["up_bits"], "bits_down": bits["down_bits"]}
 
     def global_params(self):
         """ρ-weighted mean model for evaluation."""
@@ -172,26 +200,46 @@ class FedSimulator:
         return correct / len(x)
 
     # ------------------------------------------------------------------
-    def comm_bytes_per_round(self) -> Dict[str, int]:
-        """Paper Fig. 4 accounting. Downlink broadcast counted once for
-        SFL-GA (the point of the scheme); unicast per client otherwise."""
+    def _payload_bits(self, codec, numel: int) -> int:
+        """Bits on the wire for a ``numel``-element cut-layer payload.
+        The identity codec prices at ``bytes_per_elem`` (backward
+        compatible with the pre-codec accounting)."""
+        if codec.is_identity:
+            return numel * self.sim.bytes_per_elem * 8
+        return codec.payload_bits((numel,))
+
+    def comm_bits_per_round(self) -> Dict[str, int]:
+        """Codec-aware Fig. 4 accounting in bits. Downlink broadcast
+        counted once for SFL-GA (the point of the scheme); unicast per
+        client otherwise. Codecs compress the smashed-data/gradient
+        payloads; labels and model-sync traffic stay fp32."""
         cfg, sim = self.cfg, self.sim
-        be = sim.bytes_per_elem
+        be8 = sim.bytes_per_elem * 8
         N, tau, B = sim.n_clients, sim.tau, sim.batch
         if sim.scheme == "fl":
-            q = cnn.total_params(cfg) * be
-            return {"up_bytes": N * q, "down_bytes": N * q,
-                    "total_bytes": 2 * N * q}
-        X = cnn.smashed_numel(cfg, sim.cut) * B * be
-        labels = B * 4
-        phi_b = cnn.phi(cfg, sim.cut) * be
-        up = N * tau * (X + labels)
+            q = cnn.total_params(cfg) * be8
+            return {"up_bits": N * q, "down_bits": N * q,
+                    "total_bits": 2 * N * q}
+        X_elems = cnn.smashed_numel(cfg, sim.cut) * B
+        X_up = self._payload_bits(self.up_codec, X_elems)
+        X_dn = self._payload_bits(self.down_codec, X_elems)
+        labels = B * 32
+        phi_b = cnn.phi(cfg, sim.cut) * be8
+        up = N * tau * (X_up + labels)
         if sim.scheme == "sfl_ga":
-            down = tau * X
+            down = tau * X_dn
         elif sim.scheme == "psl":
-            down = N * tau * X
+            down = N * tau * X_dn
         else:  # sfl: smashed grads + client model aggregation round-trips
             up += N * phi_b
-            down = N * tau * X + N * phi_b
-        return {"up_bytes": int(up), "down_bytes": int(down),
-                "total_bytes": int(up + down)}
+            down = N * tau * X_dn + N * phi_b
+        return {"up_bits": int(up), "down_bits": int(down),
+                "total_bits": int(up + down)}
+
+    def comm_bytes_per_round(self) -> Dict[str, int]:
+        """Byte view of ``comm_bits_per_round`` (exact for the default
+        fp32 transport, which is whole bytes per element)."""
+        bits = self.comm_bits_per_round()
+        return {"up_bytes": bits["up_bits"] // 8,
+                "down_bytes": bits["down_bits"] // 8,
+                "total_bytes": bits["total_bits"] // 8}

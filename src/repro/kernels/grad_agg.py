@@ -18,6 +18,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across JAX versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
 
 def _grad_agg_kernel(g_ref, rho_ref, o_ref):
     g = g_ref[...].astype(jnp.float32)  # (N, bt, bd)
@@ -27,7 +33,7 @@ def _grad_agg_kernel(g_ref, rho_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_d", "interpret"))
 def grad_agg_reduce(g, rho, block_t: int = 256, block_d: int = 256,
-                    interpret: bool = True):
+                    interpret: bool = not _ON_TPU):
     """g: (N, T, D) per-client smashed grads; rho: (N,). Returns (T, D)."""
     N, T, D = g.shape
     block_t = min(block_t, T)
@@ -43,7 +49,7 @@ def grad_agg_reduce(g, rho, block_t: int = 256, block_d: int = 256,
             pl.BlockSpec((N, 1), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_t, block_d), lambda i, j: (i, j)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

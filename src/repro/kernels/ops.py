@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.grad_agg import grad_agg_reduce
+from repro.kernels.quantize import dequant_agg_reduce, quantize_pack
 from repro.kernels.ssd_scan import ssd_intra_chunk
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -112,3 +113,30 @@ def grad_agg(g, rho, backend: str = "pallas"):
     if len(shape) == 4:
         out = out.reshape(shape[1], shape[2], shape[3])
     return out
+
+
+def quantize(g, seed=0, bits: int = 8, backend: str = "pallas",
+             block_t: int = 256, block_d: int = 256,
+             stochastic: bool = True):
+    """Per-client per-tile symmetric quantization of (N, T, D) or
+    (N, B, S, D) smashed data. Returns (q int8 payload, scales f32);
+    ``bits=4`` packs two values per int8 word. The (block_t, block_d)
+    tiling is the on-wire scale granularity — both backends and the
+    matching ``dequant_agg`` must use the same one."""
+    shape = g.shape
+    if g.ndim == 4:
+        g = g.reshape(shape[0], shape[1] * shape[2], shape[3])
+    if backend == "jnp":
+        return ref.quantize_ref(g, seed, bits, block_t, block_d, stochastic)
+    return quantize_pack(g, seed, bits, block_t, block_d, stochastic,
+                         interpret=not _ON_TPU)
+
+
+def dequant_agg(q, scales, rho, bits: int = 8, backend: str = "pallas",
+                block_t: int = 256, block_d: int = 256):
+    """Fused decode + eq. 5 reduce of N quantized payloads: the server-side
+    endpoint of the compressed gradient-aggregation path. Returns (T, D)."""
+    if backend == "jnp":
+        return ref.dequant_agg_ref(q, scales, rho, bits, block_t, block_d)
+    return dequant_agg_reduce(q, scales, rho, bits, block_t, block_d,
+                              interpret=not _ON_TPU)

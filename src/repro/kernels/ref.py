@@ -56,3 +56,64 @@ def grad_agg_ref(g, rho):
     """out = Σ_n ρ_n g_n. g: (N, T, D); rho: (N,)."""
     return jnp.einsum("ntd,n->td", g.astype(jnp.float32),
                       rho.astype(jnp.float32)).astype(g.dtype)
+
+
+def _tile_scales(g, block_t, block_d, qmax):
+    """Per-(client, tile) symmetric scales, (N, T/bt, D/bd) — the wire
+    format shared with kernels.quantize."""
+    N, T, D = g.shape
+    gt = jnp.abs(g.astype(jnp.float32)).reshape(
+        N, T // block_t, block_t, D // block_d, block_d)
+    absmax = jnp.max(gt, axis=(2, 4))  # (N, Tt, Dt)
+    # constant-reciprocal multiply, matching the kernel bit-for-bit (a
+    # constant divide is strength-reduced inconsistently by XLA)
+    return jnp.where(absmax > 0.0, absmax * (1.0 / qmax), 1.0)
+
+
+def _expand_scales(scales, block_t, block_d):
+    """(N, Tt, Dt) -> (N, T, D) by tile repetition."""
+    return jnp.repeat(jnp.repeat(scales, block_t, axis=1), block_d, axis=2)
+
+
+def quantize_ref(g, seed=0, bits: int = 8, block_t: int = 256,
+                 block_d: int = 256, stochastic: bool = True):
+    """Oracle for kernels.quantize.quantize_pack — bit-identical output
+    (same global-coordinate hash, same tile semantics, same packing)."""
+    from repro.kernels.quantize import hash_uniform, qmax_for
+
+    N, T, D = g.shape
+    block_t = min(block_t, T)
+    block_d = min(block_d, D)
+    qmax = qmax_for(bits)
+    scales = _tile_scales(g, block_t, block_d, qmax)
+    s_full = _expand_scales(scales, block_t, block_d)
+    if stochastic:
+        n = jax.lax.broadcasted_iota(jnp.uint32, (N, T, D), 0)
+        t = jax.lax.broadcasted_iota(jnp.uint32, (N, T, D), 1)
+        d = jax.lax.broadcasted_iota(jnp.uint32, (N, T, D), 2)
+        u = hash_uniform(n, t, d, seed)
+    else:
+        u = 0.5
+    q = jnp.clip(jnp.floor(g.astype(jnp.float32) / s_full + u),
+                 -qmax, qmax).astype(jnp.int32)
+    if bits == 4:
+        pairs = q.reshape(N, T, D // 2, 2)
+        q = ((pairs[..., 1] & 15) << 4) | (pairs[..., 0] & 15)
+    return q.astype(jnp.int8), scales
+
+
+def dequant_agg_ref(q, scales, rho, bits: int = 8, block_t: int = 256,
+                    block_d: int = 256):
+    """Oracle for kernels.quantize.dequant_agg_reduce: unpack, rescale and
+    ρ-reduce N payloads. Returns (T, D) f32."""
+    from repro.kernels.quantize import _unpack_int4
+
+    qi = q.astype(jnp.int32)
+    if bits == 4:
+        qi = _unpack_int4(qi)
+    N, T, D = qi.shape
+    block_t = min(block_t, T)
+    block_d = min(block_d, D)
+    s_full = _expand_scales(scales, block_t, block_d)
+    g = qi.astype(jnp.float32) * s_full
+    return jnp.einsum("ntd,n->td", g, rho.astype(jnp.float32))

@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across JAX versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _ssd_chunk_kernel(xdt_ref, dA_ref, b_ref, c_ref, y_ref, state_ref):
     # blocks: xdt (1,1,Q,P), dA (1,1,1,Q), b/c (1,1,Q,N)
@@ -78,7 +82,7 @@ def ssd_intra_chunk(xdt, dA, B, C, interpret: bool = True):
             pl.BlockSpec((1, 1, 1, Q, P), lambda i, j, k: (i, j, k, 0, 0)),
             pl.BlockSpec((1, 1, 1, P, N), lambda i, j, k: (i, j, k, 0, 0)),
         ),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

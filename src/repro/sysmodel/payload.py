@@ -1,0 +1,106 @@
+"""Codec-aware payload accounting for the cut-layer boundary.
+
+Every payload the system model prices — uplink smashed data X(v), the
+broadcast aggregated gradient, per-client gradient unicast — is some
+number of *elements*; how many *bits* cross the channel depends on the
+transport codec. This module is the single source of truth for that
+mapping: a ``PayloadSpec`` per codec name, consumed by
+
+* ``repro.compress`` (the actual encode/decode implementations),
+* ``repro.core.simulator`` (per-round bits-up/bits-down reporting),
+* ``repro.ccc.env`` (X_t(v) bits inside P2.1 and the DDQN reward).
+
+Pure stdlib on purpose: sysmodel stays numpy/CPU-importable and the CCC
+reward loop calls ``payload_bits`` ~10^4 times per training run.
+
+``distortion`` is the relative quantization-noise proxy used by the CCC
+reward (uniform-quantizer MSE ~ Δ²/12 with Δ the step at full scale;
+mantissa-width equivalent for float casts). It is a *ranking* signal for
+the agent, not a convergence bound.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class PayloadSpec:
+    """Wire format of one codec: bits per element + side-channel overhead."""
+    name: str
+    data_bits: float          # payload bits per *kept* element
+    scale_bits: int = 0       # bits per scale word (0 = no scales)
+    tile: int = 0             # elements covered by one scale word
+    density: float = 1.0      # fraction of elements kept (top-k sparsif.)
+    index_bits: int = 0       # bits per kept element for indices (top-k)
+    distortion: float = 0.0   # relative quantization-noise proxy
+
+    def kept(self, numel: int) -> int:
+        return max(1, math.ceil(numel * self.density)) if numel else 0
+
+    def payload_bits(self, numel: int) -> int:
+        """Total bits on the wire for a ``numel``-element tensor."""
+        if numel <= 0:
+            return 0
+        bits = self.kept(numel) * (self.data_bits + self.index_bits)
+        if self.tile:
+            bits += math.ceil(numel / self.tile) * self.scale_bits
+        return int(math.ceil(bits))
+
+    def bits_per_element(self, numel: int = 0) -> float:
+        """Effective bits/element; amortized overhead needs a ``numel``."""
+        if numel:
+            return self.payload_bits(numel) / numel
+        bits = self.density * (self.data_bits + self.index_bits)
+        if self.tile:
+            bits += self.scale_bits / self.tile
+        return bits
+
+
+# Quantizer-noise proxies: (step/2)²/3 at unit full-scale. int codecs use
+# symmetric absmax scaling with qmax = 2^(b-1) - 1; float casts use their
+# mantissa width (bf16: 8 bits incl. implicit, fp8 e4m3: 4).
+_SPECS: Dict[str, PayloadSpec] = {
+    "fp32": PayloadSpec("fp32", data_bits=32.0),
+    "bf16": PayloadSpec("bf16", data_bits=16.0, distortion=2.0 ** -16 / 3),
+    "fp8": PayloadSpec("fp8", data_bits=8.0, distortion=2.0 ** -8 / 3),
+    "int8": PayloadSpec("int8", data_bits=8.0, scale_bits=32, tile=256,
+                        distortion=(1.0 / 127) ** 2 / 3),
+    "int4": PayloadSpec("int4", data_bits=4.0, scale_bits=32, tile=256,
+                        distortion=(1.0 / 7) ** 2 / 3),
+}
+
+_TOPK_RE = re.compile(r"^topk(\d{1,2})$")
+
+
+def spec_for(name: str) -> PayloadSpec:
+    """Spec by codec name. ``topkP`` keeps P% of elements (fp32 values +
+    int32 indices), e.g. ``topk10``; distortion ~ the dropped mass."""
+    if name in _SPECS:
+        return _SPECS[name]
+    m = _TOPK_RE.match(name)
+    if m:
+        pct = int(m.group(1))
+        if not 1 <= pct <= 99:
+            raise ValueError(f"topk percentage out of range: {name}")
+        return PayloadSpec(name, data_bits=32.0, index_bits=32,
+                           density=pct / 100.0, distortion=1.0 - pct / 100.0)
+    raise KeyError(f"unknown codec {name!r}; known: {sorted(_SPECS)} "
+                   "or topkP (P in 1..99)")
+
+
+def payload_bits(name: str, numel: int) -> int:
+    return spec_for(name).payload_bits(numel)
+
+
+def compression_ratio(name: str, numel: int,
+                      base_bits_per_elem: float = 32.0) -> float:
+    """How many × smaller than the raw baseline this codec's payload is."""
+    bits = payload_bits(name, numel)
+    return (numel * base_bits_per_elem) / bits if bits else float("inf")
+
+
+def available_codecs() -> Tuple[str, ...]:
+    return tuple(_SPECS)

@@ -1,0 +1,116 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite property-tests with hypothesis, but the hermetic CI
+container may not ship it (and nothing may be pip-installed there).
+``conftest.py`` registers this module under ``sys.modules['hypothesis']``
+only when the real package is missing, so environments with hypothesis
+keep full shrinking/edge-case coverage while bare containers still *run*
+every property as a deterministic seeded sweep instead of dying at
+collection.
+
+Supported surface (what the suite uses): ``given`` with keyword
+strategies, ``settings(max_examples=, deadline=)``, ``assume``, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from,
+    booleans=booleans)
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class HealthCheck:  # accepted and ignored
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator: stamp the example budget onto the (given-wrapped) test."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    assert not arg_strategies, (
+        "fallback given() supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test stream, independent of run order
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                draw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **draw, **kwargs)
+                except _Unsatisfied:
+                    continue
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # hide the strategy-supplied params from pytest's fixture
+        # resolution (real hypothesis does the same)
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def example(**_kw):  # explicit examples are folded into the random sweep
+    return lambda fn: fn
+
+
+def note(_msg):
+    pass
