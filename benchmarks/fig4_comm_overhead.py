@@ -3,10 +3,34 @@
 Paper claim: SFL-GA reaches a given accuracy with far less traffic than
 traditional SFL; PSL sits between (no client-model aggregation, but
 per-client gradient unicast).
+
+All traffic numbers here come from the unified ``repro.sysmodel.traffic``
+accounting — the simulator's ``comm_bytes_per_round`` is a thin adapter
+over it, and the codec-projection table at the end calls it directly to
+price the same workload under int8/int4 transports without retraining.
 """
 from __future__ import annotations
 
 from benchmarks.common import FULL, run_scheme
+
+
+def unified_traffic(scheme: str, cut: int, codec: str = "fp32",
+                    n_clients: int = 10, batch: int = 16,
+                    tau: int = 1) -> dict:
+    """Per-round bytes straight from sysmodel.traffic (no simulator)."""
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.models import cnn
+    from repro.sysmodel.traffic import round_traffic_bytes
+
+    cfg = LIGHT_CONFIG
+    split = scheme != "fl"
+    return round_traffic_bytes(
+        scheme, n_clients=n_clients, tau=tau,
+        smashed_elems=cnn.smashed_numel(cfg, cut) * batch if split else 0,
+        label_bits=batch * 32,
+        client_model_bits=cnn.phi(cfg, cut) * 32 if split else 0,
+        full_model_bits=cnn.total_params(cfg) * 32,
+        uplink_codec=codec, downlink_codec=codec)
 
 
 def run(dataset: str = "mnist", rounds: int = None):
@@ -15,6 +39,8 @@ def run(dataset: str = "mnist", rounds: int = None):
     for scheme in ("sfl_ga", "psl", "sfl", "fl"):
         r = run_scheme(scheme, 2, rounds, dataset)
         per_round = r["comm"]["total_bytes"]
+        unified = unified_traffic(scheme, 2)["total_bytes"]
+        assert per_round == unified, (scheme, per_round, unified)
         curve = [(per_round * rr / 1e6, a) for rr, a in zip(r["rounds"],
                                                             r["accs"])]
         out.append({"scheme": scheme, "mb_per_round": per_round / 1e6,
@@ -37,6 +63,14 @@ def main():
                        None)
             print(f"  {row['scheme']}: MB to reach acc {target:.3f}: "
                   f"{'%.2f' % hit if hit else 'not reached'}")
+    # codec projection: the same workload priced under compressed
+    # transports (sysmodel.traffic directly; cut-layer payloads only)
+    print("# codec projection (MB/round, cut=2)")
+    for scheme in ("sfl_ga", "psl", "sfl"):
+        row = {c: unified_traffic(scheme, 2, c)["total_bytes"] / 1e6
+               for c in ("fp32", "int8", "int4")}
+        print(f"  {scheme}: " + "  ".join(
+            f"{c}={v:.3f}" for c, v in row.items()))
 
 
 if __name__ == "__main__":

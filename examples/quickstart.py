@@ -45,6 +45,20 @@ def main():
           "the downlink is ONE broadcast and client models are never "
           "aggregated (paper Figs. 3-4).")
 
+    # 4) the unified accounting (sysmodel.traffic) prices the same
+    #    workload under compressed cut-layer transports — no retraining
+    from repro.configs.paper_cnn import LIGHT_CONFIG as C
+    from repro.models import cnn
+    from repro.sysmodel.traffic import round_traffic_bytes
+
+    print("\nsfl_ga per-round traffic by transport codec:")
+    for codec in ("fp32", "int8", "int4"):
+        t = round_traffic_bytes(
+            "sfl_ga", n_clients=10, smashed_elems=cnn.smashed_numel(C, 2) * 16,
+            label_bits=16 * 32, client_model_bits=cnn.phi(C, 2) * 32,
+            uplink_codec=codec, downlink_codec=codec)
+        print(f"  {codec:>5}: {t['total_bytes']/1e6:.3f} MB/round")
+
 
 if __name__ == "__main__":
     main()

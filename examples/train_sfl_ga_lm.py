@@ -5,7 +5,14 @@ The same make_train_step powers the 256-chip dry-run; here it runs on CPU
 with 4 clients. Expect loss to fall from ~10 to well below 6 as the model
 learns the synthetic next-token structure.
 
+The cut-layer boundary runs the protocol engine (core.protocol), so the
+codec-aware transport and τ local steps of the CNN simulator work here
+too: ``--uplink-codec int8 --downlink-codec int8`` trains against the
+quantized reconstruction and shrinks per-round traffic ~3.9x (reported by
+the unified sysmodel.traffic accounting at the end of the run).
+
 Run:  PYTHONPATH=src python examples/train_sfl_ga_lm.py [--steps 300]
+      PYTHONPATH=src python examples/train_sfl_ga_lm.py --uplink-codec int8
 """
 import argparse
 
@@ -16,11 +23,17 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=300)
     p.add_argument("--arch", default="granite-8b")
+    p.add_argument("--tau", type=int, default=1)
+    p.add_argument("--uplink-codec", default="fp32")
+    p.add_argument("--downlink-codec", default="fp32")
     args = p.parse_args()
     train_mod.main([
         "--arch", args.arch, "--preset", "100m", "--scheme", "sfl_ga",
         "--cut", "1", "--clients", "4", "--batch", "2", "--seq", "128",
         "--steps", str(args.steps), "--lr", "0.1", "--log-every", "20",
+        "--tau", str(args.tau),
+        "--uplink-codec", args.uplink_codec,
+        "--downlink-codec", args.downlink_codec,
         "--checkpoint", "results/sfl_ga_100m.ckpt",
     ])
 

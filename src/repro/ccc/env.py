@@ -19,7 +19,8 @@ import numpy as np
 from repro.ccc.convex import AllocationResult, solve_p21
 from repro.sysmodel.comm import CommParams, path_loss_gain
 from repro.sysmodel.comp import CompParams, scale_by_cut
-from repro.sysmodel.payload import payload_bits, spec_for
+from repro.sysmodel.payload import spec_for
+from repro.sysmodel.traffic import wire_bits
 from repro.sysmodel.privacy import privacy_ok
 
 
@@ -93,12 +94,11 @@ class CuttingPointEnv:
         return base + self.cfg.gamma_q * spec_for(codec).distortion
 
     def smashed_bits(self, v: int, codec: str = "fp32") -> float:
-        """X_t(v) on the wire under ``codec`` (fp32 keeps the paper's
-        bytes_per_elem accounting)."""
+        """X_t(v) on the wire under ``codec`` — a thin adapter over the
+        unified ``sysmodel.traffic`` accounting (fp32 keeps the paper's
+        bytes_per_elem pricing)."""
         elems = self.cfg.smashed_elems[v - 1] * self.cfg.batch
-        if codec == "fp32":
-            return elems * self.cfg.bytes_per_elem * 8
-        return payload_bits(codec, elems)
+        return wire_bits(codec, elems, self.cfg.bytes_per_elem * 8)
 
     def decode_action(self, action: int) -> Tuple[int, str]:
         """action -> (cutting point v, codec name)."""
@@ -145,12 +145,14 @@ def cnn_env_config(light: bool = True, flop_aware: bool = False,
     convergence (Γ) and privacy. flop_aware=True recomputes the client
     fraction from the CNN's actual per-block FLOPs (a documented extension).
     """
+    import jax
+
     from repro.configs.paper_cnn import CONFIG, LIGHT_CONFIG
     from repro.models import cnn
 
     ccfg = LIGHT_CONFIG if light else CONFIG
     V = ccfg.num_layers
-    params = cnn.init_cnn(__import__("jax").random.key(0), ccfg)
+    params = cnn.init_cnn(jax.random.key(0), ccfg)
     phis = tuple(cnn.phi(ccfg, v, params) for v in range(1, V))
     smashed = tuple(cnn.smashed_numel(ccfg, v) for v in range(1, V))
     total = cnn.total_params(ccfg, params)

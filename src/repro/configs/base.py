@@ -148,8 +148,14 @@ class TrainConfig:
     model: ModelConfig
     algo: str = "sfl_ga"  # sfl_ga | sfl | psl | fl
     cut_layer: int = 1  # v: client side = embed + layers[:v]
-    local_epochs: int = 1  # tau
+    local_epochs: int = 1  # tau (legacy alias; prefer ``tau``)
     lr: float = 1e-3
+    # cut-layer protocol engine (core.protocol): transport codecs for the
+    # smashed-data boundary and τ local steps per round. Defaults (fp32,
+    # τ=1) reproduce the pre-engine train step bit for bit.
+    uplink_codec: str = "fp32"
+    downlink_codec: str = "fp32"
+    tau: Optional[int] = None  # None -> local_epochs
     optimizer: str = "sgd"  # sgd | momentum | adamw
     weight_decay: float = 0.0
     param_dtype: str = "bfloat16"
@@ -159,3 +165,8 @@ class TrainConfig:
     expert_parallel: bool = False  # shard experts over data axis (hillclimb)
     resync_every: int = 0  # 0 = never re-sync client-side models (paper default)
     seed: int = 0
+
+    @property
+    def resolved_tau(self) -> int:
+        """τ local steps per round; ``tau`` wins over ``local_epochs``."""
+        return self.local_epochs if self.tau is None else self.tau

@@ -1,2 +1,6 @@
-from repro.core.gradagg import client_param_average, gradagg, uniform_rho  # noqa: F401
+from repro.core.gradagg import (client_param_average, gradagg,  # noqa: F401
+                                gradagg_compressed, make_gradagg_compressed,
+                                uniform_rho)
+from repro.core.protocol import (SCHEMES, ProtocolEngine,  # noqa: F401
+                                 SchemeSpec, scheme_spec)
 from repro.core.simulator import FedSimulator, SimConfig  # noqa: F401

@@ -17,8 +17,18 @@ Algorithms:
   (an extra φ(v)-byte all-reduce — the traffic SFL-GA removes).
 * ``psl``    — per-client cotangents, no client averaging (personalized).
 
+Scheme semantics and the cut-layer transport come from
+``core.protocol.ProtocolEngine`` — the same engine the CNN simulator
+runs — so ``TrainConfig(uplink_codec=..., downlink_codec=..., tau=...)``
+gives every LLM workload the compressed boundary
+(``make_gradagg_compressed``) and τ>1 local steps (one ``lax.scan`` over
+the local-epoch axis). Defaults (fp32, τ=1) are bit-identical to the
+pre-engine steps.
+
 Batch layout: tokens/labels (N, B/N, S) — the leading axis is the client
-axis, sharded over ("pod","data").
+axis, sharded over ("pod","data"). With τ>1 a local-epoch axis follows
+the client axis: (N, τ, B/N, S). An optional ``batch["seed"]`` uint32
+drives the codecs' stochastic rounding (see DESIGN.md §2.2).
 """
 from __future__ import annotations
 
@@ -29,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.core.gradagg import client_param_average, gradagg, uniform_rho
+from repro.core.gradagg import uniform_rho
+from repro.core.protocol import ProtocolEngine
 from repro.models import lm as lm_mod
 from repro.models import transformer as tf
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -84,17 +95,25 @@ def _server_forward(sparams, plan, smashed, impl, remat):
     return lm_mod.server_forward(full, plan, smashed, impl=impl, remat=remat)
 
 
+def _engine_for(tcfg: TrainConfig) -> ProtocolEngine:
+    return ProtocolEngine(tcfg.algo, tcfg.uplink_codec, tcfg.downlink_codec,
+                          base_seed=tcfg.seed)
+
+
 def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
-                 rho: jnp.ndarray) -> Callable:
+                 rho: jnp.ndarray,
+                 engine: Optional[ProtocolEngine] = None) -> Callable:
     cfg = plan.cfg
     dtype = jnp.dtype(tcfg.compute_dtype)
     impl = "jnp"
+    engine = _engine_for(tcfg) if engine is None else engine
 
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, seed=0):
         tokens = batch["tokens"]  # (N, b, S) int32 — or embeds (N, b, S, d)
         labels = batch["labels"]  # (N, b, S)
         n = tokens.shape[0]
-        if tokens.ndim == 4:  # stubbed-modality inputs: precomputed embeds
+        if jnp.issubdtype(tokens.dtype, jnp.floating):
+            # stubbed-modality inputs: precomputed embeds
             smashed, aux_c = jax.vmap(
                 lambda cp, e: _client_forward_one(cp, plan, None, e, impl,
                                                   tcfg.remat, dtype)
@@ -104,8 +123,9 @@ def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
                 lambda cp, t: _client_forward_one(cp, plan, t, None, impl,
                                                   tcfg.remat, dtype)
             )(params["client"], tokens)
-        if tcfg.algo == "sfl_ga":
-            smashed = gradagg(smashed, rho)  # eq. 5: the paper's op
+        # the scheme's cut-layer transport: lossy uplink forward; eq.-5
+        # aggregate-broadcast (sfl_ga) or per-client unicast backward
+        smashed = engine.boundary(smashed, rho, seed)
         nb, b, S, d = smashed.shape
         logits, aux_s = _server_forward(params["server"], plan,
                                         smashed.reshape(nb * b, S, d),
@@ -121,19 +141,48 @@ def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
                     n_clients: int, rho: Optional[jnp.ndarray] = None) -> Callable:
     assert tcfg.algo in ALGOS, tcfg.algo
     rho = uniform_rho(n_clients) if rho is None else rho
-    loss_fn = make_loss_fn(plan, tcfg, rho)
+    engine = _engine_for(tcfg)
+    loss_fn = make_loss_fn(plan, tcfg, rho, engine=engine)
+    tau = tcfg.resolved_tau
 
-    def train_step(params, opt_state, batch):
+    def local_step(params, opt_state, batch, seed):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
+            params, batch, seed)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = apply_updates(params, updates)
-        if tcfg.algo == "sfl":
+        return params, opt_state, dict(metrics, loss=loss)
+
+    def train_step(params, opt_state, batch):
+        seed = batch.get("seed", 0)
+        if tau == 1:
+            params, opt_state, metrics = local_step(params, opt_state,
+                                                    batch, seed)
+        else:
+            # τ local steps: tokens/labels carry a local-epoch axis
+            # (N, τ, b, S[, d]); scan over it with per-epoch codec seeds.
+            want = 5 if jnp.issubdtype(batch["tokens"].dtype, jnp.floating) else 4
+            assert batch["tokens"].ndim == want, (
+                f"tau={tau} needs a local-epoch axis: tokens (N, tau, b, S"
+                f"{', d' if want == 5 else ''}), got {batch['tokens'].shape}")
+            xs = jnp.moveaxis(batch["tokens"], 1, 0)
+            ys = jnp.moveaxis(batch["labels"], 1, 0)
+            seeds = engine.epoch_seeds(seed, xs.shape[0])
+
+            def body(carry, sl):
+                p, s = carry
+                t, l, sd = sl
+                p, s, m = local_step(p, s, {"tokens": t, "labels": l}, sd)
+                return (p, s), m
+
+            (params, opt_state), ms = jax.lax.scan(
+                body, (params, opt_state), (xs, ys, seeds))
+            metrics = jax.tree.map(jnp.mean, ms)
+        if engine.spec.client_aggregate:
             # traditional SFL: aggregate client-side models every round —
             # the φ(v)-byte collective SFL-GA eliminates.
             params = dict(params,
-                          client=client_param_average(params["client"], rho))
-        return params, opt_state, dict(metrics, loss=loss)
+                          client=engine.aggregate(params["client"], rho))
+        return params, opt_state, metrics
 
     return train_step
 
@@ -168,35 +217,29 @@ def make_decode_step(plan: lm_mod.ModelPlan, dtype=jnp.bfloat16) -> Callable:
 
 def comm_bytes_per_round(cfg: ModelConfig, plan: lm_mod.ModelPlan, algo: str,
                          n_clients: int, per_client_batch: int, seq: int,
-                         tau: int = 1, bytes_per_elem: int = 2) -> Dict[str, int]:
+                         tau: int = 1, bytes_per_elem: int = 2,
+                         uplink_codec: str = "fp32",
+                         downlink_codec: str = "fp32") -> Dict[str, int]:
     """Edge-protocol traffic accounting (who sends what over the WAN).
 
-    X(v) = smashed-data bytes per client per epoch; φ(v) = client-model bytes.
+    Thin adapter over the unified ``sysmodel.traffic`` accounting: this
+    function only supplies the LLM's element counts — X(v) smashed-data
+    elements per client per epoch, φ(v) client-model bytes. Codecs price
+    the cut-layer payloads; labels and model sync stay at the raw
+    ``bytes_per_elem`` wire precision.
     """
-    from repro.core.split import client_param_numel
+    from repro.core.split import client_param_numel, total_param_numel
+    from repro.sysmodel.traffic import round_traffic_bytes
 
-    X = per_client_batch * seq * cfg.d_model * bytes_per_elem
-    labels = per_client_batch * seq * 4
-    phi = client_param_numel(plan) * bytes_per_elem
-    N = n_clients
-    if algo == "sfl_ga":
-        up = N * tau * (X + labels)
-        down = tau * X  # ONE broadcast of the aggregated gradient
-    elif algo == "sfl":
-        up = N * tau * (X + labels) + N * phi
-        down = N * tau * X + N * phi
-    elif algo == "psl":
-        up = N * tau * (X + labels)
-        down = N * tau * X
-    elif algo == "fl":
-        from repro.core.split import total_param_numel
-
-        q = total_param_numel(plan) * bytes_per_elem
-        up, down = N * q, N * q
-    else:
-        raise ValueError(algo)
-    return {"up_bytes": int(up), "down_bytes": int(down),
-            "total_bytes": int(up + down)}
+    be8 = bytes_per_elem * 8
+    return round_traffic_bytes(
+        algo, n_clients=n_clients, tau=tau,
+        smashed_elems=per_client_batch * seq * cfg.d_model,
+        label_bits=per_client_batch * seq * 32,
+        client_model_bits=client_param_numel(plan) * be8,
+        full_model_bits=total_param_numel(plan) * be8 if algo == "fl" else 0,
+        uplink_codec=uplink_codec, downlink_codec=downlink_codec,
+        raw_bits_per_elem=be8)
 
 
 # ---------------------------------------------------------------------------
@@ -208,19 +251,21 @@ def make_whisper_train_step(cfg: ModelConfig, tcfg: TrainConfig, opt: Optimizer,
     from repro.models import encdec
 
     assert tcfg.algo in ALGOS
+    assert tcfg.resolved_tau == 1, "tau>1 not wired for enc-dec training"
     rho = uniform_rho(n_clients) if rho is None else rho
     dtype = jnp.dtype(tcfg.compute_dtype)
+    engine = _engine_for(tcfg)
 
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, seed=0):
         fe = batch["frame_embeds"].astype(dtype)  # (N, b, F, d)
         toks, labels = batch["tokens"], batch["labels"]  # (N, b, S)
         x, enc = jax.vmap(
             lambda cp, f, t: encdec.whisper_client_forward(cp, cfg, f, t, dtype)
         )(params["client"], fe, toks)
-        if tcfg.algo == "sfl_ga":
-            # both boundary tensors are aggregated + broadcast (eq. 5)
-            x = gradagg(x, rho)
-            enc = gradagg(enc, rho)
+        # both boundary tensors cross the scheme's transport (eq. 5 for
+        # sfl_ga: aggregated + broadcast; unicast for sfl/psl)
+        x = engine.boundary(x, rho, seed)
+        enc = engine.boundary(enc, rho, seed)
         n, b = x.shape[:2]
         logits = encdec.whisper_server_forward(
             params["server"], cfg, x.reshape((n * b,) + x.shape[2:]),
@@ -229,13 +274,14 @@ def make_whisper_train_step(cfg: ModelConfig, tcfg: TrainConfig, opt: Optimizer,
         return ce, {"ce": ce}
 
     def train_step(params, opt_state, batch):
+        seed = batch.get("seed", 0)
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
+            params, batch, seed)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = apply_updates(params, updates)
-        if tcfg.algo == "sfl":
+        if engine.spec.client_aggregate:
             params = dict(params,
-                          client=client_param_average(params["client"], rho))
+                          client=engine.aggregate(params["client"], rho))
         return params, opt_state, dict(metrics, loss=loss)
 
     return train_step

@@ -1,0 +1,177 @@
+"""The scheme engine: SFL protocol semantics defined once (DESIGN.md §2).
+
+The paper's contribution is a *protocol* — which side aggregates what,
+per round, and what crosses the cut in each direction (eqs. 5, 7). Both
+stacks consume this module:
+
+* the CNN-scale ``FedSimulator`` (explicit vmapped math inside one jit)
+  uses the channel/aggregation methods directly in its epoch body;
+* the LLM train steps (``core.algorithms``) use ``boundary`` — the
+  custom_vjp form of the same semantics, so autodiff routes the backward
+  pass through the scheme's transport.
+
+One ``SchemeSpec`` per scheme says who aggregates; one ``ProtocolEngine``
+instance per run owns the transport codecs (resolved once, not per
+trace), the per-round / per-local-epoch seed derivation, and the
+client-drift metric Γ-proxy. With fp32 codecs every method is a strict
+no-op or pure-fp32 arithmetic, reproducing pre-engine runs bit for bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import (broadcast_channel, get_codec, unicast_channel,
+                            uplink_channel)
+from repro.core.gradagg import client_param_average, make_gradagg_compressed
+
+# Seed strides: one uint32 seed per round (drives codec stochastic
+# rounding), decorrelated across rounds and local epochs by odd strides.
+ROUND_SEED_STRIDE = 1000003
+EPOCH_SEED_STRIDE = 65537
+
+
+def round_seed(base_seed: int, t: int) -> np.uint32:
+    """uint32 codec seed for round ``t`` (host-side; pure function so
+    launchers can derive the schedule without building an engine)."""
+    return np.uint32((int(base_seed) + int(t) * ROUND_SEED_STRIDE)
+                     & 0xFFFFFFFF)
+
+
+@dataclass(frozen=True)
+class SchemeSpec:
+    """Who aggregates what, per round (the paper's §II + §V baselines)."""
+    name: str
+    split: bool               # has a cut boundary (False = plain FL)
+    gradient_broadcast: bool  # eq. 5: aggregate cotangents, ONE broadcast
+    server_aggregate: bool    # eq. 7: ρ-average server-side replicas
+    client_aggregate: bool    # ρ-average client-side models (sfl / fl)
+
+
+SCHEME_SPECS = {
+    "sfl_ga": SchemeSpec("sfl_ga", True, True, True, False),
+    "sfl": SchemeSpec("sfl", True, False, True, True),
+    "psl": SchemeSpec("psl", True, False, True, False),
+    "fl": SchemeSpec("fl", False, False, False, True),
+}
+
+SCHEMES = tuple(SCHEME_SPECS)
+
+
+def scheme_spec(name: str) -> SchemeSpec:
+    try:
+        return SCHEME_SPECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; known: {SCHEMES}") from None
+
+
+def _make_unicast_boundary(up, down):
+    """custom_vjp boundary for sfl/psl: lossy uplink on the smashed data,
+    per-client lossy unicast on the cotangents (no aggregation — that is
+    the traffic these baselines pay and SFL-GA removes)."""
+
+    @jax.custom_vjp
+    def chan(x: jnp.ndarray, rho: jnp.ndarray, seed=0) -> jnp.ndarray:
+        return uplink_channel(up, x, seed)
+
+    def fwd(x, rho, seed):
+        return chan(x, rho, seed), (jnp.shape(rho), seed)
+
+    def bwd(res, g):
+        rho_shape, seed = res
+        gq = unicast_channel(down, g, seed)
+        return gq, jnp.zeros(rho_shape, jnp.float32), \
+            np.zeros((), jax.dtypes.float0)
+
+    chan.defvjp(fwd, bwd)
+    return chan
+
+
+class ProtocolEngine:
+    """Scheme semantics + codec transport + seed schedule for one run."""
+
+    def __init__(self, scheme: str, uplink_codec="fp32",
+                 downlink_codec="fp32", base_seed: int = 0):
+        self.spec = scheme_spec(scheme)
+        self.uplink = get_codec(uplink_codec)
+        self.downlink = get_codec(downlink_codec)
+        self.base_seed = int(base_seed)
+        # boundary op resolved once per engine (codecs are static under jit)
+        if not self.spec.split:
+            self._boundary_op = None
+        elif self.spec.gradient_broadcast:
+            self._boundary_op = make_gradagg_compressed(self.uplink,
+                                                        self.downlink)
+        elif self.uplink.is_identity and self.downlink.is_identity:
+            self._boundary_op = None  # fp32 sfl/psl: boundary is a no-op
+        else:
+            self._boundary_op = _make_unicast_boundary(self.uplink,
+                                                       self.downlink)
+
+    # -- seed schedule --------------------------------------------------
+    def round_seed(self, t: int) -> np.uint32:
+        """uint32 seed for round ``t`` (host-side, drives ``run_round``)."""
+        return round_seed(self.base_seed, t)
+
+    @staticmethod
+    def epoch_seeds(seed, tau: int) -> jnp.ndarray:
+        """(τ,) per-local-epoch seeds derived from one round seed."""
+        return jnp.asarray(seed, jnp.uint32) \
+            + jnp.arange(tau, dtype=jnp.uint32) * jnp.uint32(EPOCH_SEED_STRIDE)
+
+    # -- explicit transport (simulator-style epoch bodies) ---------------
+    def encode_uplink(self, smashed: jnp.ndarray, seed) -> jnp.ndarray:
+        """Per-client lossy uplink of the smashed data X(v); (N, ...)."""
+        return uplink_channel(self.uplink, smashed, seed)
+
+    def downlink_cotangent(self, s_n: jnp.ndarray, rho: jnp.ndarray,
+                           seed) -> jnp.ndarray:
+        """Scheme-dependent downlink of the smashed-data gradients s^n:
+        SFL-GA ρ-aggregates and broadcasts ONE payload (eq. 5); sfl/psl
+        unicast each client its own cotangent."""
+        if self.spec.gradient_broadcast:
+            w = rho.reshape((-1,) + (1,) * (s_n.ndim - 1))
+            agg = jnp.sum(s_n * w, axis=0, keepdims=True)
+            agg = broadcast_channel(self.downlink, agg[0], seed)[None]
+            return jnp.broadcast_to(agg, s_n.shape)
+        return unicast_channel(self.downlink, s_n, seed)
+
+    # -- autodiff boundary (LLM-style loss functions) --------------------
+    def boundary(self, x: jnp.ndarray, rho: jnp.ndarray, seed=0) -> jnp.ndarray:
+        """Apply the scheme's cut-layer transport as one differentiable op:
+        forward = lossy uplink, backward = the scheme's downlink (eq.-5
+        aggregate-broadcast for SFL-GA, per-client unicast otherwise).
+        Identity (and bit-exact) for non-broadcast schemes at fp32."""
+        if self._boundary_op is None:
+            return x
+        return self._boundary_op(x, rho, seed)
+
+    # -- per-round model aggregation (eq. 7 + baselines) -----------------
+    @staticmethod
+    def aggregate(tree, rho: Optional[jnp.ndarray] = None):
+        """ρ-weighted mean over the leading client axis, broadcast back."""
+        return client_param_average(tree, rho)
+
+    def finalize_round(self, client, server, rho):
+        """Apply the scheme's per-round aggregation rules to both sides."""
+        if self.spec.server_aggregate:
+            server = self.aggregate(server, rho)
+        if self.spec.client_aggregate:
+            client = self.aggregate(client, rho)
+        return client, server
+
+    # -- metrics ---------------------------------------------------------
+    @staticmethod
+    def client_drift(client_tree) -> jnp.ndarray:
+        """Σ ||w_c^n − mean||² over clients+leaves — the Γ(φ(v)) proxy of
+        Assumption 4 (client models drift when only gradients are shared)."""
+        def d(p):
+            m = jnp.mean(p, axis=0, keepdims=True)
+            return jnp.sum(jnp.square(p - m))
+
+        return sum(jax.tree.leaves(jax.tree.map(d, client_tree)))

@@ -5,7 +5,12 @@ schemes (§V): traditional SFL [11], PSL, and FL. Clients are vectorized
 with vmap over the leading axis; per-round batches have shape
 (N, τ, B, ...). Everything inside ``round_fn`` is one jit-compiled step.
 
-Protocol details (see DESIGN.md §2):
+Scheme semantics (who aggregates what, transport per direction, seed
+schedule, drift metric) come from ``repro.core.protocol.ProtocolEngine``
+— the same engine that drives the LLM train steps — and per-round
+traffic from ``repro.sysmodel.traffic``. See DESIGN.md §2 for the
+protocol table this simulator executes:
+
 * SFL-GA: server backward produces per-client smashed-data gradients s^n;
   the ρ-weighted aggregate s = Σ ρ^n s^n (eq. 5) is broadcast; every client
   back-props the SAME cotangent through its OWN Jacobian (client models may
@@ -27,9 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_cnn import CNNConfig
+from repro.core.protocol import SCHEMES, ProtocolEngine
 from repro.models import cnn
-
-SCHEMES = ("sfl_ga", "sfl", "psl", "fl")
 
 
 @dataclass(frozen=True)
@@ -58,14 +62,17 @@ def _stack(tree, n):
 class FedSimulator:
     def __init__(self, cnn_cfg: CNNConfig, sim: SimConfig,
                  rho: Optional[np.ndarray] = None, seed: int = 0):
-        from repro.compress import get_codec
-
         assert sim.scheme in SCHEMES
         assert 1 <= sim.cut < cnn_cfg.num_layers or sim.scheme == "fl"
         self.cfg = cnn_cfg
         self.sim = sim
-        self.up_codec = get_codec(sim.uplink_codec)
-        self.down_codec = get_codec(sim.downlink_codec)
+        # the engine resolves codecs/channels ONCE; epoch bodies below
+        # call its methods instead of re-importing repro.compress per trace
+        self.proto = ProtocolEngine(sim.scheme, sim.uplink_codec,
+                                    sim.downlink_codec,
+                                    base_seed=sim.codec_seed)
+        self.up_codec = self.proto.uplink
+        self.down_codec = self.proto.downlink
         self._t = 0  # round counter (drives codec stochastic-round seeds)
         self.rho = jnp.asarray(
             rho if rho is not None else np.full(sim.n_clients, 1.0 / sim.n_clients),
@@ -84,9 +91,6 @@ class FedSimulator:
     # ------------------------------------------------------------------
     def _epoch_split(self, carry, batch):
         """One local epoch of split training (any of sfl_ga / sfl / psl)."""
-        from repro.compress import (broadcast_channel, unicast_channel,
-                                    uplink_channel)
-
         cfg, sim, v = self.cfg, self.sim, self.sim.cut
         cp, sp = carry
         x, y, seed = batch  # (N,B,H,W,C), (N,B), uint32 scalar
@@ -97,7 +101,7 @@ class FedSimulator:
         smashed = jax.vmap(client_fwd)(cp, x)  # (N,B,...)
         # uplink: each client ships an encoded X(v); the server trains
         # against the reconstruction (quantization-aware protocol)
-        smashed = uplink_channel(self.up_codec, smashed, seed)
+        smashed = self.proto.encode_uplink(smashed, seed)
 
         def srv_loss(s, sm, yb):
             return cnn.server_loss(s, sm, yb, cfg, v)
@@ -106,15 +110,9 @@ class FedSimulator:
             lambda s, sm, yb: jax.value_and_grad(srv_loss, argnums=(0, 1))(s, sm, yb)
         )(sp, smashed, y)
 
-        if sim.scheme == "sfl_ga":
-            # eq. 5: aggregate smashed-data gradients, broadcast to all;
-            # the broadcast is ONE downlink payload
-            w = self.rho.reshape((-1,) + (1,) * (s_n.ndim - 1))
-            agg = jnp.sum(s_n * w, axis=0, keepdims=True)
-            agg = broadcast_channel(self.down_codec, agg[0], seed)[None]
-            s_ct = jnp.broadcast_to(agg, s_n.shape)
-        else:  # sfl / psl: per-client cotangent (unicast downlink)
-            s_ct = unicast_channel(self.down_codec, s_n, seed)
+        # eq. 5 for sfl_ga (ONE broadcast payload); per-client unicast
+        # cotangents for sfl / psl
+        s_ct = self.proto.downlink_cotangent(s_n, self.rho, seed)
 
         def client_grad(c, xb, ct):
             _, vjp = jax.vjp(lambda cc: client_fwd(cc, xb), c)
@@ -138,45 +136,23 @@ class FedSimulator:
         cp = jax.tree.map(lambda p, g: p - sim.lr * g, cp, g_n)
         return (cp, []), jnp.sum(loss_n * self.rho)
 
-    def _aggregate(self, tree):
-        w = self.rho
-
-        def avg(p):
-            ww = w.reshape((-1,) + (1,) * (p.ndim - 1))
-            m = jnp.sum(p * ww, axis=0, keepdims=True)
-            return jnp.broadcast_to(m, p.shape)
-
-        return jax.tree.map(avg, tree)
-
     def _round(self, state, x, y, seed):
         """x: (N, τ, B, H, W, C); y: (N, τ, B); seed: uint32 scalar."""
-        epoch = self._epoch_fl if self.sim.scheme == "fl" else self._epoch_split
+        epoch = self._epoch_fl if not self.proto.spec.split else self._epoch_split
         xs = jnp.moveaxis(x, 1, 0)  # (τ, N, B, ...)
         ys = jnp.moveaxis(y, 1, 0)
-        seeds = jnp.asarray(seed, jnp.uint32) \
-            + jnp.arange(xs.shape[0], dtype=jnp.uint32) * jnp.uint32(65537)
+        seeds = self.proto.epoch_seeds(seed, xs.shape[0])
         (cp, sp), losses = jax.lax.scan(
             lambda c, b: epoch(c, b), (state["client"], state["server"]),
             (xs, ys, seeds))
 
-        if self.sim.scheme in ("sfl_ga", "sfl", "psl"):
-            sp = self._aggregate(sp)  # eq. 7 — server-side aggregation
-        if self.sim.scheme == "sfl":
-            cp = self._aggregate(cp)  # traditional SFL client aggregation
-        if self.sim.scheme == "fl":
-            cp = self._aggregate(cp)
-
-        # client drift: max_n ||w_c^n - mean||^2 — the Γ(φ(v)) proxy
-        def drift(p):
-            m = jnp.mean(p, axis=0, keepdims=True)
-            return jnp.sum(jnp.square(p - m))
-
-        d = sum(jax.tree.leaves(jax.tree.map(drift, cp)))
+        cp, sp = self.proto.finalize_round(cp, sp, self.rho)
+        d = self.proto.client_drift(cp)
         return {"client": cp, "server": sp}, losses.mean(), d
 
     # ------------------------------------------------------------------
     def run_round(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
-        seed = np.uint32((self.sim.codec_seed + self._t * 1000003) & 0xFFFFFFFF)
+        seed = self.proto.round_seed(self._t)
         self._t += 1
         self.state, loss, drift = self._round_jit(self.state, x, y, seed)
         bits = self.comm_bits_per_round()
@@ -200,41 +176,26 @@ class FedSimulator:
         return correct / len(x)
 
     # ------------------------------------------------------------------
-    def _payload_bits(self, codec, numel: int) -> int:
-        """Bits on the wire for a ``numel``-element cut-layer payload.
-        The identity codec prices at ``bytes_per_elem`` (backward
-        compatible with the pre-codec accounting)."""
-        if codec.is_identity:
-            return numel * self.sim.bytes_per_elem * 8
-        return codec.payload_bits((numel,))
-
     def comm_bits_per_round(self) -> Dict[str, int]:
-        """Codec-aware Fig. 4 accounting in bits. Downlink broadcast
-        counted once for SFL-GA (the point of the scheme); unicast per
-        client otherwise. Codecs compress the smashed-data/gradient
-        payloads; labels and model-sync traffic stay fp32."""
+        """Thin adapter over the unified accounting (sysmodel.traffic):
+        this simulator only supplies the CNN's element counts. Downlink
+        broadcast counted once for SFL-GA (the point of the scheme);
+        codecs compress the smashed-data/gradient payloads; labels and
+        model-sync traffic stay fp32."""
+        from repro.sysmodel.traffic import round_traffic_bits
+
         cfg, sim = self.cfg, self.sim
         be8 = sim.bytes_per_elem * 8
-        N, tau, B = sim.n_clients, sim.tau, sim.batch
-        if sim.scheme == "fl":
-            q = cnn.total_params(cfg) * be8
-            return {"up_bits": N * q, "down_bits": N * q,
-                    "total_bits": 2 * N * q}
-        X_elems = cnn.smashed_numel(cfg, sim.cut) * B
-        X_up = self._payload_bits(self.up_codec, X_elems)
-        X_dn = self._payload_bits(self.down_codec, X_elems)
-        labels = B * 32
-        phi_b = cnn.phi(cfg, sim.cut) * be8
-        up = N * tau * (X_up + labels)
-        if sim.scheme == "sfl_ga":
-            down = tau * X_dn
-        elif sim.scheme == "psl":
-            down = N * tau * X_dn
-        else:  # sfl: smashed grads + client model aggregation round-trips
-            up += N * phi_b
-            down = N * tau * X_dn + N * phi_b
-        return {"up_bits": int(up), "down_bits": int(down),
-                "total_bits": int(up + down)}
+        split = self.proto.spec.split
+        return round_traffic_bits(
+            sim.scheme, n_clients=sim.n_clients, tau=sim.tau,
+            smashed_elems=cnn.smashed_numel(cfg, sim.cut) * sim.batch
+            if split else 0,
+            label_bits=sim.batch * 32,
+            client_model_bits=cnn.phi(cfg, sim.cut) * be8 if split else 0,
+            full_model_bits=cnn.total_params(cfg) * be8,
+            uplink_codec=self.up_codec.name, downlink_codec=self.down_codec.name,
+            raw_bits_per_elem=be8)
 
     def comm_bytes_per_round(self) -> Dict[str, int]:
         """Byte view of ``comm_bits_per_round`` (exact for the default

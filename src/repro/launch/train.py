@@ -8,8 +8,15 @@ Two modes:
 * CNN mode (``--arch paper-cnn``): the paper's own experiment via the
   federated simulator.
 
+Both modes run the same protocol engine (core.protocol): ``--uplink-codec``
+/ ``--downlink-codec`` put a lossy transport on the cut-layer boundary and
+``--tau`` runs τ local steps per round; traffic is reported by the unified
+``sysmodel.traffic`` accounting.
+
 Examples:
   python -m repro.launch.train --arch granite-8b --preset 100m --steps 300
+  python -m repro.launch.train --arch granite-8b --preset smoke --steps 2 \
+      --uplink-codec int8 --downlink-codec int8 --tau 2
   python -m repro.launch.train --arch paper-cnn --scheme sfl_ga --cut 2 --rounds 100
 """
 from __future__ import annotations
@@ -43,10 +50,14 @@ def train_lm(args) -> dict:
             num_kv_heads=4 if cfg.num_kv_heads else 0,
             d_ff=min(cfg.d_ff, 2048) if cfg.d_ff else 0,
             vocab_size=min(cfg.vocab_size, 32768), head_dim=64)
-    n, b, S = args.clients, args.batch, args.seq
+    from repro.core.protocol import round_seed
+
+    n, b, S, tau = args.clients, args.batch, args.seq, args.tau
     tcfg = TrainConfig(model=cfg, algo=args.scheme, cut_layer=args.cut,
                        compute_dtype="float32", param_dtype="float32",
-                       lr=args.lr, remat=False)
+                       lr=args.lr, remat=False, tau=tau,
+                       uplink_codec=args.uplink_codec,
+                       downlink_codec=args.downlink_codec, seed=args.seed)
     plan = lm.build_plan(cfg, args.cut)
     params = alg.split_lm_params(
         lm.init_lm(jax.random.key(args.seed), plan, jnp.float32), n)
@@ -54,13 +65,15 @@ def train_lm(args) -> dict:
     opt_state = opt.init(params)
     step = jax.jit(alg.make_train_step(plan, tcfg, opt, n))
 
-    it = synthetic_token_batches(cfg.vocab_size, n * b, S, seed=args.seed)
+    it = synthetic_token_batches(cfg.vocab_size, n * b * tau, S, seed=args.seed)
+    shape = (n, b, S) if tau == 1 else (n, tau, b, S)
     losses = []
     t0 = time.time()
     for i in range(args.steps):
         toks, labels = next(it)
-        batch = {"tokens": jnp.asarray(toks.reshape(n, b, S)),
-                 "labels": jnp.asarray(labels.reshape(n, b, S))}
+        batch = {"tokens": jnp.asarray(toks.reshape(shape)),
+                 "labels": jnp.asarray(labels.reshape(shape)),
+                 "seed": round_seed(args.seed, i)}
         params, opt_state, m = step(params, opt_state, batch)
         losses.append(float(m["loss"]))
         if (i + 1) % args.log_every == 0:
@@ -71,8 +84,16 @@ def train_lm(args) -> dict:
                         {"arch": cfg.name, "algo": args.scheme,
                          "steps": args.steps, "final_loss": losses[-1]})
         print(f"checkpoint -> {args.checkpoint}")
-    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
-    return {"first_loss": losses[0], "final_loss": losses[-1]}
+    # unified per-round traffic (sysmodel.traffic via the LLM adapter);
+    # this run computes in float32, so the raw wire is 4 bytes/element
+    cb = alg.comm_bytes_per_round(
+        cfg, plan, args.scheme, n, b, S, tau=tau, bytes_per_elem=4,
+        uplink_codec=args.uplink_codec, downlink_codec=args.downlink_codec)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+          f"comm/round {cb['total_bytes']/1e6:.2f} MB "
+          f"(up {cb['up_bytes']/1e6:.2f} / down {cb['down_bytes']/1e6:.2f}, "
+          f"codecs {args.uplink_codec}/{args.downlink_codec})")
+    return {"first_loss": losses[0], "final_loss": losses[-1], "comm": cb}
 
 
 def train_cnn(args) -> dict:
@@ -87,7 +108,9 @@ def train_cnn(args) -> dict:
     sim = FedSimulator(LIGHT_CONFIG,
                        SimConfig(scheme=args.scheme, cut=args.cut,
                                  n_clients=args.clients, batch=args.batch,
-                                 tau=args.tau, lr=args.lr),
+                                 tau=args.tau, lr=args.lr,
+                                 uplink_codec=args.uplink_codec,
+                                 downlink_codec=args.downlink_codec),
                        rho=rho_weights(parts), seed=args.seed)
     rng = np.random.RandomState(args.seed)
     for r in range(args.rounds):
@@ -118,7 +141,12 @@ def main(argv=None):
     p.add_argument("--seq", type=int, default=128)
     p.add_argument("--steps", type=int, default=50)
     p.add_argument("--rounds", type=int, default=50)
-    p.add_argument("--tau", type=int, default=1)
+    p.add_argument("--tau", type=int, default=1,
+                   help="local steps per round (both LM and CNN modes)")
+    p.add_argument("--uplink-codec", default="fp32",
+                   help="cut-layer uplink codec: fp32|bf16|fp8|int8|int4|topkP")
+    p.add_argument("--downlink-codec", default="fp32",
+                   help="cut-layer downlink codec (gradient broadcast/unicast)")
     p.add_argument("--lr", type=float, default=0.05)
     p.add_argument("--optimizer", default="sgd")
     p.add_argument("--dataset", default="mnist")

@@ -2,3 +2,6 @@ from repro.sysmodel.comm import CommParams, downlink_rate, uplink_rate  # noqa: 
 from repro.sysmodel.comp import CompParams  # noqa: F401
 from repro.sysmodel.latency import LatencyModel, round_latency  # noqa: F401
 from repro.sysmodel.privacy import privacy_leakage, privacy_ok  # noqa: F401
+from repro.sysmodel.traffic import (round_traffic_bits,  # noqa: F401
+                                    round_traffic_bytes,
+                                    scheme_traffic_table, wire_bits)

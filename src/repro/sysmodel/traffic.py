@@ -1,0 +1,103 @@
+"""Single codec-aware per-scheme traffic accounting (DESIGN.md §2.3).
+
+Every per-round bits/bytes number the repo reports — the CNN simulator's
+``comm_bits_per_round``, the LLM path's ``comm_bytes_per_round``, the CCC
+environment's ``X_t(v)`` uplink payload — is produced HERE and nowhere
+else. Callers supply workload-specific element counts (smashed-data
+elements per payload, label bits, model sizes); this module owns the
+scheme structure (who sends what, how often) and the codec wire formats
+(via ``repro.sysmodel.payload``).
+
+Scheme structure per round (eqs. 5, 7, 12-13; N clients, τ local epochs):
+
+===========  ==============================  ==============================
+scheme       uplink                          downlink
+===========  ==============================  ==============================
+``sfl_ga``   N·τ·(X + labels)                τ·X — ONE broadcast (eq. 5)
+``psl``      N·τ·(X + labels)                N·τ·X (per-client unicast)
+``sfl``      N·τ·(X + labels) + N·φ          N·τ·X + N·φ (model sync)
+``fl``       N·q                             N·q (full-model exchange)
+===========  ==============================  ==============================
+
+X is the cut-layer payload priced under the transport codec; labels ride
+the uplink uncompressed; model-sync payloads (φ client-side bytes for
+``sfl``, q full-model bytes for ``fl``) stay at the raw wire precision in
+both math and accounting.
+
+Pure stdlib on purpose (like ``payload``): the system model and the CCC
+reward loop price payloads ~10^4 times per run without importing jax.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, Tuple
+
+from repro.sysmodel.payload import spec_for
+
+SCHEMES: Tuple[str, ...] = ("sfl_ga", "sfl", "psl", "fl")
+
+
+def wire_bits(codec: str, numel: int, raw_bits_per_elem: float = 32.0) -> int:
+    """Bits on the wire for a ``numel``-element cut-layer payload.
+
+    The ``fp32`` passthrough prices at ``raw_bits_per_elem`` (the caller's
+    uncompressed wire precision — 32 for the CNN simulator's fp32 floats,
+    16 for a bf16 LLM boundary), which keeps pre-codec accounting exact.
+    Real codecs define their own absolute wire format via ``PayloadSpec``.
+    """
+    if numel <= 0:
+        return 0
+    if codec is None or codec == "fp32":
+        return int(math.ceil(numel * raw_bits_per_elem))
+    return spec_for(codec).payload_bits(numel)
+
+
+def round_traffic_bits(scheme: str, *, n_clients: int, tau: int = 1,
+                       smashed_elems: int = 0, label_bits: int = 0,
+                       client_model_bits: int = 0, full_model_bits: int = 0,
+                       uplink_codec: str = "fp32",
+                       downlink_codec: str = "fp32",
+                       raw_bits_per_elem: float = 32.0) -> Dict[str, int]:
+    """Per-round traffic of one scheme, in bits.
+
+    * ``smashed_elems`` — elements in ONE cut-layer payload (per client,
+      per local epoch): batch × smashed-activation size.
+    * ``label_bits`` — label bits per client per local epoch (uplink).
+    * ``client_model_bits`` — φ(v) on the wire (``sfl`` model sync).
+    * ``full_model_bits`` — q on the wire (``fl`` full-model exchange).
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; known: {SCHEMES}")
+    N = n_clients
+    if scheme == "fl":
+        up = down = N * full_model_bits
+    else:
+        X_up = wire_bits(uplink_codec, smashed_elems, raw_bits_per_elem)
+        X_dn = wire_bits(downlink_codec, smashed_elems, raw_bits_per_elem)
+        up = N * tau * (X_up + label_bits)
+        if scheme == "sfl_ga":
+            down = tau * X_dn  # the aggregated gradient, broadcast ONCE
+        elif scheme == "psl":
+            down = N * tau * X_dn
+        else:  # sfl: per-client unicast + client-model aggregation round-trip
+            up += N * client_model_bits
+            down = N * tau * X_dn + N * client_model_bits
+    return {"up_bits": int(up), "down_bits": int(down),
+            "total_bits": int(up + down)}
+
+
+def round_traffic_bytes(scheme: str, **kw) -> Dict[str, int]:
+    """Byte view of ``round_traffic_bits`` (ceil per direction; exact for
+    whole-byte wire formats, which every shipped codec has)."""
+    bits = round_traffic_bits(scheme, **kw)
+    return {"up_bytes": -(-bits["up_bits"] // 8),
+            "down_bytes": -(-bits["down_bits"] // 8),
+            "total_bytes": -(-bits["up_bits"] // 8)
+            + (-(-bits["down_bits"] // 8))}
+
+
+def scheme_traffic_table(schemes: Iterable[str] = SCHEMES,
+                         **kw) -> Dict[str, Dict[str, int]]:
+    """Convenience for benchmarks/examples: one accounting call per scheme
+    over a shared workload description."""
+    return {s: round_traffic_bits(s, **kw) for s in schemes}

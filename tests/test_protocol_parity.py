@@ -1,0 +1,247 @@
+"""fp32 parity: the engine-backed paths must be bit-identical to the
+pre-engine implementations.
+
+The references below are line-for-line transcriptions of the pre-refactor
+math (commit 372bf96): the simulator's inline sfl_ga epoch and the LLM
+train step that called plain ``gradagg`` with no codec/τ/seed plumbing.
+With default configs (fp32 codecs, τ=1) the engine must reproduce them
+bit for bit — not approximately.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_config, reduced_config
+from repro.core import algorithms as alg
+from repro.core.gradagg import gradagg, uniform_rho
+from repro.core.protocol import ProtocolEngine, scheme_spec
+from repro.models import lm as lm_mod
+from repro.optim import make_optimizer
+
+
+# ---------------------------------------------------------------- CNN sim
+class TestSimulatorParity:
+    def _data(self, n, tau, b):
+        rng = np.random.RandomState(7)
+        x = rng.rand(n, tau, b, 28, 28, 1).astype(np.float32)
+        y = rng.randint(0, 10, (n, tau, b)).astype(np.int32)
+        return x, y
+
+    def _reference_round(self, cfg, scheme, cut, state, rho, x, y, lr):
+        """Pre-refactor fp32 split round: transcription of the old
+        ``FedSimulator._round`` (lax.scan over τ epochs inside one jit;
+        the fp32 channels short-circuited, so they are omitted)."""
+        from repro.models import cnn
+
+        def epoch(carry, batch):
+            cp, sp = carry
+            xb, yb = batch
+
+            def client_fwd(c, xx):
+                return cnn.client_forward(c, xx, cfg, cut)
+
+            smashed = jax.vmap(client_fwd)(cp, xb)
+            loss_n, (gs_n, s_n) = jax.vmap(
+                lambda s, sm, yy: jax.value_and_grad(
+                    lambda ss, mm: cnn.server_loss(ss, mm, yy, cfg, cut),
+                    argnums=(0, 1))(s, sm)
+            )(sp, smashed, yb)
+            if scheme == "sfl_ga":
+                w = rho.reshape((-1,) + (1,) * (s_n.ndim - 1))
+                agg = jnp.sum(s_n * w, axis=0, keepdims=True)
+                s_ct = jnp.broadcast_to(agg, s_n.shape)
+            else:
+                s_ct = s_n
+
+            def client_grad(c, xx, ct):
+                _, vjp = jax.vjp(lambda cc: client_fwd(cc, xx), c)
+                return vjp(ct)[0]
+
+            gc_n = jax.vmap(client_grad)(cp, xb, s_ct)
+            cp = jax.tree.map(lambda p, g: p - lr * g, cp, gc_n)
+            sp = jax.tree.map(lambda p, g: p - lr * g, sp, gs_n)
+            return (cp, sp), jnp.sum(loss_n * rho)
+
+        @jax.jit
+        def round_fn(state, x, y):
+            xs = jnp.moveaxis(x, 1, 0)
+            ys = jnp.moveaxis(y, 1, 0)
+            (cp, sp), losses = jax.lax.scan(
+                epoch, (state["client"], state["server"]), (xs, ys))
+
+            def avg(p):
+                ww = rho.reshape((-1,) + (1,) * (p.ndim - 1))
+                m = jnp.sum(p * ww, axis=0, keepdims=True)
+                return jnp.broadcast_to(m, p.shape)
+
+            sp = jax.tree.map(avg, sp)  # eq. 7
+            if scheme == "sfl":
+                cp = jax.tree.map(avg, cp)
+            return {"client": cp, "server": sp}, losses.mean()
+
+        out, loss = round_fn(state, jnp.asarray(x), jnp.asarray(y))
+        return out, float(loss)
+
+    @pytest.mark.parametrize("scheme", ["sfl_ga", "sfl", "psl"])
+    def test_round_bitexact(self, scheme):
+        from repro.configs.paper_cnn import LIGHT_CONFIG
+        from repro.core.simulator import FedSimulator, SimConfig
+
+        n, tau, b, cut, lr = 3, 2, 8, 1, 0.05
+        x, y = self._data(n, tau, b)
+        sim = FedSimulator(LIGHT_CONFIG, SimConfig(
+            scheme=scheme, cut=cut, n_clients=n, batch=b, tau=tau, lr=lr),
+            seed=11)
+        ref_state = jax.tree.map(lambda p: p, sim.state)
+        ref_state, ref_loss = self._reference_round(
+            LIGHT_CONFIG, scheme, cut, ref_state, sim.rho, x, y, lr)
+        m = sim.run_round(x, y)
+        assert m["loss"] == pytest.approx(ref_loss, abs=0, rel=0)
+        for pa, pb in zip(jax.tree.leaves(sim.state),
+                          jax.tree.leaves(ref_state)):
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+# ---------------------------------------------------------------- LLM path
+def _setup_llm(algo="sfl_ga", **tkw):
+    cfg = reduced_config(get_config("granite-8b"))
+    plan = lm_mod.build_plan(cfg, 1)
+    N, b, S = 2, 2, 32
+    params = alg.split_lm_params(
+        lm_mod.init_lm(jax.random.key(0), plan, jnp.float32), N)
+    tcfg = TrainConfig(model=cfg, algo=algo, cut_layer=1,
+                       compute_dtype="float32", remat=False, **tkw)
+    opt = make_optimizer("sgd", 0.05)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (N, b, S))),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (N, b, S)))}
+    return cfg, plan, tcfg, opt, params, batch, N
+
+
+class TestLLMParity:
+    def _reference_step(self, plan, tcfg, opt, rho):
+        """Pre-refactor train step: plain gradagg, no codec/τ/seed."""
+
+        def loss_fn(params, batch):
+            tokens, labels = batch["tokens"], batch["labels"]
+            smashed, aux_c = jax.vmap(
+                lambda cp, t: alg._client_forward_one(
+                    cp, plan, t, None, "jnp", tcfg.remat, jnp.float32)
+            )(params["client"], tokens)
+            if tcfg.algo == "sfl_ga":
+                smashed = gradagg(smashed, rho)
+            nb, b, S, d = smashed.shape
+            logits, aux_s = alg._server_forward(
+                params["server"], plan, smashed.reshape(nb * b, S, d),
+                "jnp", tcfg.remat)
+            ce = lm_mod.cross_entropy(logits, labels.reshape(nb * b, S))
+            return ce + 0.01 * (jnp.sum(aux_c) + aux_s), {"ce": ce}
+
+        def step(params, opt_state, batch):
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            up, opt_state = opt.update(g, opt_state, params)
+            params = alg.apply_updates(params, up)
+            if tcfg.algo == "sfl":
+                from repro.core.gradagg import client_param_average
+                params = dict(params, client=client_param_average(
+                    params["client"], rho))
+            return params, opt_state, dict(m, loss=loss)
+
+        return step
+
+    @pytest.mark.parametrize("algo", ["sfl_ga", "sfl", "psl"])
+    def test_default_config_bitexact(self, algo):
+        cfg, plan, tcfg, opt, params, batch, N = _setup_llm(algo)
+        rho = uniform_rho(N)
+        new_step = jax.jit(alg.make_train_step(plan, tcfg, opt, N))
+        ref_step = jax.jit(self._reference_step(plan, tcfg, opt, rho))
+        pa, sa = params, opt.init(params)
+        pb, sb = params, opt.init(params)
+        for _ in range(3):
+            pa, sa, ma = new_step(pa, sa, batch)
+            pb, sb, mb = ref_step(pb, sb, batch)
+            assert float(ma["loss"]) == float(mb["loss"]), algo
+        for xa, xb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+    def test_tau_scan_matches_sequential_steps(self):
+        """τ=2 via lax.scan == two sequential τ=1 steps with the engine's
+        per-epoch seeds (client aggregation deferred to round end is
+        irrelevant for sfl_ga, which never aggregates clients)."""
+        cfg, plan, tcfg1, opt, params, batch, N = _setup_llm("sfl_ga")
+        tcfg2 = TrainConfig(model=cfg, algo="sfl_ga", cut_layer=1,
+                            compute_dtype="float32", remat=False, tau=2)
+        step1 = jax.jit(alg.make_train_step(plan, tcfg1, opt, N))
+        step2 = jax.jit(alg.make_train_step(plan, tcfg2, opt, N))
+        rng = np.random.RandomState(1)
+        N_, b, S = batch["tokens"].shape
+        toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (N_, 2, b, S)))
+        labs = jnp.asarray(rng.randint(0, cfg.vocab_size, (N_, 2, b, S)))
+        seed = jnp.uint32(9)
+
+        p2, s2, m2 = step2(params, opt.init(params),
+                           {"tokens": toks, "labels": labs, "seed": seed})
+        seeds = ProtocolEngine.epoch_seeds(seed, 2)
+        p1, s1 = params, opt.init(params)
+        losses = []
+        for k in range(2):
+            p1, s1, m1 = step1(p1, s1, {"tokens": toks[:, k],
+                                        "labels": labs[:, k],
+                                        "seed": seeds[k]})
+            losses.append(float(m1["loss"]))
+        assert float(m2["loss"]) == pytest.approx(np.mean(losses), rel=1e-6)
+        for xa, xb in zip(jax.tree.leaves(p2), jax.tree.leaves(p1)):
+            np.testing.assert_allclose(np.asarray(xa), np.asarray(xb),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_int8_boundary_trains_and_perturbs_little(self):
+        cfg, plan, tcfg, opt, params, batch, N = _setup_llm("sfl_ga")
+        tc8 = TrainConfig(model=cfg, algo="sfl_ga", cut_layer=1,
+                          compute_dtype="float32", remat=False,
+                          uplink_codec="int8", downlink_codec="int8")
+        base = jax.jit(alg.make_train_step(plan, tcfg, opt, N))
+        comp = jax.jit(alg.make_train_step(plan, tc8, opt, N))
+        _, _, mb = base(params, opt.init(params), batch)
+        _, _, mc = comp(params, opt.init(params), dict(batch, seed=jnp.uint32(3)))
+        lb, lc = float(mb["loss"]), float(mc["loss"])
+        assert np.isfinite(lc)
+        assert abs(lc - lb) < 0.1 * abs(lb) + 0.1
+
+    def test_unicast_boundary_psl_int8(self):
+        """sfl/psl get the codec channel too (lossy unicast cotangents)."""
+        cfg, plan, tcfg, opt, params, batch, N = _setup_llm(
+            "psl", uplink_codec="int8", downlink_codec="int8")
+        step = jax.jit(alg.make_train_step(plan, tcfg, opt, N))
+        p, s, m = step(params, opt.init(params), dict(batch, seed=jnp.uint32(5)))
+        assert np.isfinite(float(m["loss"]))
+        for x in jax.tree.leaves(p):
+            assert bool(jnp.all(jnp.isfinite(x)))
+
+
+# ---------------------------------------------------------------- engine
+class TestEngine:
+    def test_scheme_table(self):
+        assert scheme_spec("sfl_ga").gradient_broadcast
+        assert not scheme_spec("sfl_ga").client_aggregate
+        assert scheme_spec("sfl").client_aggregate
+        assert not scheme_spec("psl").client_aggregate
+        assert not scheme_spec("fl").split
+        with pytest.raises(ValueError):
+            scheme_spec("nope")
+
+    def test_fp32_boundary_is_noop_for_unicast_schemes(self):
+        eng = ProtocolEngine("psl")
+        x = jnp.ones((2, 3))
+        assert eng.boundary(x, uniform_rho(2)) is x
+
+    def test_seed_schedule_matches_simulator_convention(self):
+        eng = ProtocolEngine("sfl_ga", base_seed=5)
+        assert int(eng.round_seed(3)) == (5 + 3 * 1000003) & 0xFFFFFFFF
+        seeds = np.asarray(eng.epoch_seeds(np.uint32(10), 3))
+        np.testing.assert_array_equal(seeds, [10, 10 + 65537, 10 + 2 * 65537])
+
+    def test_drift_zero_when_clients_equal(self):
+        tree = {"w": jnp.ones((4, 3, 2))}
+        assert float(ProtocolEngine.client_drift(tree)) == 0.0

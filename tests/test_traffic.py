@@ -1,0 +1,140 @@
+"""Golden-value tests for the unified traffic accounting.
+
+The numbers below were produced by the PRE-refactor implementations
+(`simulator.comm_bits_per_round` with its inline per-scheme formulas,
+`algorithms.comm_bytes_per_round` with its own copy, `ccc/env`'s third
+copy) at commit 372bf96, for a fixed workload. The unified
+``sysmodel.traffic`` module — and every thin adapter over it — must
+reproduce them exactly.
+"""
+import pytest
+
+from repro.sysmodel.traffic import (round_traffic_bits, round_traffic_bytes,
+                                    scheme_traffic_table, wire_bits)
+
+# LIGHT CNN, cut=2 (cut=1 for fl), N=10, batch=16, tau=2, both codecs equal.
+CNN_GOLDEN = {
+    ("sfl_ga", "fp32"): (8038400, 802816),
+    ("sfl_ga", "int8"): (2048640, 203840),
+    ("sfl_ga", "topk10"): (1616640, 160640),
+    ("sfl", "fp32"): (9134080, 9123840),
+    ("sfl", "int8"): (3144320, 3134080),
+    ("sfl", "topk10"): (2712320, 2702080),
+    ("psl", "fp32"): (8038400, 8028160),
+    ("psl", "int8"): (2048640, 2038400),
+    ("psl", "topk10"): (1616640, 1606400),
+    ("fl", "fp32"): (34675840, 34675840),
+    ("fl", "int8"): (34675840, 34675840),
+    ("fl", "topk10"): (34675840, 34675840),
+}
+
+# granite-8b plan cut=2, N=8, b=4, S=1024, tau=3, bytes_per_elem=2 (bytes).
+LLM_GOLDEN = {
+    "sfl_ga": (805699584, 100663296),
+    "sfl": (11006509056, 11006115840),
+    "psl": (805699584, 805306368),
+    "fl": (132074962944, 132074962944),
+}
+
+
+def _cnn_kwargs(scheme, codec):
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.models import cnn
+
+    cfg = LIGHT_CONFIG
+    cut = 2 if scheme != "fl" else 1
+    split = scheme != "fl"
+    return dict(n_clients=10, tau=2,
+                smashed_elems=cnn.smashed_numel(cfg, cut) * 16 if split else 0,
+                label_bits=16 * 32,
+                client_model_bits=cnn.phi(cfg, cut) * 32 if split else 0,
+                full_model_bits=cnn.total_params(cfg) * 32,
+                uplink_codec=codec, downlink_codec=codec)
+
+
+@pytest.mark.parametrize("scheme,codec", sorted(CNN_GOLDEN))
+def test_cnn_golden_bits(scheme, codec):
+    up, down = CNN_GOLDEN[(scheme, codec)]
+    got = round_traffic_bits(scheme, **_cnn_kwargs(scheme, codec))
+    assert got == {"up_bits": up, "down_bits": down, "total_bits": up + down}
+
+
+@pytest.mark.parametrize("scheme,codec", sorted(CNN_GOLDEN))
+def test_simulator_adapter_matches_golden(scheme, codec):
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.core.simulator import FedSimulator, SimConfig
+
+    up, down = CNN_GOLDEN[(scheme, codec)]
+    sim = FedSimulator(LIGHT_CONFIG, SimConfig(
+        scheme=scheme, cut=2 if scheme != "fl" else 1, n_clients=10,
+        batch=16, tau=2, uplink_codec=codec, downlink_codec=codec), seed=0)
+    got = sim.comm_bits_per_round()
+    assert (got["up_bits"], got["down_bits"]) == (up, down)
+
+
+@pytest.mark.parametrize("algo", sorted(LLM_GOLDEN))
+def test_llm_adapter_matches_golden(algo):
+    from repro.configs import get_config
+    from repro.core.algorithms import comm_bytes_per_round
+    from repro.models import lm
+
+    cfg = get_config("granite-8b")
+    plan = lm.build_plan(cfg, 2)
+    up, down = LLM_GOLDEN[algo]
+    got = comm_bytes_per_round(cfg, plan, algo, n_clients=8,
+                               per_client_batch=4, seq=1024, tau=3)
+    assert got == {"up_bytes": up, "down_bytes": down,
+                   "total_bytes": up + down}
+
+
+def test_llm_int8_shrinks_totals_3_9x():
+    """Acceptance: int8 transport shrinks the LLM per-round totals >=3.9x
+    vs the fp32 wire (bytes_per_elem=4, the float32 training launcher)."""
+    from repro.configs import get_config
+    from repro.core.algorithms import comm_bytes_per_round
+    from repro.models import lm
+
+    cfg = get_config("granite-8b")
+    plan = lm.build_plan(cfg, 2)
+    k = dict(n_clients=8, per_client_batch=4, seq=1024, bytes_per_elem=4)
+    for algo in ("sfl_ga", "psl"):
+        base = comm_bytes_per_round(cfg, plan, algo, **k)
+        comp = comm_bytes_per_round(cfg, plan, algo, uplink_codec="int8",
+                                    downlink_codec="int8", **k)
+        for key in ("up_bytes", "down_bytes", "total_bytes"):
+            assert base[key] / comp[key] >= 3.9, (algo, key)
+
+
+def test_ccc_env_adapter_consistent():
+    from repro.ccc.env import CuttingPointEnv, cnn_env_config
+
+    env = CuttingPointEnv(cnn_env_config(horizon=2, batch=16))
+    for v in (1, 2, 3):
+        elems = env.cfg.smashed_elems[v - 1] * env.cfg.batch
+        assert env.smashed_bits(v, "fp32") == elems * 32
+        assert env.smashed_bits(v, "int8") == wire_bits("int8", elems)
+        assert env.smashed_bits(v, "int8") < env.smashed_bits(v, "fp32")
+
+
+def test_wire_bits_raw_precision_and_codecs():
+    # fp32 passthrough prices at the caller's raw wire precision
+    assert wire_bits("fp32", 1000, 32.0) == 32000
+    assert wire_bits("fp32", 1000, 16.0) == 16000
+    assert wire_bits("fp32", 0, 32.0) == 0
+    # real codecs define their own absolute format (tile scales included)
+    assert wire_bits("int8", 256, 32.0) == 256 * 8 + 32
+    assert wire_bits("int8", 256, 16.0) == 256 * 8 + 32
+
+
+def test_unknown_scheme_raises():
+    with pytest.raises(ValueError):
+        round_traffic_bits("sfl_xx", n_clients=2)
+
+
+def test_bytes_view_and_table():
+    kw = _cnn_kwargs("sfl_ga", "fp32")
+    bits = round_traffic_bits("sfl_ga", **kw)
+    by = round_traffic_bytes("sfl_ga", **kw)
+    assert by["total_bytes"] == bits["total_bits"] // 8
+    table = scheme_traffic_table(("sfl_ga", "psl"), **kw)
+    assert table["sfl_ga"]["down_bits"] < table["psl"]["down_bits"]
