@@ -1,0 +1,123 @@
+"""CCC throughput: the batched device-resident path vs the numpy loop.
+
+Times three levels of the stack (CSV ``name,us_per_call,derived``):
+
+* ``p21_solve``        — scalar numpy ``solve_p21`` per round.
+* ``p21_solve_batched``— jitted ``solve_p21_batched`` per round (B at once).
+* ``env_step``         — scalar ``CuttingPointEnv.step`` (reward incl. solve).
+* ``env_step_batched`` — jitted ``BatchedCuttingPointEnv.step`` per env-step.
+* ``fused_train_step`` — the full act+observe+update fused DDQN step.
+
+The acceptance bar (ISSUE 3): batched reward evaluation at B=64 must be
+≥ 10× faster per env-step than the numpy loop on CPU.
+
+Run:  PYTHONPATH=src:. python benchmarks/ccc_bench.py [--quick] [--n-envs 64]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _timeit(fn, iters: int, warmup: int = 1) -> float:
+    """Seconds per call."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing iterations (CI smoke)")
+    ap.add_argument("--n-envs", type=int, default=64)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.ccc.convex import solve_p21
+    from repro.ccc.convex_jax import solve_p21_batched
+    from repro.ccc.ddqn import BatchedDDQNAgent, DDQNConfig
+    from repro.ccc.env import (BatchedCuttingPointEnv, CuttingPointEnv,
+                               cnn_env_config)
+    from repro.sysmodel.comm import CommParams, path_loss_gain
+    from repro.sysmodel.comp import CompParams
+
+    B = args.n_envs
+    iters = 3 if args.quick else 10
+    np_iters = 4 if args.quick else 16
+
+    # ---- P2.1 solver ------------------------------------------------
+    rng = np.random.RandomState(0)
+    N = 10
+    gains = np.stack([path_loss_gain(rng.uniform(0.05, 0.5, N), rng)
+                      for _ in range(B)])
+    X = rng.uniform(1e5, 5e7, B)
+    comm, comp = CommParams(), CompParams()
+
+    t_np = _timeit(lambda: solve_p21(gains[0], X[0], 16, comm, comp),
+                   np_iters)
+    print(f"p21_solve,{t_np*1e6:.0f},numpy per-round")
+
+    solve = jax.jit(lambda g, x: solve_p21_batched(g, x, 16.0, comm, comp))
+    gj = jnp.asarray(gains, jnp.float32)
+    xj = jnp.asarray(X, jnp.float32)
+    t_j = _timeit(lambda: jax.block_until_ready(solve(gj, xj).chi), iters)
+    print(f"p21_solve_batched,{t_j/B*1e6:.0f},B={B} jitted per-round "
+          f"speedup={t_np/(t_j/B):.1f}x")
+
+    # ---- env reward step (solve + tables + fading redraw) ----------
+    cfg = cnn_env_config(horizon=10, batch=16, epsilon=0.001, seed=0)
+    senv = CuttingPointEnv(cfg)
+    senv.reset()
+    arng = np.random.RandomState(1)
+
+    def np_step():
+        senv.step(int(arng.randint(senv.n_actions)))
+
+    t_np_env = _timeit(np_step, np_iters)
+    print(f"env_step,{t_np_env*1e6:.0f},numpy per-env-step")
+
+    benv = BatchedCuttingPointEnv(cfg, n_envs=B)
+    state, obs = benv.reset()
+    actions = jnp.asarray(arng.randint(0, benv.n_actions, B), jnp.int32)
+    bstep = jax.jit(benv.step)
+
+    def jax_step():
+        s2, o, r, d, i = bstep(state, actions)
+        jax.block_until_ready(r)
+
+    t_j_env = _timeit(jax_step, iters)
+    env_speedup = t_np_env / (t_j_env / B)
+    print(f"env_step_batched,{t_j_env/B*1e6:.0f},B={B} jitted per-env-step "
+          f"speedup={env_speedup:.1f}x")
+
+    # ---- fused DDQN train step (act+env+replay+update+sync) --------
+    agent = BatchedDDQNAgent(DDQNConfig(state_dim=benv.state_dim,
+                                        n_actions=benv.n_actions, seed=0))
+    st, ob = benv.reset()
+    holder = {"st": st, "ob": ob}
+
+    def fused():
+        holder["st"], holder["ob"], r, *_ = agent.fused_step(
+            benv, holder["st"], holder["ob"])
+        jax.block_until_ready(r)
+
+    t_fused = _timeit(fused, iters)
+    print(f"fused_train_step,{t_fused/B*1e6:.0f},B={B} act+observe+update "
+          f"per-env-step")
+
+    ok = env_speedup >= 10.0
+    print(f"# batched-vs-numpy env-step speedup {env_speedup:.1f}x "
+          f"(target >=10x): {'OK' if ok else 'BELOW TARGET'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,33 +4,51 @@ Compares Algorithm 1 (DDQN cut + convex allocation) against:
 fixed-cut + optimal allocation, fixed-cut + fixed (equal-split) allocation,
 and random-cut + optimal allocation. Metric: cumulative latency + weighted
 cost over a horizon.
+
+``--backend jax`` trains Algorithm 1 on the batched device-resident path
+(B envs per fused step, DESIGN.md §11); the learned policy is then
+evaluated on the same scalar numpy env as every baseline, so the rows
+stay directly comparable across backends.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from benchmarks.common import FULL
-from repro.ccc.env import CuttingPointEnv, cnn_env_config
+from repro.ccc.env import (BatchedCuttingPointEnv, CuttingPointEnv,
+                           cnn_env_config)
 from repro.ccc.strategy import (fixed_alloc_policy_cost, fixed_cut_policy_cost,
-                                random_cut_policy_cost, run_algorithm1)
+                                random_cut_policy_cost, run_algorithm1,
+                                run_algorithm1_batched)
 
 
-def run(episodes: int = None, horizon: int = 10):
+def run(episodes: int = None, horizon: int = 10, backend: str = "numpy",
+        n_envs: int = 32):
     episodes = episodes or (200 if FULL else 60)
-    mk = lambda seed: CuttingPointEnv(cnn_env_config(
-        horizon=horizon, batch=16, epsilon=0.001, seed=seed))
-    res = run_algorithm1(mk(7), episodes=episodes)
+    kw = dict(horizon=horizon, batch=16, epsilon=0.001)
+    mk = lambda seed: CuttingPointEnv(cnn_env_config(seed=seed, **kw))
+    if backend == "jax":
+        benv = BatchedCuttingPointEnv(cnn_env_config(seed=7, **kw),
+                                      n_envs=min(n_envs, episodes))
+        res = run_algorithm1_batched(benv, episodes=episodes)
+        act = lambda s: int(res.agent.act(s)[0])
+    else:
+        res = run_algorithm1(mk(7), episodes=episodes)
+        act = lambda s: res.agent.act(s, greedy=True)
 
     env = mk(7)
     s = env.reset()
     alg1_lat, alg1_cost, done = 0.0, 0.0, False
     while not done:
-        a = res.agent.act(s, greedy=True)
+        a = act(s)
         s, r, done, info = env.step(a)
         alg1_lat += info["latency"]
         alg1_cost += -r
-    rows = [{"strategy": "algorithm1(ddqn+convex)", "latency": alg1_lat,
-             "cost": alg1_cost, "policy": res.greedy_policy}]
+    rows = [{"strategy": f"algorithm1(ddqn+convex,{backend})",
+             "latency": alg1_lat, "cost": alg1_cost,
+             "policy": res.greedy_policy}]
     for v in (1, 2):
         f = fixed_cut_policy_cost(mk(7), v, rounds=horizon)
         rows.append({"strategy": f"fixed_cut_v{v}_opt_alloc", **f})
@@ -42,8 +60,14 @@ def run(episodes: int = None, horizon: int = 10):
 
 
 def main():
-    print("# fig6 resource strategies (10-round horizon)")
-    for row in run():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy")
+    ap.add_argument("--episodes", type=int, default=None)
+    ap.add_argument("--n-envs", type=int, default=32)
+    args = ap.parse_args()
+    print(f"# fig6 resource strategies (10-round horizon, {args.backend})")
+    for row in run(episodes=args.episodes, backend=args.backend,
+                   n_envs=args.n_envs):
         extra = f" policy={row['policy']}" if "policy" in row else ""
         print(f"  {row['strategy']}: latency={row['latency']:.2f}s "
               f"cost={row['cost']:.2f}{extra}")

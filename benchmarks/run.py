@@ -58,7 +58,7 @@ def bench_fig6():
     from benchmarks import fig6_resource_strategies as f
 
     rows = {r["strategy"]: r for r in f.run()}
-    a1 = rows["algorithm1(ddqn+convex)"]
+    a1 = next(v for k, v in rows.items() if k.startswith("algorithm1"))
     fx = rows["fixed_cut_v2_fixed_alloc"]
     rd = rows["random_cut_opt_alloc"]
     return ("latency alg1=%.2f fixed_alloc_v2=%.2f random=%.2f"

@@ -8,20 +8,37 @@ compression extension): the agent jointly picks where to split AND how
 many bits per element cross the cut.
 
 Run:  PYTHONPATH=src python examples/ccc_optimize.py
+      PYTHONPATH=src python examples/ccc_optimize.py --backend jax
+
+``--backend jax`` swaps the per-episode numpy loop for the batched
+device-resident path (DESIGN.md §11): B envs per fused jitted step, the
+P2.1 oracle solved for the whole batch at once.
 """
+import argparse
+
 import numpy as np
 
-from repro.ccc.env import CuttingPointEnv, cnn_env_config
+from repro.ccc.env import (BatchedCuttingPointEnv, CuttingPointEnv,
+                           cnn_env_config)
 from repro.ccc.strategy import (fixed_alloc_policy_cost, fixed_cut_policy_cost,
-                                random_cut_policy_cost, run_algorithm1)
+                                random_cut_policy_cost, run_algorithm1,
+                                run_algorithm1_batched)
 
 
-def cutting_point_only():
+def _train(cfg, backend: str, episodes: int, n_envs: int, log_every: int = 0):
+    if backend == "jax":
+        env = BatchedCuttingPointEnv(cfg, n_envs=min(n_envs, episodes))
+        return run_algorithm1_batched(env, episodes=episodes,
+                                      log_every=log_every)
+    return run_algorithm1(CuttingPointEnv(cfg), episodes=episodes,
+                          log_every=log_every)
+
+
+def cutting_point_only(backend: str, episodes: int, n_envs: int):
     for eps in (0.001, 0.01):
-        print(f"\n=== privacy threshold eps={eps} ===")
-        env = CuttingPointEnv(cnn_env_config(horizon=10, batch=16,
-                                             epsilon=eps, seed=5))
-        res = run_algorithm1(env, episodes=60, log_every=20)
+        print(f"\n=== privacy threshold eps={eps} ({backend}) ===")
+        cfg = cnn_env_config(horizon=10, batch=16, epsilon=eps, seed=5)
+        res = _train(cfg, backend, episodes, n_envs, log_every=20)
         r0 = float(np.mean(res.episode_rewards[:6]))
         r1 = float(np.mean(res.episode_rewards[-6:]))
         print(f"Algorithm 1: episode reward {r0:.1f} -> {r1:.1f}; "
@@ -37,38 +54,47 @@ def cutting_point_only():
         print(f"  random cut + optimal allocation: cost={c['cost']:.1f}")
 
 
-def joint_cut_and_codec(eps: float = 0.001):
+def joint_cut_and_codec(backend: str, episodes: int, n_envs: int,
+                        eps: float = 0.001):
     """Widened action space: v × {fp32, bf16, int8, int4}. Lower-bit
     codecs shrink X_t(v) (cheaper uplink, lower χ) but pay a
     quantization-distortion penalty in the convergence term."""
-    print(f"\n=== joint cut + codec, eps={eps} ===")
+    print(f"\n=== joint cut + codec, eps={eps} ({backend}) ===")
     codecs = ("fp32", "bf16", "int8", "int4")
-    env = CuttingPointEnv(cnn_env_config(horizon=10, batch=16, epsilon=eps,
-                                         seed=5, codecs=codecs))
-    print(f"action space: {env.n_actions} = "
-          f"{len(env.cfg.phis)} cuts x {env.n_codecs} codecs")
-    res = run_algorithm1(env, episodes=80, log_every=20)
+    cfg = cnn_env_config(horizon=10, batch=16, epsilon=eps, seed=5,
+                         codecs=codecs)
+    n_acts = len(cfg.phis) * len(codecs)
+    print(f"action space: {n_acts} = {len(cfg.phis)} cuts x "
+          f"{len(codecs)} codecs")
+    res = _train(cfg, backend, episodes, n_envs, log_every=20)
     r0 = float(np.mean(res.episode_rewards[:6]))
     r1 = float(np.mean(res.episode_rewards[-6:]))
     print(f"Algorithm 1 (joint): episode reward {r0:.1f} -> {r1:.1f}")
     print(f"greedy (v, codec) per round: {res.greedy_policy}")
     # what the chosen codecs save on the wire at the greedy cuts
+    env = CuttingPointEnv(cfg)
     for v, codec in sorted(set(res.greedy_policy)):
         fp32 = env.smashed_bits(v, "fp32")
         got = env.smashed_bits(v, codec)
         print(f"  v={v} {codec}: X_t(v) {got/8e3:.1f} kB "
               f"({fp32/got:.2f}x smaller than fp32)")
     # fp32-only baseline on the same seeds: did codec freedom help?
-    base = CuttingPointEnv(cnn_env_config(horizon=10, batch=16, epsilon=eps,
-                                          seed=5))
-    bres = run_algorithm1(base, episodes=80)
-    print(f"fp32-only final reward {float(np.mean(bres.episode_rewards[-6:])):.1f} "
-          f"vs joint {r1:.1f}")
+    bres = _train(cnn_env_config(horizon=10, batch=16, epsilon=eps, seed=5),
+                  backend, episodes, n_envs)
+    print(f"fp32-only final reward "
+          f"{float(np.mean(bres.episode_rewards[-6:])):.1f} vs joint {r1:.1f}")
 
 
 def main():
-    cutting_point_only()
-    joint_cut_and_codec()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy")
+    ap.add_argument("--episodes", type=int, default=None,
+                    help="episodes per training run (default 60/80)")
+    ap.add_argument("--n-envs", type=int, default=32,
+                    help="parallel envs for --backend jax")
+    args = ap.parse_args()
+    cutting_point_only(args.backend, args.episodes or 60, args.n_envs)
+    joint_cut_and_codec(args.backend, args.episodes or 80, args.n_envs)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,7 @@
 from repro.ccc.convex import AllocationResult, latency_fixed_alloc, solve_p21  # noqa: F401
-from repro.ccc.ddqn import DDQNAgent, DDQNConfig  # noqa: F401
-from repro.ccc.env import CuttingEnvConfig, CuttingPointEnv, cnn_env_config  # noqa: F401
-from repro.ccc.strategy import run_algorithm1  # noqa: F401
+from repro.ccc.convex_jax import (BatchedAllocationResult,  # noqa: F401
+                                  p21_feasible_at, solve_p21_batched)
+from repro.ccc.ddqn import BatchedDDQNAgent, DDQNAgent, DDQNConfig  # noqa: F401
+from repro.ccc.env import (BatchedCuttingPointEnv, CuttingEnvConfig,  # noqa: F401
+                           CuttingPointEnv, cnn_env_config)
+from repro.ccc.strategy import run_algorithm1, run_algorithm1_batched  # noqa: F401

@@ -37,25 +37,22 @@ from repro.sysmodel.comp import CompParams, client_bp_latency, client_fp_latency
 LN2 = math.log(2.0)
 
 
-def _invert_rate(target_rate: np.ndarray, power, gains, noise_psd,
+def _invert_rate(target_rate: np.ndarray, power, gains, comm: CommParams,
                  b_hi: float, iters: int = 40) -> np.ndarray:
     """Smallest B with r(B) >= target (vectorized bisection); inf where
     even b_hi cannot reach it (rate saturation)."""
     target = np.asarray(target_rate, np.float64)
     lo = np.full_like(target, 1e-3)
     hi = np.full_like(target, b_hi)
-    r_hi = uplink_rate(hi, power, gains, _P)  # set by caller via module global
+    r_hi = uplink_rate(hi, power, gains, comm)
     infeasible = target > r_hi
     for _ in range(iters):
         mid = 0.5 * (lo + hi)
-        r = uplink_rate(mid, power, gains, _P)
+        r = uplink_rate(mid, power, gains, comm)
         lo = np.where(r < target, mid, lo)
         hi = np.where(r < target, hi, mid)
     out = hi
     return np.where(infeasible, np.inf, out)
-
-
-_P: CommParams = CommParams()  # module-level for the vectorized helpers
 
 
 @dataclass
@@ -75,8 +72,6 @@ def solve_p21(gains: np.ndarray, smashed_bits: float, n_samples: float,
               theta_grid: int = 24, lam_grid: int = 24,
               chi_iters: int = 40) -> AllocationResult:
     """Solve P2.1 for one round. gains: (N,) linear channel gains."""
-    global _P
-    _P = comm
     N = len(gains)
     g = np.asarray(gains, np.float64)
     p = comm.client_power
@@ -112,7 +107,7 @@ def solve_p21(gains: np.ndarray, smashed_bits: float, n_samples: float,
         frac = (np.arange(1, theta_grid + 1) / (theta_grid + 1.0))
         theta = u_min[:, None] + room[:, None] * frac[None, :]  # (N,K)
         f_need = s_work / np.maximum(c[:, None] - theta, 1e-12)  # (N,K)
-        B_need = _invert_rate(X / theta, p, g[:, None], comm.noise_psd,
+        B_need = _invert_rate(X / theta, p, g[:, None], comm,
                               b_hi=B_tot * 4.0)  # (N,K)
         best = None
         for lam in lams:

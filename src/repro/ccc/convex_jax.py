@@ -1,0 +1,223 @@
+"""Batched P2.1 — the convex resource-allocation oracle over B rounds at
+once (DESIGN.md §11).
+
+Same algorithm as ``ccc.convex.solve_p21`` (θ-grid Pareto frontier, λ
+price sweep, bisection on χ) re-expressed as fixed-iteration batched
+array ops so the whole solve jits: no data-dependent python control
+flow, every early-exit of the scalar solver becomes a mask.
+
+Backend contract (the parity tests pin it):
+
+* numpy inputs → the EXACT scalar algorithm in float64, vectorized over
+  the leading batch axis. Same candidate sequence as ``solve_p21``
+  (same θ grid, same λ order with first-feasible-wins, same 60-step
+  doubling bracket, same ``chi_iters`` bisection), so
+  ``solve_p21_batched(gains[None], ...)`` reproduces ``solve_p21``
+  to machine precision.
+* jax inputs → the same fixed-iteration structure traced with
+  ``lax.fori_loop`` (float32 on device by default). This is the path
+  the batched DDQN reward loop jits; expect ~1e-5-relative dtype noise
+  against the f64 oracle.
+
+Batched workload splits: ``comp`` may carry array-valued FLOP fields of
+shape ``(B, 1)`` (see ``scale_by_cut``) so each round in the batch can
+sit at a different cutting point.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.sysmodel.backend import array_namespace, as_f64_if_np
+from repro.sysmodel.comm import CommParams, downlink_rate, uplink_rate
+from repro.sysmodel.comp import CompParams, client_bp_latency, client_fp_latency
+
+LN2 = math.log(2.0)
+GROWTH_ITERS = 60  # doubling steps to bracket χ (matches the scalar solver)
+
+
+def _fori(n: int, body, init, xp):
+    """``lax.fori_loop`` on jax, a plain python loop on numpy. The body
+    must be (i, carry) -> carry with fixed shapes/dtypes."""
+    if xp is np:
+        carry = init
+        for i in range(n):
+            carry = body(i, carry)
+        return carry
+    import jax
+
+    return jax.lax.fori_loop(0, n, body, init)
+
+
+class BatchedAllocationResult(NamedTuple):
+    """``AllocationResult`` stacked over the batch: scalars become (B,),
+    per-client vectors become (B, N). NamedTuple → a pytree, so the
+    whole result flows through jit/scan untouched."""
+    chi: Any
+    psi: Any
+    total: Any
+    bandwidth: Any
+    f_server: Any
+    f_client: Any
+    p_tx: Any
+    feasible: Any
+
+
+def _invert_rate_batched(target, power, gains, comm: CommParams,
+                         b_hi: float, xp, iters: int = 40):
+    """Smallest B with r(B) >= target — fixed-iteration bisection, same
+    semantics as ``convex._invert_rate`` for any batch shape."""
+    target = as_f64_if_np(target, xp)
+    ones = xp.ones_like(target)
+    lo0 = ones * 1e-3
+    hi0 = ones * b_hi
+    r_hi = uplink_rate(hi0, power, gains, comm)
+    infeasible = target > r_hi
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        r = uplink_rate(mid, power, gains, comm)
+        low = r < target
+        return xp.where(low, mid, lo), xp.where(low, hi, mid)
+
+    _, hi = _fori(iters, body, (lo0, hi0), xp)
+    return xp.where(infeasible, xp.inf, hi)
+
+
+class _P21Problem:
+    """The fixed per-batch quantities of P2.1 plus the χ-feasibility
+    oracle; built once, queried ~100 times during bracketing/bisection."""
+
+    def __init__(self, gains, X_bits, n_samples, comm: CommParams,
+                 comp: CompParams, theta_grid: int, lam_grid: int):
+        xp = self.xp = array_namespace(gains, X_bits)
+        g = self.g = as_f64_if_np(gains, xp)
+        X = self.X = as_f64_if_np(X_bits, xp)[:, None]  # (B, 1)
+        self.B_batch, self.N = g.shape
+        self.comm = comm
+        p = self.p = comm.client_power
+
+        self.f_client = xp.broadcast_to(
+            xp.asarray(comp.client_cpu_max, dtype=g.dtype),
+            (self.B_batch, self.N))
+        self.p_tx = xp.full((self.B_batch, self.N), p, dtype=g.dtype)
+
+        # ψ: no pooled resources (downlink broadcast; client BP at f_max)
+        r_dn = downlink_rate(g, comm)
+        self.psi = xp.max(X / xp.maximum(r_dn, 1e-9)
+                          + client_bp_latency(n_samples, comp, self.f_client),
+                          axis=1)
+
+        # fixed per-client terms of χ
+        self.l_F = client_fp_latency(n_samples, comp, self.f_client)  # (B,N)
+        s_work = n_samples * (comp.server_fwd_flops + comp.server_bwd_flops) \
+            / comp.flops_per_cycle  # server cycles/client: scalar or (B,1)
+        self.s_col = xp.broadcast_to(xp.asarray(s_work, dtype=g.dtype),
+                                     (self.B_batch, 1))
+        self.u_min = X * comm.noise_psd * LN2 / (p * g)  # (B, N)
+
+        self.B_tot = comm.total_bandwidth
+        self.F_tot = comp.server_cpu_max
+        self.lams = xp.asarray(
+            (self.B_tot / self.F_tot) * np.logspace(-4, 4, lam_grid),
+            dtype=g.dtype)
+        self.frac = xp.asarray(
+            np.arange(1, theta_grid + 1) / (theta_grid + 1.0), dtype=g.dtype)
+        # analytic χ infimum (bisection lower bound)
+        self.lo0 = xp.max(self.l_F + self.u_min, axis=1) \
+            + self.s_col[:, 0] / self.F_tot  # (B,)
+
+    def oracle(self, chi, want_alloc: bool = False):
+        """Feasibility (+ first-feasible-λ allocation) at χ, shape (B,)."""
+        xp = self.xp
+        c = chi[:, None] - self.l_F  # (B, N) uplink+server budget
+        room = c - self.u_min
+        ok_room = xp.all(room > 1e-9, axis=1)  # (B,)
+        theta = self.u_min[..., None] + room[..., None] * self.frac  # (B,N,K)
+        f_need = self.s_col[..., None] \
+            / xp.maximum(c[..., None] - theta, 1e-12)
+        B_need = _invert_rate_batched(self.X[..., None] / theta, self.p,
+                                     self.g[..., None], self.comm,
+                                     b_hi=self.B_tot * 4.0, xp=xp)
+        costs = B_need[..., None] + self.lams * f_need[..., None]  # (B,N,K,L)
+        k = xp.argmin(costs, axis=2)  # (B, N, L)
+        Bn_l = xp.take_along_axis(B_need, k, axis=2)
+        fn_l = xp.take_along_axis(f_need, k, axis=2)
+        feas_l = ((xp.sum(Bn_l, axis=1) <= self.B_tot)
+                  & (xp.sum(fn_l, axis=1) <= self.F_tot))  # (B, L)
+        feasible = xp.any(feas_l, axis=1) & ok_room
+        if not want_alloc:
+            return feasible
+        lam_star = xp.argmax(feas_l, axis=1)  # first feasible λ (as scalar)
+        Bn = xp.take_along_axis(Bn_l, lam_star[:, None, None], axis=2)[..., 0]
+        fn = xp.take_along_axis(fn_l, lam_star[:, None, None], axis=2)[..., 0]
+        return feasible, Bn, fn
+
+
+def solve_p21_batched(gains, X_bits, n_samples, comm: CommParams,
+                      comp: CompParams, theta_grid: int = 24,
+                      lam_grid: int = 24,
+                      chi_iters: int = 40) -> BatchedAllocationResult:
+    """Solve P2.1 for B independent rounds.
+
+    gains: (B, N) linear channel gains; X_bits: (B,) uplink payloads.
+    ``comp`` FLOP fields may be scalars or (B, 1) arrays (per-round cut).
+    Backend follows the inputs (see module docstring).
+    """
+    prob = _P21Problem(gains, X_bits, n_samples, comm, comp,
+                       theta_grid, lam_grid)
+    xp, B_batch, N = prob.xp, prob.B_batch, prob.N
+
+    # bracket: double hi until the oracle admits it (masked once found).
+    # Early-exits when every row has a bracket — rows typically bracket in
+    # 1-2 doublings, and the masked remainder of the 60 steps is pure
+    # waste — so this is a while loop, not a fori (results identical).
+    hi0 = xp.maximum(prob.lo0 * 2.0, 1.0)
+
+    def grow(carry):
+        k, hi, found = carry
+        feas = prob.oracle(hi)
+        found2 = found | feas
+        return k + 1, xp.where(found2, hi, hi * 2.0), found2
+
+    init = (0, hi0, xp.zeros(B_batch, dtype=bool))
+    if xp is np:
+        carry = init
+        while carry[0] < GROWTH_ITERS and not carry[2].all():
+            carry = grow(carry)
+        _, hi, found = carry
+    else:
+        import jax
+
+        _, hi, found = jax.lax.while_loop(
+            lambda c: (c[0] < GROWTH_ITERS) & ~xp.all(c[2]), grow, init)
+
+    def bisect(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        feas = prob.oracle(mid)
+        return xp.where(feas, lo, mid), xp.where(feas, mid, hi)
+
+    _, hi = _fori(chi_iters, bisect, (prob.lo0, hi), xp)
+
+    _, Bn, fn = prob.oracle(hi, want_alloc=True)
+    nan_row = xp.full((B_batch, N), xp.nan, dtype=prob.g.dtype)
+    chi = xp.where(found, hi, xp.inf)
+    return BatchedAllocationResult(
+        chi=chi, psi=prob.psi, total=chi + prob.psi,
+        bandwidth=xp.where(found[:, None], Bn, nan_row),
+        f_server=xp.where(found[:, None], fn, nan_row),
+        f_client=prob.f_client, p_tx=prob.p_tx, feasible=found)
+
+
+def p21_feasible_at(gains, X_bits, chi, n_samples, comm: CommParams,
+                    comp: CompParams, theta_grid: int = 24,
+                    lam_grid: int = 24):
+    """Feasibility of candidate χ values (B,) — the bisection oracle
+    exposed for tests (infeasible-χ probing) without a full solve."""
+    prob = _P21Problem(gains, X_bits, n_samples, comm, comp,
+                       theta_grid, lam_grid)
+    return prob.oracle(prob.xp.asarray(chi, dtype=prob.g.dtype))

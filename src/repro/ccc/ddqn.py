@@ -2,13 +2,21 @@
 
 Q-network: MLP state -> |A| action values. Double-DQN target (eq. 40):
    y = r + γ Q_target(s', argmax_a Q_online(s', a))
-Replay buffer is host-side numpy; the update step is jit-compiled.
+
+Two drivers share the same network/update math (``ddqn_update``):
+
+* ``DDQNAgent`` — the scalar paper-faithful loop: host-side numpy
+  replay, one transition per ``observe``.
+* ``BatchedDDQNAgent`` — the device-resident loop (DESIGN.md §11):
+  replay buffer lives in jnp arrays, and ε-greedy act → env.step →
+  store → sample → update → target-sync is ONE jitted call over B
+  parallel envs (the "fused act+observe train step").
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Dict, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +40,26 @@ def qnet_apply(params, s):
     h = jax.nn.relu(s @ params["l1"]["w"] + params["l1"]["b"])
     h = jax.nn.relu(h @ params["l2"]["w"] + params["l2"]["b"])
     return h @ params["l3"]["w"] + params["l3"]["b"]
+
+
+def ddqn_update(params, target, opt_state, s, a, r, s2, done, *,
+                opt, gamma: float):
+    """One gradient step on one sampled batch (eq. 38-40). Shared by the
+    scalar and batched agents — the B=1 bit-identity test pins this."""
+
+    def loss_fn(p):
+        q = qnet_apply(p, s)
+        q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+        # double-DQN: online net picks a*, target net evaluates (eq. 40)
+        a_star = jnp.argmax(qnet_apply(p, s2), axis=1)
+        q_t = qnet_apply(target, s2)
+        q_next = jnp.take_along_axis(q_t, a_star[:, None], axis=1)[:, 0]
+        y = r + gamma * (1.0 - done) * jax.lax.stop_gradient(q_next)
+        return jnp.mean(jnp.square(q_sa - y))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    return apply_updates(params, updates), opt_state, loss
 
 
 class ReplayBuffer:
@@ -83,8 +111,10 @@ class DDQNAgent:
         self.opt_state = self.opt.init(self.params)
         self.buffer = ReplayBuffer(cfg.buffer, cfg.state_dim)
         self.rng = np.random.RandomState(cfg.seed)
-        self.steps = 0
-        self._update = jax.jit(self._update_fn)
+        self.steps = 0       # env transitions (drives ε decay)
+        self.grad_steps = 0  # gradient updates (drives target sync)
+        self._update = jax.jit(partial(ddqn_update, opt=self.opt,
+                                       gamma=cfg.gamma))
         self._q = jax.jit(qnet_apply)
 
     # --------------------------------------------------------------
@@ -100,23 +130,6 @@ class DDQNAgent:
         return int(jnp.argmax(q[0]))
 
     # --------------------------------------------------------------
-    def _update_fn(self, params, target, opt_state, s, a, r, s2, done):
-        gamma = self.cfg.gamma
-
-        def loss_fn(p):
-            q = qnet_apply(p, s)
-            q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
-            # double-DQN: online net picks a*, target net evaluates (eq. 40)
-            a_star = jnp.argmax(qnet_apply(p, s2), axis=1)
-            q_t = qnet_apply(target, s2)
-            q_next = jnp.take_along_axis(q_t, a_star[:, None], axis=1)[:, 0]
-            y = r + gamma * (1.0 - done) * jax.lax.stop_gradient(q_next)
-            return jnp.mean(jnp.square(q_sa - y))
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        updates, opt_state = self.opt.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state, loss
-
     def observe(self, s, a, r, s2, done) -> float:
         self.buffer.add(s, a, r, s2, float(done))
         self.steps += 1
@@ -127,6 +140,170 @@ class DDQNAgent:
                 self.params, self.target, self.opt_state,
                 *map(jnp.asarray, batch))
             loss = float(l)
-        if self.steps % self.cfg.target_update == 0:
-            self.target = jax.tree.map(jnp.copy, self.params)
+            # target_update counts GRADIENT steps (the config's contract);
+            # pre-warmup transitions must not burn the counter.
+            self.grad_steps += 1
+            if self.grad_steps % self.cfg.target_update == 0:
+                self.target = jax.tree.map(jnp.copy, self.params)
         return loss
+
+
+# ------------------------------------------------------------------
+# Device-resident batched agent
+# ------------------------------------------------------------------
+
+class ReplayState(NamedTuple):
+    """Ring buffer as a pytree of device arrays."""
+    s: Any
+    a: Any
+    r: Any
+    s2: Any
+    done: Any
+    ptr: Any  # () int32 — next write slot
+    n: Any    # () int32 — filled entries
+
+
+def replay_init(capacity: int, state_dim: int) -> ReplayState:
+    return ReplayState(
+        s=jnp.zeros((capacity, state_dim), jnp.float32),
+        a=jnp.zeros((capacity,), jnp.int32),
+        r=jnp.zeros((capacity,), jnp.float32),
+        s2=jnp.zeros((capacity, state_dim), jnp.float32),
+        done=jnp.zeros((capacity,), jnp.float32),
+        ptr=jnp.zeros((), jnp.int32), n=jnp.zeros((), jnp.int32))
+
+
+def replay_add_batch(buf: ReplayState, s, a, r, s2, done) -> ReplayState:
+    """Insert B transitions at the rolling pointer (wraparound scatter)."""
+    B = s.shape[0]
+    cap = buf.s.shape[0]
+    idx = (buf.ptr + jnp.arange(B, dtype=jnp.int32)) % cap
+    return ReplayState(
+        s=buf.s.at[idx].set(s), a=buf.a.at[idx].set(a),
+        r=buf.r.at[idx].set(r), s2=buf.s2.at[idx].set(s2),
+        done=buf.done.at[idx].set(done),
+        ptr=(buf.ptr + B) % cap, n=jnp.minimum(buf.n + B, cap))
+
+
+def replay_sample(buf: ReplayState, key, batch: int):
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.n, 1))
+    return buf.s[idx], buf.a[idx], buf.r[idx], buf.s2[idx], buf.done[idx]
+
+
+class DDQNState(NamedTuple):
+    """Everything the fused step carries, as one pytree."""
+    params: Any
+    target: Any
+    opt_state: Any
+    replay: ReplayState
+    env_steps: Any   # () int32 — total env transitions (drives ε)
+    grad_steps: Any  # () int32 — gradient updates (drives target sync)
+    key: Any
+
+
+class BatchedDDQNAgent:
+    """DDQN whose replay buffer and control flow live on device.
+
+    ``fused_step(env, env_state, obs)`` performs, in ONE jitted call:
+    ε-greedy action selection for all B envs → ``env.step`` (the batched
+    P2.1 solve inside the reward) → B replay insertions → one sampled
+    gradient update (masked until warmup) → target sync on the
+    gradient-step cadence. The gradient update itself is the same
+    ``ddqn_update`` the scalar agent jits.
+    """
+
+    def __init__(self, cfg: DDQNConfig):
+        self.cfg = cfg
+        key = jax.random.key(cfg.seed)
+        k_init, key = jax.random.split(key)
+        params = init_qnet(k_init, cfg.state_dim, cfg.n_actions, cfg.hidden)
+        self.opt = adamw(cfg.lr)
+        self.state = DDQNState(
+            params=params, target=jax.tree.map(jnp.copy, params),
+            opt_state=self.opt.init(params),
+            replay=replay_init(cfg.buffer, cfg.state_dim),
+            env_steps=jnp.zeros((), jnp.int32),
+            grad_steps=jnp.zeros((), jnp.int32), key=key)
+        import weakref
+
+        # keyed on the env OBJECT (not id()): a recycled id after env GC
+        # must not resurrect a closure baked with stale action tables
+        self._fused = weakref.WeakKeyDictionary()
+        self._train = jax.jit(self._train_fn)
+        self._q = jax.jit(qnet_apply)
+
+    # --------------------------------------------------------------
+    def _epsilon(self, env_steps):
+        c = self.cfg
+        t = jnp.minimum(1.0, env_steps.astype(jnp.float32)
+                        / c.eps_decay_steps)
+        return c.eps_start + (c.eps_end - c.eps_start) * t
+
+    def act(self, obs):
+        """Greedy batched policy (host-callable). ε-greedy exploration
+        exists only inside the fused step, which owns the PRNG chain."""
+        q = self._q(self.state.params, jnp.atleast_2d(jnp.asarray(obs)))
+        return jnp.argmax(q, axis=1)
+
+    # --------------------------------------------------------------
+    def _train_fn(self, state: DDQNState, batch):
+        """Sampled-batch gradient update + cadenced target sync; the
+        pure training half of the fused step."""
+        cfg = self.cfg
+        params2, opt_state2, loss = ddqn_update(
+            state.params, state.target, state.opt_state, *batch,
+            opt=self.opt, gamma=cfg.gamma)
+        grad_steps2 = state.grad_steps + 1
+        sync = grad_steps2 % cfg.target_update == 0
+        target2 = jax.tree.map(
+            lambda t, p: jnp.where(sync, p, t), state.target, params2)
+        return state._replace(params=params2, opt_state=opt_state2,
+                              target=target2, grad_steps=grad_steps2), loss
+
+    def train_step(self, batch) -> jnp.ndarray:
+        """Apply one gradient update on an explicit batch (s,a,r,s2,done).
+        Used by the B=1 parity test; the fused step uses the same path."""
+        self.state, loss = self._train(self.state, tuple(map(jnp.asarray,
+                                                             batch)))
+        return loss
+
+    # --------------------------------------------------------------
+    def _make_fused(self, env):
+        cfg = self.cfg
+
+        def fused(state: DDQNState, env_state, obs):
+            key, k_eps, k_expl, k_sample = jax.random.split(state.key, 4)
+            B = obs.shape[0]
+            # ε-greedy act over all envs
+            q = qnet_apply(state.params, obs)
+            greedy_a = jnp.argmax(q, axis=1).astype(jnp.int32)
+            rand_a = jax.random.randint(k_expl, (B,), 0, cfg.n_actions,
+                                        dtype=jnp.int32)
+            explore = jax.random.uniform(k_eps, (B,)) \
+                < self._epsilon(state.env_steps)
+            a = jnp.where(explore, rand_a, greedy_a)
+            # env transition (batched P2.1 solve inside)
+            env_state2, obs2, r, done, info = env.step(env_state, a)
+            replay = replay_add_batch(state.replay, obs, a, r, obs2,
+                                      done.astype(jnp.float32))
+            state = state._replace(replay=replay, key=key,
+                                   env_steps=state.env_steps + B)
+            # one gradient step on a sampled batch, masked until warmup
+            batch = replay_sample(replay, k_sample, cfg.batch)
+            trained, loss = self._train_fn(state, batch)
+            can_train = replay.n >= cfg.batch
+            state = jax.tree.map(
+                lambda t, u: jnp.where(can_train, t, u), trained, state)
+            loss = jnp.where(can_train, loss, 0.0)
+            return state, env_state2, obs2, r, done, info, loss
+
+        return jax.jit(fused)
+
+    def fused_step(self, env, env_state, obs):
+        """One fused act+observe+train step over env's B episodes."""
+        fused = self._fused.get(env)
+        if fused is None:
+            fused = self._fused[env] = self._make_fused(env)
+        self.state, env_state, obs, r, done, info, loss = fused(
+            self.state, env_state, obs)
+        return env_state, obs, r, done, info, loss

@@ -12,12 +12,12 @@ leaves Γ unspecified, see DESIGN.md §8).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 from repro.ccc.convex import AllocationResult, solve_p21
-from repro.sysmodel.comm import CommParams, path_loss_gain
+from repro.sysmodel.comm import CommParams, path_loss_gain, path_loss_linear
 from repro.sysmodel.comp import CompParams, scale_by_cut
 from repro.sysmodel.payload import spec_for
 from repro.sysmodel.traffic import wire_bits
@@ -133,6 +133,135 @@ class CuttingPointEnv:
             "v": v, "codec": codec, "bits": self.smashed_bits(v, codec),
             "chi": chi, "psi": psi, "gamma": gamma,
             "privacy_ok": ok, "latency": chi + psi}
+
+
+class BatchedEnvState(NamedTuple):
+    """Device-resident state of B synchronized episodes (a pytree)."""
+    t: Any         # (B,) int32 — round index within the episode
+    cum_cost: Any  # (B,) f32 — Σ_{i<t}(Γ + χ + ψ) (or penalty)
+    gains: Any     # (B, N) f32 — this round's channel draw
+    key: Any       # jax PRNG key
+
+
+class BatchedCuttingPointEnv:
+    """Vectorized ``CuttingPointEnv``: steps B independent episodes per
+    call with a jax PRNG (DESIGN.md §11).
+
+    Semantics match the scalar env — same MDP, same action decoding,
+    same block-fading redraw per round — but every per-action quantity
+    (X_t(v) bits, Γ, client-FLOP fraction, the privacy check, which are
+    all pure functions of the discrete action) is precomputed into
+    device tables at construction, and the P2.1 reward oracle is the
+    batched jax solver. ``step`` is a pure function of
+    ``(BatchedEnvState, actions)`` → jit/scan it freely. Episodes run in
+    lockstep (same horizon) and auto-reset on done.
+    """
+
+    def __init__(self, cfg: CuttingEnvConfig, n_envs: int,
+                 comm: Optional[CommParams] = None,
+                 comp: Optional[CompParams] = None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.sysmodel.privacy import privacy_ok
+
+        self.cfg = cfg
+        self.comm = comm or CommParams()
+        self.base_comp = comp or CompParams()
+        self.n_envs = n_envs
+        self.n_codecs = len(cfg.codecs)
+        self.n_actions = len(cfg.phis) * self.n_codecs
+        self.state_dim = cfg.n_clients + 1
+
+        # per-action lookup tables (action = (v-1) * n_codecs + c)
+        xbits, gammas, fracs, priv = [], [], [], []
+        for a in range(self.n_actions):
+            v_idx, c_idx = divmod(a, self.n_codecs)
+            v, codec = v_idx + 1, cfg.codecs[c_idx]
+            elems = cfg.smashed_elems[v - 1] * cfg.batch
+            xbits.append(float(wire_bits(codec, elems, cfg.bytes_per_elem * 8)))
+            gammas.append(cfg.gamma0 * cfg.phis[v - 1] / cfg.total_params
+                          + cfg.gamma_q * spec_for(codec).distortion)
+            fracs.append(cfg.flop_fracs[v - 1])
+            priv.append(privacy_ok(cfg.phis[v - 1], cfg.total_params,
+                                   cfg.epsilon))
+        self.xbits_table = jnp.asarray(xbits, jnp.float32)
+        self.gamma_table = jnp.asarray(gammas, jnp.float32)
+        self.frac_table = jnp.asarray(fracs, jnp.float32)
+        self.priv_table = jnp.asarray(priv, dtype=bool)
+
+        # fixed client distances per env (the scalar env draws once too)
+        key = jax.random.key(cfg.seed)
+        k_d, self._reset_key = jax.random.split(key)
+        lo, hi = cfg.dist_km_range
+        dists = jax.random.uniform(k_d, (n_envs, cfg.n_clients),
+                                   minval=lo, maxval=hi)
+        self._det_gain = path_loss_linear(dists)  # (B, N), fading applied/step
+
+    # --------------------------------------------------------------
+    def _draw_gains(self, key):
+        import jax
+
+        ray = jax.random.exponential(key, self._det_gain.shape)  # |h|^2~Exp(1)
+        return self._det_gain * ray
+
+    def _obs(self, state: BatchedEnvState):
+        import jax.numpy as jnp
+
+        g = jnp.log10(state.gains) / 10.0 + 1.0
+        cum = state.cum_cost / (self.cfg.horizon * 10.0)
+        return jnp.concatenate([g, cum[:, None]], axis=1).astype(jnp.float32)
+
+    def reset(self, key=None) -> Tuple[BatchedEnvState, Any]:
+        """Fresh lockstep episodes. Without an explicit key the env's own
+        reset key advances, so repeated resets (training → greedy rollout)
+        see fresh fading rather than replaying the first wave."""
+        import jax
+        import jax.numpy as jnp
+
+        if key is None:
+            self._reset_key, key = jax.random.split(self._reset_key)
+        key, k_g = jax.random.split(key)
+        state = BatchedEnvState(
+            t=jnp.zeros(self.n_envs, jnp.int32),
+            cum_cost=jnp.zeros(self.n_envs, jnp.float32),
+            gains=self._draw_gains(k_g), key=key)
+        return state, self._obs(state)
+
+    def step(self, state: BatchedEnvState, actions):
+        """actions: (B,) int32. Returns (state', obs', reward, done, info)
+        with per-env arrays; pure and jittable. Auto-resets done envs."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.ccc.convex_jax import solve_p21_batched
+
+        cfg = self.cfg
+        actions = jnp.asarray(actions, jnp.int32)
+        X_bits = self.xbits_table[actions]
+        gamma = self.gamma_table[actions]
+        frac = self.frac_table[actions]
+        priv = self.priv_table[actions]
+
+        comp = scale_by_cut(self.base_comp, frac[:, None])  # (B,1) fields
+        alloc = solve_p21_batched(state.gains, X_bits, float(cfg.batch),
+                                  self.comm, comp)
+        ok = priv & alloc.feasible
+        latency = alloc.chi + alloc.psi
+        cost = jnp.where(ok, cfg.w * gamma + latency, cfg.penalty)
+        reward = -cost
+
+        t2 = state.t + 1
+        done = t2 >= cfg.horizon
+        key, k_g = jax.random.split(state.key)
+        state2 = BatchedEnvState(
+            t=jnp.where(done, 0, t2),
+            cum_cost=jnp.where(done, 0.0, state.cum_cost + cost),
+            gains=self._draw_gains(k_g), key=key)
+        info = {"v": actions // self.n_codecs + 1, "bits": X_bits,
+                "chi": alloc.chi, "psi": alloc.psi, "gamma": gamma,
+                "privacy_ok": priv, "latency": latency}
+        return state2, self._obs(state2), reward, done, info
 
 
 def cnn_env_config(light: bool = True, flop_aware: bool = False,

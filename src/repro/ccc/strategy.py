@@ -1,14 +1,20 @@
 """Algorithm 1 — the joint CCC strategy: DDQN over cutting points with
-convex resource allocation inside the reward (paper §IV-B)."""
+convex resource allocation inside the reward (paper §IV-B).
+
+Two drivers for the same MDP: ``run_algorithm1`` (scalar numpy env, one
+episode at a time — the paper-faithful reference) and
+``run_algorithm1_batched`` (B device-resident envs stepped in lockstep
+by one fused jitted call per round — DESIGN.md §11)."""
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.ccc.ddqn import DDQNAgent, DDQNConfig
-from repro.ccc.env import CuttingPointEnv
+from repro.ccc.ddqn import BatchedDDQNAgent, DDQNAgent, DDQNConfig
+from repro.ccc.env import BatchedCuttingPointEnv, CuttingPointEnv
 
 
 @dataclass
@@ -18,7 +24,7 @@ class CCCResult:
     # greedy rollout decisions per round: v when the env has a single
     # codec (paper-faithful action space), else (v, codec) pairs
     greedy_policy: List
-    agent: DDQNAgent
+    agent: object  # DDQNAgent or BatchedDDQNAgent
 
 
 def run_algorithm1(env: CuttingPointEnv, episodes: int = 200,
@@ -56,6 +62,53 @@ def run_algorithm1(env: CuttingPointEnv, episodes: int = 200,
         v, codec = env.decode_action(a)
         policy.append(v if env.n_codecs == 1 else (v, codec))
         s, _, done, _ = env.step(a)
+    return CCCResult(ep_rewards, ep_lat, policy, agent)
+
+
+def run_algorithm1_batched(env: BatchedCuttingPointEnv, episodes: int = 200,
+                           agent: Optional[BatchedDDQNAgent] = None,
+                           log_every: int = 0) -> CCCResult:
+    """Alg. 1 over B device-resident envs: ``episodes`` total episodes are
+    rolled in ⌈episodes/B⌉ lockstep waves of B; each round is ONE jitted
+    fused call (ε-greedy act → batched P2.1 reward → replay insert →
+    gradient update → target sync). Returns the same ``CCCResult`` shape
+    as the scalar driver."""
+    import jax.numpy as jnp
+
+    if agent is None:
+        agent = BatchedDDQNAgent(DDQNConfig(state_dim=env.state_dim,
+                                            n_actions=env.n_actions,
+                                            seed=env.cfg.seed))
+    B = env.n_envs
+    waves = max(1, math.ceil(episodes / B))
+    ep_rewards: List[float] = []
+    ep_lat: List[float] = []
+    env_state, obs = env.reset()
+    for wave in range(waves):
+        wave_r = jnp.zeros(B)
+        wave_l = jnp.zeros(B)
+        for _ in range(env.cfg.horizon):
+            env_state, obs, r, done, info, _ = agent.fused_step(
+                env, env_state, obs)
+            wave_r = wave_r + r
+            lat = info["latency"]
+            wave_l = wave_l + jnp.where(jnp.isfinite(lat), lat, 0.0)
+        ep_rewards.extend(np.asarray(wave_r).tolist())
+        ep_lat.extend(np.asarray(wave_l).tolist())
+        if log_every and (wave + 1) % max(1, log_every // B) == 0:
+            print(f"  wave {wave+1}/{waves} ({len(ep_rewards)} episodes) "
+                  f"mean reward {float(np.mean(np.asarray(wave_r))):.2f}")
+    ep_rewards, ep_lat = ep_rewards[:episodes], ep_lat[:episodes]
+    # greedy rollout (env 0's trajectory) exposes the learned policy
+    env_state, obs = env.reset()
+    policy = []
+    for _ in range(env.cfg.horizon):
+        a = agent.act(obs)
+        env_state, obs, _, _, info = env.step(env_state, a)
+        a0 = int(a[0])
+        v, codec = divmod(a0, env.n_codecs)
+        policy.append(v + 1 if env.n_codecs == 1
+                      else (v + 1, env.cfg.codecs[codec]))
     return CCCResult(ep_rewards, ep_lat, policy, agent)
 
 

@@ -1,0 +1,37 @@
+"""Array-namespace dispatch for the system model (DESIGN.md §11).
+
+The wireless/compute formulas in ``comm``/``comp``/``latency`` are used
+from two very different callers: the host-side numpy oracle
+(``ccc.convex``, benchmarks — float64, eager) and the device-resident
+batched CCC path (``ccc.convex_jax`` — jittable, traced). The functions
+stay single-sourced by dispatching on input type: numpy in, numpy out;
+jnp (arrays OR tracers) in, jnp out.
+
+``array_namespace`` deliberately avoids importing jax until a jax array
+is actually seen, so the numpy-only callers keep their import-light
+footprint (the CCC reward loop prices payloads ~10^4 times per run).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _is_jax(x) -> bool:
+    # Covers concrete arrays (jaxlib.xla_extension.ArrayImpl) and every
+    # tracer class (jax._src.*) without importing jax.
+    return type(x).__module__.partition(".")[0] in ("jax", "jaxlib")
+
+
+def array_namespace(*xs):
+    """numpy for numpy/scalar inputs; jax.numpy if ANY input is jax."""
+    if any(_is_jax(x) for x in xs):
+        import jax.numpy as jnp
+
+        return jnp
+    return np
+
+
+def as_f64_if_np(x, xp):
+    """The numpy path computes in float64 (it is the parity oracle); the
+    jax path keeps the caller's dtype (f32 on device by default)."""
+    return np.asarray(x, np.float64) if xp is np else x

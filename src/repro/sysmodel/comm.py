@@ -4,12 +4,17 @@ Uplink: orthogonal sub-channels, per-client bandwidth B^n, rate eq. (10).
 Downlink: full-band broadcast at server power P, rate eq. (11).
 Channel: path loss 128.1 + 37.6 log10(d_km) dB with Rayleigh fading
 (§V-A2), constant within a round, varying across rounds.
+
+Backend-agnostic (DESIGN.md §11): numpy in → numpy/f64 out (the parity
+oracle), jnp in → jnp out (traced inside the batched CCC solver).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.sysmodel.backend import array_namespace, as_f64_if_np
 
 
 @dataclass(frozen=True)
@@ -32,25 +37,34 @@ class CommParams:
         return 10 ** ((self.server_power_dbm - 30) / 10)
 
 
+def path_loss_linear(d_km):
+    """Deterministic linear gain from the 128.1 + 37.6 log10(d) dB model.
+    Backend-agnostic; fading is the caller's job (numpy RandomState in
+    ``path_loss_gain``, jax PRNG in the batched env)."""
+    xp = array_namespace(d_km)
+    pl_db = 128.1 + 37.6 * xp.log10(xp.maximum(d_km, 1e-3))
+    return 10 ** (-pl_db / 10)
+
+
 def path_loss_gain(d_km: np.ndarray, rng: np.random.RandomState = None) -> np.ndarray:
     """Linear channel gain: 128.1 + 37.6 log10(d) dB path loss × Rayleigh."""
-    pl_db = 128.1 + 37.6 * np.log10(np.maximum(d_km, 1e-3))
-    g = 10 ** (-pl_db / 10)
+    g = path_loss_linear(d_km)
     if rng is not None:
         ray = rng.exponential(1.0, size=np.shape(d_km))  # |h|^2 ~ Exp(1)
         g = g * ray
     return g
 
 
-def uplink_rate(bw: np.ndarray, power: np.ndarray, gain: np.ndarray,
-                p: CommParams) -> np.ndarray:
+def uplink_rate(bw, power, gain, p: CommParams):
     """eq. (10): r = B^n log2(1 + p g / (B^n N0)). Safe at bw -> 0."""
-    bw = np.maximum(np.asarray(bw, np.float64), 1e-9)
+    xp = array_namespace(bw, power, gain)
+    bw = xp.maximum(as_f64_if_np(bw, xp), 1e-9)
     snr = power * gain / (bw * p.noise_psd)
-    return bw * np.log2(1.0 + snr)
+    return bw * xp.log2(1.0 + snr)
 
 
-def downlink_rate(gain: np.ndarray, p: CommParams) -> np.ndarray:
+def downlink_rate(gain, p: CommParams):
     """eq. (11): full-band broadcast from the server."""
+    xp = array_namespace(gain)
     snr = p.server_power * gain / (p.total_bandwidth * p.noise_psd)
-    return p.total_bandwidth * np.log2(1.0 + snr)
+    return p.total_bandwidth * xp.log2(1.0 + snr)

@@ -1,9 +1,18 @@
-"""Computation model (§II-D, eqs. 14-16) and §V-A constants."""
+"""Computation model (§II-D, eqs. 14-16) and §V-A constants.
+
+Backend-agnostic (DESIGN.md §11): the latency formulas accept numpy or
+jnp inputs and answer in kind. ``CompParams``/``scale_by_cut`` also
+tolerate array-valued FLOP fields (shape ``(B, 1)``) so one dataclass
+describes a whole batch of per-cut workload splits inside the batched
+P2.1 solver.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.sysmodel.backend import array_namespace
 
 
 @dataclass(frozen=True)
@@ -34,19 +43,22 @@ def scale_by_cut(base: "CompParams", frac_client: float) -> "CompParams":
     )
 
 
-def client_fp_latency(n_samples, comp: CompParams, f_client) -> np.ndarray:
+def client_fp_latency(n_samples, comp: CompParams, f_client):
     """eq. (14)."""
-    return n_samples * comp.client_fwd_flops / (np.maximum(f_client, 1e-3)
+    xp = array_namespace(f_client, comp.client_fwd_flops)
+    return n_samples * comp.client_fwd_flops / (xp.maximum(f_client, 1e-3)
                                                 * comp.flops_per_cycle)
 
 
-def server_latency(n_samples, comp: CompParams, f_server) -> np.ndarray:
+def server_latency(n_samples, comp: CompParams, f_server):
     """eq. (15): server FP + BP."""
+    xp = array_namespace(f_server, comp.server_fwd_flops)
     w = comp.server_fwd_flops + comp.server_bwd_flops
-    return n_samples * w / (np.maximum(f_server, 1e-3) * comp.flops_per_cycle)
+    return n_samples * w / (xp.maximum(f_server, 1e-3) * comp.flops_per_cycle)
 
 
-def client_bp_latency(n_samples, comp: CompParams, f_client) -> np.ndarray:
+def client_bp_latency(n_samples, comp: CompParams, f_client):
     """eq. (16)."""
-    return n_samples * comp.client_bwd_flops / (np.maximum(f_client, 1e-3)
+    xp = array_namespace(f_client, comp.client_bwd_flops)
+    return n_samples * comp.client_bwd_flops / (xp.maximum(f_client, 1e-3)
                                                 * comp.flops_per_cycle)

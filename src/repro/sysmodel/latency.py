@@ -4,6 +4,10 @@ l_t = max_n { l^U + l^F + l^s } + max_n { l^D + l^B }
 
 χ_t (uplink + client FP + server compute) and ψ_t (downlink + client BP)
 are the auxiliary variables of P2 (eq. 31).
+
+``chi_terms``/``psi_terms`` are backend-agnostic (DESIGN.md §11): numpy
+in → numpy out, jnp in → jnp out. ``round_latency`` stays a host-side
+float summary.
 """
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ from typing import Dict
 
 import numpy as np
 
+from repro.sysmodel.backend import array_namespace
 from repro.sysmodel.comm import CommParams, downlink_rate, uplink_rate
 from repro.sysmodel.comp import (
     CompParams,
@@ -28,18 +33,20 @@ class LatencyModel:
     smashed_bits: float  # X_t(v) in bits
     n_samples_per_client: float  # D^n (mini-batch per round)
 
-    def chi_terms(self, bw, p_tx, gains, f_client, f_server) -> np.ndarray:
+    def chi_terms(self, bw, p_tx, gains, f_client, f_server):
         """Per-client uplink + client-FP + server latency (constraint 31b)."""
+        xp = array_namespace(bw, gains)
         r_up = uplink_rate(bw, p_tx, gains, self.comm)
-        l_u = self.smashed_bits / np.maximum(r_up, 1e-9)
+        l_u = self.smashed_bits / xp.maximum(r_up, 1e-9)
         l_f = client_fp_latency(self.n_samples_per_client, self.comp, f_client)
         l_s = server_latency(self.n_samples_per_client, self.comp, f_server)
         return l_u + l_f + l_s
 
-    def psi_terms(self, gains, f_client) -> np.ndarray:
+    def psi_terms(self, gains, f_client):
         """Per-client downlink + client-BP latency (constraint 31c)."""
+        xp = array_namespace(gains)
         r_dn = downlink_rate(gains, self.comm)
-        l_d = self.smashed_bits / np.maximum(r_dn, 1e-9)
+        l_d = self.smashed_bits / xp.maximum(r_dn, 1e-9)
         l_b = client_bp_latency(self.n_samples_per_client, self.comp, f_client)
         return l_d + l_b
 

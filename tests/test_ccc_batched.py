@@ -1,0 +1,304 @@
+"""Batched CCC path (DESIGN.md §11): numpy/jax P2.1 parity, solver
+properties, device-resident DDQN, vectorized env."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.ccc.convex import solve_p21
+from repro.ccc.convex_jax import p21_feasible_at, solve_p21_batched
+from repro.ccc.ddqn import (BatchedDDQNAgent, DDQNAgent, DDQNConfig,
+                            replay_add_batch, replay_init, replay_sample)
+from repro.ccc.env import BatchedCuttingPointEnv, CuttingPointEnv, cnn_env_config
+from repro.ccc.strategy import run_algorithm1_batched
+from repro.sysmodel.comm import CommParams, path_loss_gain, uplink_rate
+from repro.sysmodel.comp import CompParams
+
+
+def _batch_instance(B, N, seed=0, x_lo=1e5, x_hi=5e7):
+    rng = np.random.RandomState(seed)
+    gains = np.stack([path_loss_gain(rng.uniform(0.05, 0.5, N), rng)
+                      for _ in range(B)])
+    X = rng.uniform(x_lo, x_hi, B)
+    return gains, X
+
+
+class TestP21Parity:
+    """solve_p21_batched vs the scalar oracle — the satellite contract:
+    χ/ψ/feasibility within 1e-6 over ≥32 random rounds."""
+
+    def test_numpy_backend_parity_32_rounds(self):
+        comp = CompParams()
+        worst = 0.0
+        for comm, (B, N, seed) in [
+            (CommParams(), (16, 10, 0)),
+            (CommParams(), (8, 4, 1)),
+            # tight bandwidth: bracket growth needs >1 doubling and the
+            # bisection walks through many infeasible-χ candidates
+            (CommParams(total_bandwidth=2e5), (8, 6, 2)),
+        ]:
+            gains, X = _batch_instance(B, N, seed)
+            res = solve_p21_batched(gains, X, 16.0, comm, comp)
+            assert isinstance(res.chi, np.ndarray)  # numpy in → numpy out
+            for i in range(B):
+                ref = solve_p21(gains[i], X[i], 16, comm, comp)
+                assert bool(res.feasible[i]) == ref.feasible
+                if not ref.feasible:
+                    continue
+                worst = max(worst,
+                            abs(res.chi[i] - ref.chi) / ref.chi,
+                            abs(res.psi[i] - ref.psi) / ref.psi)
+                np.testing.assert_allclose(res.bandwidth[i], ref.bandwidth,
+                                           rtol=1e-6)
+                np.testing.assert_allclose(res.f_server[i], ref.f_server,
+                                           rtol=1e-6)
+        assert worst <= 1e-6, worst
+
+    def test_jax_backend_parity(self):
+        """f32 device path vs the f64 oracle: dtype noise only."""
+        comm, comp = CommParams(), CompParams()
+        gains, X = _batch_instance(32, 10, 3)
+        ref = solve_p21_batched(gains, X, 16.0, comm, comp)
+        res = solve_p21_batched(jnp.asarray(gains, jnp.float32),
+                                jnp.asarray(X, jnp.float32),
+                                16.0, comm, comp)
+        assert isinstance(res.chi, jax.Array)  # jnp in → jnp out
+        np.testing.assert_array_equal(np.asarray(res.feasible), ref.feasible)
+        np.testing.assert_allclose(np.asarray(res.chi), ref.chi, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(res.psi), ref.psi, rtol=1e-4)
+
+    def test_jax_jitted_equals_eager(self):
+        comm, comp = CommParams(), CompParams()
+        gains, X = _batch_instance(4, 6, 4)
+        gj, xj = jnp.asarray(gains, jnp.float32), jnp.asarray(X, jnp.float32)
+        eager = solve_p21_batched(gj, xj, 16.0, comm, comp)
+        jitted = jax.jit(
+            lambda g, x: solve_p21_batched(g, x, 16.0, comm, comp))(gj, xj)
+        # XLA fusion may reassociate float ops: ulp-level noise only
+        np.testing.assert_allclose(np.asarray(eager.chi),
+                                   np.asarray(jitted.chi), rtol=1e-6)
+
+    def test_infeasible_chi_oracle(self):
+        """Candidate χ below the analytic infimum must be infeasible, and
+        χ* itself feasible — on both backends."""
+        comm, comp = CompParams(), CompParams()
+        comm = CommParams()
+        gains, X = _batch_instance(8, 8, 5)
+        res = solve_p21_batched(gains, X, 16.0, comm, comp)
+        assert res.feasible.all()
+        low = p21_feasible_at(gains, X, res.chi * 0.5, 16.0, comm, comp)
+        high = p21_feasible_at(gains, X, res.chi * 1.05, 16.0, comm, comp)
+        assert not low.any()
+        assert high.all()
+        low_j = p21_feasible_at(jnp.asarray(gains, jnp.float32),
+                                jnp.asarray(X, jnp.float32),
+                                jnp.asarray(res.chi * 0.5, jnp.float32),
+                                16.0, comm, comp)
+        assert not bool(jnp.any(low_j))
+
+    def test_batched_respects_budgets(self):
+        comm, comp = CommParams(), CompParams()
+        gains, X = _batch_instance(16, 10, 6)
+        res = solve_p21_batched(gains, X, 16.0, comm, comp)
+        assert res.feasible.all()
+        assert (res.bandwidth.sum(axis=1)
+                <= comm.total_bandwidth * (1 + 1e-6)).all()
+        assert (res.f_server.sum(axis=1)
+                <= comp.server_cpu_max * (1 + 1e-6)).all()
+
+    def test_chi_meets_per_client_constraints_batched(self):
+        from repro.sysmodel.comp import client_fp_latency
+
+        comm, comp = CommParams(), CompParams()
+        gains, X = _batch_instance(8, 8, 7)
+        res = solve_p21_batched(gains, X, 16.0, comm, comp)
+        rate = uplink_rate(res.bandwidth, res.p_tx, gains, comm)
+        chain = (X[:, None] / rate
+                 + client_fp_latency(16, comp, res.f_client)
+                 + 16 * (comp.server_fwd_flops + comp.server_bwd_flops)
+                 / res.f_server)
+        assert np.all(chain <= res.chi[:, None] * (1 + 1e-2))
+
+
+class TestP21Properties:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 100))
+    def test_chi_nondecreasing_in_smashed_bits(self, seed):
+        """Monotonicity of the round latency in the uplink payload — one
+        batched call sweeps X over a fixed channel draw."""
+        rng = np.random.RandomState(seed)
+        g_row = path_loss_gain(rng.uniform(0.05, 0.5, 8), rng)
+        X = np.geomspace(1e5, 1e8, 12)
+        gains = np.broadcast_to(g_row, (len(X), 8)).copy()
+        res = solve_p21_batched(gains, X, 16.0, CommParams(), CompParams())
+        assert res.feasible.all()
+        chi = res.chi
+        assert np.all(np.diff(chi) >= -1e-9 * chi[:-1]), chi
+        psi = res.psi
+        assert np.all(np.diff(psi) >= -1e-9 * psi[:-1]), psi
+
+    def test_per_round_comp_split(self):
+        """Array-valued comp fields (per-round cut) must match per-row
+        scalar solves with the equivalent scale_by_cut."""
+        from repro.sysmodel.comp import scale_by_cut
+
+        base = CompParams()
+        gains, X = _batch_instance(4, 6, 8)
+        frac = np.array([0.02, 0.1, 0.3, 0.6])
+        comp_b = scale_by_cut(base, frac[:, None])
+        res = solve_p21_batched(gains, X, 16.0, CommParams(), comp_b)
+        for i in range(4):
+            ref = solve_p21(gains[i], X[i], 16, CommParams(),
+                            scale_by_cut(base, frac[i]))
+            np.testing.assert_allclose(res.chi[i], ref.chi, rtol=1e-6)
+            np.testing.assert_allclose(res.psi[i], ref.psi, rtol=1e-6)
+
+
+class TestDeviceReplay:
+    def test_wraparound_and_count(self):
+        buf = replay_init(8, 3)
+        s = jnp.arange(5 * 3, dtype=jnp.float32).reshape(5, 3)
+        a = jnp.arange(5, dtype=jnp.int32)
+        r = jnp.ones(5)
+        d = jnp.zeros(5)
+        buf = replay_add_batch(buf, s, a, r, s, d)
+        assert int(buf.n) == 5 and int(buf.ptr) == 5
+        buf = replay_add_batch(buf, s, a + 10, r, s, d)
+        assert int(buf.n) == 8  # capped at capacity
+        assert int(buf.ptr) == 2  # wrapped
+        # the wrap overwrote slots 0-1 with the newest transitions
+        assert int(buf.a[0]) == 13 and int(buf.a[1]) == 14
+        assert int(buf.a[2]) == 2  # oldest survivor
+
+    def test_sample_in_range(self):
+        buf = replay_init(16, 2)
+        s = jnp.ones((4, 2))
+        buf = replay_add_batch(buf, s, jnp.ones(4, jnp.int32) * 7,
+                               jnp.ones(4), s, jnp.zeros(4))
+        batch = replay_sample(buf, jax.random.key(0), 32)
+        assert batch[1].shape == (32,)
+        assert bool(jnp.all(batch[1] == 7))  # only filled slots sampled
+
+
+class TestBatchedDDQN:
+    def test_update_bit_identical_to_scalar_at_b1(self):
+        """The satellite contract: same params + same sampled batch →
+        the batched train step and the scalar agent's update produce
+        bit-identical parameters."""
+        cfg = DDQNConfig(state_dim=4, n_actions=3, batch=8, seed=0)
+        scalar = DDQNAgent(cfg)
+        batched = BatchedDDQNAgent(cfg)
+        # align initial network/opt state (the two agents split their
+        # PRNG keys differently at construction)
+        batched.state = batched.state._replace(
+            params=scalar.params,
+            target=jax.tree.map(jnp.copy, scalar.target),
+            opt_state=scalar.opt.init(scalar.params))
+        rng = np.random.RandomState(1)
+        batch = (rng.randn(8, 4).astype(np.float32),
+                 rng.randint(0, 3, 8).astype(np.int32),
+                 rng.randn(8).astype(np.float32),
+                 rng.randn(8, 4).astype(np.float32),
+                 rng.randint(0, 2, 8).astype(np.float32))
+        p_s, _, loss_s = scalar._update(scalar.params, scalar.target,
+                                        scalar.opt_state,
+                                        *map(jnp.asarray, batch))
+        loss_b = batched.train_step(batch)
+        assert float(loss_s) == float(loss_b)
+        for a, b in zip(jax.tree.leaves(p_s),
+                        jax.tree.leaves(batched.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_target_sync_counts_gradient_steps(self):
+        """Satellite fix: pre-warmup transitions must not burn the
+        target-update counter."""
+        cfg = DDQNConfig(state_dim=2, n_actions=2, batch=4,
+                         target_update=2, seed=0)
+        agent = DDQNAgent(cfg)
+        s = np.zeros(2, np.float32)
+        for _ in range(3):  # below warmup: no gradient steps
+            agent.observe(s, 0, 0.0, s, True)
+        assert agent.steps == 3
+        assert agent.grad_steps == 0
+        before = jax.tree.leaves(agent.target)[0].copy()
+        agent.observe(s, 0, 0.0, s, True)  # first gradient step
+        assert agent.grad_steps == 1
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(agent.target)[0]), np.asarray(before))
+        agent.observe(s, 0, 0.0, s, True)  # second → target syncs
+        assert agent.grad_steps == 2
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(agent.target)[0]),
+            np.asarray(jax.tree.leaves(agent.params)[0]))
+
+    def test_fused_step_trains(self):
+        cfg = cnn_env_config(horizon=3, batch=8, epsilon=0.001, seed=2)
+        env = BatchedCuttingPointEnv(cfg, n_envs=4)
+        agent = BatchedDDQNAgent(DDQNConfig(
+            state_dim=env.state_dim, n_actions=env.n_actions, batch=8,
+            seed=0))
+        state, obs = env.reset()
+        p0 = jax.tree.leaves(agent.state.params)[0].copy()
+        for _ in range(4):  # 4 steps × 4 envs = 16 transitions > warmup 8
+            state, obs, r, done, info, loss = agent.fused_step(
+                env, state, obs)
+            assert r.shape == (4,)
+            assert bool(jnp.all(jnp.isfinite(r)))
+        assert int(agent.state.env_steps) == 16
+        assert int(agent.state.grad_steps) > 0
+        assert not np.array_equal(
+            np.asarray(p0), np.asarray(jax.tree.leaves(agent.state.params)[0]))
+
+
+class TestBatchedEnv:
+    def test_action_tables_match_scalar_env(self):
+        cfg = cnn_env_config(horizon=4, batch=8, epsilon=0.001, seed=1,
+                             codecs=("fp32", "int8"))
+        scalar = CuttingPointEnv(cfg)
+        batched = BatchedCuttingPointEnv(cfg, n_envs=2)
+        assert batched.n_actions == scalar.n_actions
+        for a in range(scalar.n_actions):
+            v, codec = scalar.decode_action(a)
+            assert float(batched.xbits_table[a]) == scalar.smashed_bits(v, codec)
+            np.testing.assert_allclose(float(batched.gamma_table[a]),
+                                       scalar.gamma_fn(v, codec), rtol=1e-6)
+
+    def test_reward_matches_scalar_env_on_same_gains(self):
+        cfg = cnn_env_config(horizon=4, batch=8, epsilon=0.001, seed=3)
+        scalar = CuttingPointEnv(cfg)
+        scalar.reset()
+        batched = BatchedCuttingPointEnv(cfg, n_envs=2)
+        state, _ = batched.reset()
+        gains = np.broadcast_to(scalar.gains, (2, cfg.n_clients)).copy()
+        state = state._replace(gains=jnp.asarray(gains, jnp.float32))
+        action = batched.n_codecs * 1  # v=2, fp32
+        _, _, r_b, _, info = batched.step(
+            state, jnp.full(2, action, jnp.int32))
+        _, r_s, _, info_s = scalar.step(action)
+        np.testing.assert_allclose(float(r_b[0]), r_s, rtol=1e-3)
+        np.testing.assert_allclose(float(info["chi"][0]), info_s["chi"],
+                                   rtol=1e-3)
+
+    def test_auto_reset_and_lockstep(self):
+        cfg = cnn_env_config(horizon=2, batch=8, epsilon=0.001, seed=4)
+        env = BatchedCuttingPointEnv(cfg, n_envs=3)
+        state, obs = env.reset()
+        a = jnp.ones(3, jnp.int32) * env.n_codecs  # v=2 everywhere
+        state, obs, _, done, _ = env.step(state, a)
+        assert not bool(done.any())
+        state, obs, _, done, _ = env.step(state, a)
+        assert bool(done.all())
+        assert bool((state.t == 0).all())  # auto-reset
+        assert bool((state.cum_cost == 0).all())
+
+    def test_run_algorithm1_batched_smoke(self):
+        cfg = cnn_env_config(horizon=3, batch=8, epsilon=0.001, seed=2)
+        env = BatchedCuttingPointEnv(cfg, n_envs=8)
+        res = run_algorithm1_batched(env, episodes=16)
+        assert len(res.episode_rewards) == 16
+        assert len(res.greedy_policy) == 3
+        assert all(np.isfinite(res.episode_rewards))
+        assert all(v in range(1, len(cfg.phis) + 1)
+                   for v in res.greedy_policy)
