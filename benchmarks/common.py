@@ -36,7 +36,7 @@ def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
     """Train one scheme; returns accuracy curve + comm accounting."""
     from repro.configs.paper_cnn import LIGHT_CONFIG
     from repro.core.simulator import FedSimulator, SimConfig
-    from repro.data.federated import client_batches
+    from repro.data.federated import round_batches
 
     train, test, parts, rho = fed_setup(dataset, n_clients=n_clients, seed=seed)
     sim = FedSimulator(LIGHT_CONFIG,
@@ -48,13 +48,7 @@ def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
     rng = np.random.RandomState(seed)
     accs, rounds_axis, losses, drifts = [], [], [], []
     for r in range(rounds):
-        xs, ys = client_batches(train, parts, batch, rng)
-        if tau > 1:
-            sel = [client_batches(train, parts, batch, rng) for _ in range(tau)]
-            xs = np.stack([s[0] for s in sel], axis=1)
-            ys = np.stack([s[1] for s in sel], axis=1)
-        else:
-            xs, ys = xs[:, None], ys[:, None]
+        xs, ys = round_batches(train, parts, batch, tau, rng)
         m = sim.run_round(xs, ys)
         losses.append(m["loss"])
         drifts.append(m["client_drift"])

@@ -4,24 +4,36 @@ Prints ``name,us_per_call,derived`` CSV per the repo convention. Each
 "call" is the full benchmark routine; ``derived`` carries the headline
 metric(s) the paper figure reports.
 
+``--json OUT`` additionally writes a machine-readable ``BENCH_*.json``
+(name → us_per_call + derived) so CI can archive the perf trajectory —
+the stdout CSV alone leaves no artifact behind. ``--only a,b`` filters
+benchmarks by substring (CI runs the cheap analytic subset).
+
 Fast mode by default (2-core container); REPRO_BENCH_FULL=1 for
 paper-scale rounds/episodes/datasets.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 import traceback
 
 
-def _bench(name, fn):
+def _bench(name, fn, results):
     t0 = time.time()
     try:
         derived = fn()
         us = (time.time() - t0) * 1e6
         print(f"{name},{us:.0f},{derived}")
+        results[name] = {"us_per_call": round(us), "derived": derived,
+                         "status": "ok"}
     except Exception as e:  # pragma: no cover
         traceback.print_exc()
         print(f"{name},-1,ERROR:{type(e).__name__}")
+        results[name] = {"us_per_call": -1,
+                         "derived": f"ERROR:{type(e).__name__}",
+                         "status": "error"}
 
 
 def bench_fig3():
@@ -106,6 +118,19 @@ def bench_fig9():
                rows["int4"]["final_acc"], rows["int8"]["ratio_vs_fp32"]))
 
 
+def bench_fig10():
+    from benchmarks import fig10_closed_loop as f
+
+    rows = {r["strategy"]: r for r in f.run()}
+    dyn = rows["dynamic_ddqn"]
+    fx = next(v for k, v in rows.items() if k.startswith("fixed_alloc"))
+    return ("acc@budget dyn=%.3f fixed_alloc=%.3f dyn_wall=%.1fs "
+            "fixed_alloc_wall=%.1fs migrations=%d migrated_mb=%.1f"
+            % (dyn["acc_at_budget"], fx["acc_at_budget"],
+               dyn["wall_clock_s"], fx["wall_clock_s"],
+               dyn["n_migrations"], dyn["migration_mb"]))
+
+
 def bench_kernels():
     from benchmarks import kernels_bench as f
 
@@ -113,17 +138,41 @@ def bench_kernels():
     return " ".join(f"{n}={us:.0f}us" for n, us in rows)
 
 
-def main() -> None:
+BENCHES = [
+    ("kernels_micro", bench_kernels),
+    ("fig8_latency_vs_bandwidth", bench_fig8),
+    ("roofline_table", bench_roofline),
+    ("fig6_resource_strategies", bench_fig6),
+    ("fig7_ddqn_convergence", bench_fig7),
+    ("fig3_convergence_vs_cut", bench_fig3),
+    ("fig4_comm_overhead", bench_fig4),
+    ("fig5_latency_schemes", bench_fig5),
+    ("fig9_accuracy_vs_bits", bench_fig9),
+    ("fig10_closed_loop", bench_fig10),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write results as JSON (e.g. BENCH_ci.json)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings: run matching benches only")
+    args = ap.parse_args(argv)
+    wanted = [w for w in (args.only or "").split(",") if w]
+    results = {}
     print("name,us_per_call,derived")
-    _bench("kernels_micro", bench_kernels)
-    _bench("fig8_latency_vs_bandwidth", bench_fig8)
-    _bench("roofline_table", bench_roofline)
-    _bench("fig6_resource_strategies", bench_fig6)
-    _bench("fig7_ddqn_convergence", bench_fig7)
-    _bench("fig3_convergence_vs_cut", bench_fig3)
-    _bench("fig4_comm_overhead", bench_fig4)
-    _bench("fig5_latency_schemes", bench_fig5)
-    _bench("fig9_accuracy_vs_bits", bench_fig9)
+    for name, fn in BENCHES:
+        if wanted and not any(w in name for w in wanted):
+            continue
+        _bench(name, fn, results)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"results": results,
+                       "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                                  time.gmtime())},
+                      f, indent=2, sort_keys=True)
+        print(f"# json -> {args.json}")
 
 
 if __name__ == "__main__":

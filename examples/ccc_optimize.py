@@ -52,6 +52,12 @@ def cutting_point_only(backend: str, episodes: int, n_envs: int):
             CuttingPointEnv(cnn_env_config(horizon=10, batch=16,
                                            epsilon=eps, seed=5)), 10)
         print(f"  random cut + optimal allocation: cost={c['cost']:.1f}")
+        # the learned policy is directly executable against live training:
+        # CCCResult.cut_schedule() feeds core.closed_loop.run_closed_loop
+        # (see benchmarks/fig10_closed_loop.py for the full comparison)
+        sched = res.cut_schedule()
+        print(f"  exported CutSchedule '{sched.name}': "
+              f"{[sched(t) for t in range(10)]}")
 
 
 def joint_cut_and_codec(backend: str, episodes: int, n_envs: int,

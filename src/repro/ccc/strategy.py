@@ -26,6 +26,18 @@ class CCCResult:
     greedy_policy: List
     agent: object  # DDQNAgent or BatchedDDQNAgent
 
+    def cut_schedule(self, env=None):
+        """Export the learned policy as a ``core.closed_loop.CutSchedule``
+        ready to drive live training. With ``env`` the schedule re-queries
+        the agent on the LIVE channel observation every round (the true
+        closed loop); without it the frozen greedy rollout is cycled."""
+        from repro.core.closed_loop import CutSchedule
+
+        if env is not None:
+            return CutSchedule.from_agent(self.agent, env)
+        cuts = [v if isinstance(v, int) else v[0] for v in self.greedy_policy]
+        return CutSchedule.from_sequence(cuts, name="ddqn_rollout")
+
 
 def run_algorithm1(env: CuttingPointEnv, episodes: int = 200,
                    agent: Optional[DDQNAgent] = None,
@@ -112,14 +124,33 @@ def run_algorithm1_batched(env: BatchedCuttingPointEnv, episodes: int = 200,
     return CCCResult(ep_rewards, ep_lat, policy, agent)
 
 
+def _baseline_round_cost(env: CuttingPointEnv, v: int,
+                         codec: str = "fp32") -> Dict:
+    """One round's (latency, cost) for a baseline policy, under the SAME
+    rules the DDQN reward pays (eq. 35): infeasible allocation or a
+    privacy violation costs the penalty C, not the raw χ+ψ — otherwise
+    fig. 6 would compare a penalized agent against unpenalized baselines.
+    Infinite χ (infeasible P2.1) contributes 0 to the latency sum, exactly
+    like the Algorithm 1 accounting in ``run_algorithm1``."""
+    from repro.sysmodel.privacy import privacy_ok
+
+    cfg = env.cfg
+    gamma, chi, psi, alloc = env.cost_terms(v, codec)
+    ok = privacy_ok(cfg.phis[v - 1], cfg.total_params, cfg.epsilon) \
+        and alloc.feasible
+    lat = chi + psi if np.isfinite(chi + psi) else 0.0
+    cost = cfg.w * gamma + chi + psi if ok else cfg.penalty
+    return {"latency": lat, "cost": cost}
+
+
 def fixed_cut_policy_cost(env: CuttingPointEnv, v: int, rounds: int = 20) -> Dict:
     """Benchmark: fixed cutting layer with optimal resource allocation."""
     env.reset()
     lat, cost = 0.0, 0.0
     for _ in range(rounds):
-        gamma, chi, psi, alloc = env.cost_terms(v)
-        lat += chi + psi
-        cost += env.cfg.w * gamma + chi + psi
+        r = _baseline_round_cost(env, v)
+        lat += r["latency"]
+        cost += r["cost"]
         env.gains = env._draw_gains()
     return {"latency": lat, "cost": cost}
 
@@ -128,6 +159,7 @@ def fixed_alloc_policy_cost(env: CuttingPointEnv, v: int, rounds: int = 20) -> D
     """Benchmark: fixed cut AND fixed (equal-split) resources."""
     from repro.ccc.convex import latency_fixed_alloc
     from repro.sysmodel.comp import scale_by_cut
+    from repro.sysmodel.privacy import privacy_ok
 
     env.reset()
     cfg = env.cfg
@@ -137,7 +169,10 @@ def fixed_alloc_policy_cost(env: CuttingPointEnv, v: int, rounds: int = 20) -> D
         X_bits = cfg.smashed_elems[v - 1] * cfg.batch * cfg.bytes_per_elem * 8
         r = latency_fixed_alloc(env.gains, X_bits, cfg.batch, env.comm, comp)
         lat += r["total"]
-        cost += cfg.w * env.gamma_fn(v) + r["total"]
+        # equal-split is always "feasible" (no pooled budget to violate),
+        # but the privacy constraint still binds — same penalty as eq. 35
+        ok = privacy_ok(cfg.phis[v - 1], cfg.total_params, cfg.epsilon)
+        cost += cfg.w * env.gamma_fn(v) + r["total"] if ok else cfg.penalty
         env.gains = env._draw_gains()
     return {"latency": lat, "cost": cost}
 
@@ -149,8 +184,8 @@ def random_cut_policy_cost(env: CuttingPointEnv, rounds: int = 20,
     lat, cost = 0.0, 0.0
     for _ in range(rounds):
         v, codec = env.decode_action(int(rng.randint(env.n_actions)))
-        gamma, chi, psi, _ = env.cost_terms(v, codec)
-        lat += chi + psi
-        cost += env.cfg.w * gamma + chi + psi
+        r = _baseline_round_cost(env, v, codec)
+        lat += r["latency"]
+        cost += r["cost"]
         env.gains = env._draw_gains()
     return {"latency": lat, "cost": cost}

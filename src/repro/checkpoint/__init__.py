@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.checkpoint import (load_checkpoint,  # noqa: F401
+                                         load_checkpoint_meta, save_checkpoint)

@@ -3,11 +3,15 @@
 Format: a single file with a msgpack header {treedef, shapes, dtypes, meta}
 followed by raw little-endian array payloads. Restores onto host then lets
 the caller device_put with the right shardings.
+
+``load_checkpoint`` validates the snapshot against the ``like`` structure:
+treedef string, per-leaf shape AND dtype, and payload length (a truncated
+file fails loudly instead of yielding a short garbage leaf). Restored
+arrays are writable copies — ``np.frombuffer`` views are read-only and
+poison any in-place consumer downstream.
 """
 from __future__ import annotations
 
-import io
-import json
 import os
 from typing import Any, Dict, Optional, Tuple
 
@@ -49,13 +53,31 @@ def _resolve_dtype(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
+def _read_header(f) -> Tuple[Dict, int]:
+    unpacker = msgpack.Unpacker(f, raw=False)
+    header = unpacker.unpack()
+    return header, unpacker.tell()
+
+
+def load_checkpoint_meta(path: str) -> Dict:
+    """Read just the ``meta`` dict (cheap: header only, no payloads)."""
+    with open(path, "rb") as f:
+        header, _ = _read_header(f)
+    return header["meta"]
+
+
 def load_checkpoint(path: str, like: Any) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like`` (treedef/shape/dtype validated)."""
     leaves, treedef = _flatten(like)
     with open(path, "rb") as f:
-        unpacker = msgpack.Unpacker(f, raw=False)
-        header = unpacker.unpack()
-        offset = unpacker.tell()
+        header, offset = _read_header(f)
+        if header["treedef"] != str(treedef):
+            raise ValueError(
+                f"checkpoint treedef mismatch:\n  saved: {header['treedef']}"
+                f"\n  model: {treedef}")
+        if len(header["shapes"]) != len(leaves):
+            raise ValueError(f"checkpoint has {len(header['shapes'])} leaves, "
+                             f"model has {len(leaves)}")
         f.seek(offset)
         out = []
         for i, l in enumerate(leaves):
@@ -64,7 +86,13 @@ def load_checkpoint(path: str, like: Any) -> Tuple[Any, Dict]:
             want = np.asarray(l)
             if shape != want.shape:
                 raise ValueError(f"leaf {i}: checkpoint shape {shape} != model {want.shape}")
+            if dtype != want.dtype:
+                raise ValueError(f"leaf {i}: checkpoint dtype {dtype} != "
+                                 f"model {want.dtype}")
             n = int(np.prod(shape)) * dtype.itemsize
             buf = f.read(n)
-            out.append(np.frombuffer(buf, dtype=dtype).reshape(shape))
+            if len(buf) != n:
+                raise ValueError(f"truncated checkpoint: leaf {i} needs {n} "
+                                 f"bytes, file had {len(buf)}")
+            out.append(np.frombuffer(buf, dtype=dtype).reshape(shape).copy())
     return jax.tree.unflatten(treedef, out), header["meta"]

@@ -63,6 +63,103 @@ def split_lm_params(params: Dict, n_clients: int) -> Dict:
     return {"client": client, "server": server}
 
 
+def _ungroup_layers(groups_params, groups, layer_axis: int) -> list:
+    """Flatten scan-stacked group params into a per-layer list of trees.
+
+    A group with repeat R and period p covers R·p layers in r-major order;
+    ``layer_axis`` is 0 for server-side params and 1 for client-side ones
+    (whose leaves carry a leading client axis N)."""
+    layers = []
+    for g, gp in zip(groups, groups_params):
+        for r in range(g.repeat):
+            for i in range(len(g.period)):
+                layers.append(jax.tree.map(
+                    lambda x: jax.lax.index_in_dim(x, r, layer_axis,
+                                                   keepdims=False), gp[i]))
+    return layers
+
+
+def _regroup_layers(layers: list, groups, layer_axis: int) -> list:
+    """Inverse of ``_ungroup_layers`` for a (possibly different) grouping."""
+    out, k = [], 0
+    for g in groups:
+        p = len(g.period)
+        out.append(tuple(
+            jax.tree.map(lambda *xs: jnp.stack(xs, axis=layer_axis),
+                         *[layers[k + r * p + i] for r in range(g.repeat)])
+            for i in range(p)))
+        k += g.repeat * p
+    return out
+
+
+def resplit_lm_params(split: Dict, old_plan: lm_mod.ModelPlan,
+                      new_plan: lm_mod.ModelPlan,
+                      rho: Optional[jnp.ndarray] = None) -> Dict:
+    """Migrate the split layout from ``old_plan.cut`` to ``new_plan.cut``.
+
+    Layers moving server→client are broadcast to every client (each gets
+    its own copy of the shared server layer); layers moving client→server
+    collapse the N per-client copies into one shared layer by ρ-average —
+    the eq.-7-style merge, exact (and v→v'→v lossless) whenever the client
+    copies agree, which holds at init and for client-aggregating schemes.
+    Works on any tree with the params structure, so optimizer moments
+    migrate through the same function (see ``resplit_opt_state``).
+    """
+    old_v, new_v = old_plan.cut, new_plan.cut
+    assert min(old_v, new_v) >= 1, "dynamic cut needs a client side (v >= 1)"
+    if old_v == new_v:
+        return split
+    n = jax.tree.leaves(split["client"])[0].shape[0]
+    w = uniform_rho(n) if rho is None else rho
+
+    client_layers = _ungroup_layers(split["client"]["groups"],
+                                    old_plan.client_groups, layer_axis=1)
+    server_layers = _ungroup_layers(split["server"]["groups"],
+                                    old_plan.server_groups, layer_axis=0)
+    if new_v > old_v:  # server→client: broadcast shared layers to N clients
+        moving = server_layers[:new_v - old_v]
+        server_layers = server_layers[new_v - old_v:]
+        client_layers += [jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), l)
+            for l in moving]
+    else:              # client→server: ρ-average the per-client copies
+        moving = client_layers[new_v:]
+        client_layers = client_layers[:new_v]
+
+        def mean(p):
+            # anchored-delta ρ-average: base + Σ ρ_i (p_i − base) is the
+            # same weighted mean but EXACT (bit-identical) when the client
+            # copies agree — which makes v→v'→v round-trips lossless from
+            # equal copies, the property the migration tests pin.
+            p32 = p.astype(jnp.float32)
+            ww = w.reshape((n,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+            return (p32[0] + jnp.sum(ww * (p32 - p32[0][None]), axis=0)) \
+                .astype(p.dtype)
+
+        server_layers = [jax.tree.map(mean, l) for l in moving] + server_layers
+
+    client = {"embed": split["client"]["embed"],
+              "groups": _regroup_layers(client_layers,
+                                        new_plan.client_groups, layer_axis=1)}
+    server = dict(split["server"],
+                  groups=_regroup_layers(server_layers,
+                                         new_plan.server_groups, layer_axis=0))
+    return {"client": client, "server": server}
+
+
+def resplit_opt_state(opt_state: Dict, old_plan: lm_mod.ModelPlan,
+                      new_plan: lm_mod.ModelPlan,
+                      rho: Optional[jnp.ndarray] = None) -> Dict:
+    """Migrate optimizer state across a cut change: params-shaped subtrees
+    (adamw m/v, momentum mu) go through ``resplit_lm_params``; scalar
+    fields (count) pass through untouched."""
+    out = dict(opt_state)
+    for k in ("m", "v", "mu"):
+        if k in out:
+            out[k] = resplit_lm_params(out[k], old_plan, new_plan, rho)
+    return out
+
+
 def merge_lm_params(split: Dict, rho: Optional[jnp.ndarray] = None) -> Dict:
     """Global eval/serve model: ρ-weighted mean of client copies + server."""
     n = jax.tree.leaves(split["client"])[0].shape[0]

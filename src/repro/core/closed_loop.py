@@ -1,0 +1,206 @@
+"""Closed-loop dynamic-split training: Algorithm 1 EXECUTED, not planned.
+
+The paper's headline contribution is *dynamic* model splitting — the
+cutting point is re-selected every round as channels fade (§IV-B). The
+CCC stack (``repro.ccc``) learns that policy, but until this module the
+training stacks always ran a fixed cut: the DDQN's schedule was never
+executed. ``run_closed_loop`` closes the loop:
+
+* per round, a :class:`CutSchedule` (a trained DDQN policy queried on the
+  LIVE channel state, a fixed per-round sequence, or a constant) picks v;
+* ``FedSimulator.set_cut`` migrates the boundary layers — a pure pytree
+  re-partition, priced by ``sysmodel.traffic.migration_bits`` (download
+  of layers moving client-ward, upload of layers moving server-ward) and
+  ``sysmodel.latency.migration_latency`` (equal-share band: the migration
+  happens before the round's P2.1 allocation exists);
+* the round's wall-clock comes from ``sysmodel.latency`` via the P2.1
+  solve inside ``CuttingPointEnv.step`` (``alloc="opt"``) or the
+  equal-split baseline (``alloc="fixed"``);
+* real training runs at the new cut (per-cut jitted round functions).
+
+This goes beyond fixed-cut analyses (Dachille et al., arXiv:2412.15536)
+and static-split AdaptSFL (arXiv:2403.13101): accuracy-vs-wall-clock with
+migration priced in, end to end (``benchmarks/fig10_closed_loop.py``).
+A constant schedule reproduces the fixed-cut run bit for bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.federated import round_batches
+
+
+class CutSchedule:
+    """Per-round cutting-point source for the closed loop.
+
+    Either a concrete per-round sequence (cycled when shorter than the
+    run) or a policy callable ``(t, obs) -> v`` queried on the live MDP
+    observation (eq. 34 state: normalized gains + cumulative cost).
+    """
+
+    def __init__(self, cuts: Optional[Sequence[int]] = None,
+                 policy: Optional[Callable] = None, cycle: bool = True,
+                 name: str = "schedule"):
+        if (cuts is None) == (policy is None):
+            raise ValueError("exactly one of cuts/policy must be given")
+        self.cuts = None if cuts is None else tuple(int(v) for v in cuts)
+        self.policy = policy
+        self.cycle = cycle
+        self.name = name
+
+    @classmethod
+    def constant(cls, v: int) -> "CutSchedule":
+        return cls(cuts=(int(v),), name=f"constant_v{int(v)}")
+
+    @classmethod
+    def from_sequence(cls, seq: Sequence[int], cycle: bool = True,
+                      name: str = "sequence") -> "CutSchedule":
+        return cls(cuts=seq, cycle=cycle, name=name)
+
+    @classmethod
+    def from_agent(cls, agent, env, name: str = "ddqn") -> "CutSchedule":
+        """Greedy rollout of a trained (scalar or batched) DDQN agent,
+        evaluated per round on the CURRENT channel observation."""
+        def policy(t, obs):
+            try:
+                a = agent.act(obs, greedy=True)
+            except TypeError:  # BatchedDDQNAgent.act is greedy-only
+                a = agent.act(obs)
+            a = int(np.asarray(a).reshape(-1)[0])
+            v, _codec = env.decode_action(a)
+            return v
+
+        return cls(policy=policy, name=name)
+
+    @classmethod
+    def random(cls, env, rounds: int, seed: int = 0,
+               name: str = "random") -> "CutSchedule":
+        """Uniform-random cut per round (the fig. 6 random baseline)."""
+        rng = np.random.RandomState(seed)
+        cuts = [env.decode_action(int(rng.randint(env.n_actions)))[0]
+                for _ in range(rounds)]
+        return cls(cuts=cuts, name=name)
+
+    def __call__(self, t: int, obs=None) -> int:
+        if self.policy is not None:
+            return int(self.policy(t, obs))
+        i = t % len(self.cuts) if self.cycle else min(t, len(self.cuts) - 1)
+        return self.cuts[i]
+
+
+@dataclass
+class ClosedLoopResult:
+    name: str
+    cuts: List[int]                      # executed cut per round
+    records: List[dict]                  # per-round latency/bits/migration
+    curve: List[Tuple[float, float]]     # (cumulative wall-clock s, accuracy)
+    final_acc: float
+    total_latency_s: float               # training rounds (χ+ψ) incl. migration
+    total_bits: float                    # protocol + migration traffic
+    migration_bits_total: float
+    n_migrations: int
+    infeasible_rounds: int = 0
+
+    def acc_at_time(self, budget_s: float) -> float:
+        """Accuracy reached by wall-clock ``budget_s`` (step interpolation:
+        the last evaluation completed within the budget; 0.0 before any)."""
+        acc = 0.0
+        for t, a in self.curve:
+            if t <= budget_s:
+                acc = a
+        return acc
+
+
+def _fixed_alloc_latency(env, v: int) -> float:
+    from repro.ccc.convex import latency_fixed_alloc
+    from repro.sysmodel.comp import scale_by_cut
+
+    cfg = env.cfg
+    comp = scale_by_cut(env.base_comp, cfg.flop_fracs[v - 1])
+    r = latency_fixed_alloc(env.gains, env.smashed_bits(v), cfg.batch,
+                            env.comm, comp)
+    return r["total"]
+
+
+def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
+                    rounds: int, *, alloc: str = "opt", eval_every: int = 10,
+                    batch_seed: int = 0, skip_batches: int = 0,
+                    name: Optional[str] = None,
+                    log_every: int = 0) -> ClosedLoopResult:
+    """Run ``rounds`` of live training under a per-round cut schedule.
+
+    ``sim`` is a :class:`repro.core.simulator.FedSimulator`; ``env`` a
+    :class:`repro.ccc.env.CuttingPointEnv` supplying block fading, the
+    P2.1-solved allocation (``alloc="opt"``) and the MDP observation the
+    schedule's policy may consume. The env's action space must be the
+    paper-faithful cut-only one (single codec). Wall-clock per round =
+    migration latency (if the cut moved) + χ+ψ at the executed cut; if
+    P2.1 is infeasible on a round the equal-split latency is charged
+    instead (nature does not halt — the round just runs unoptimized).
+    ``skip_batches`` fast-forwards the data stream past rounds a resumed
+    simulator already trained on (pass the restored ``sim._t``).
+    """
+    assert env.n_codecs == 1, "closed loop prices the cut-only action space"
+    assert alloc in ("opt", "fixed")
+    rng = np.random.RandomState(batch_seed)
+    for _ in range(skip_batches):
+        round_batches(train, parts, sim.sim.batch, sim.sim.tau, rng)
+    obs = env.reset()
+    t_wall = 0.0
+    total_bits = 0.0
+    mig_bits_total = 0.0
+    n_migrations = 0
+    infeasible = 0
+    cuts: List[int] = []
+    records: List[dict] = []
+    curve: List[Tuple[float, float]] = []
+    for t in range(rounds):
+        v = schedule(t, obs)
+        mig = sim.set_cut(v)  # zero-traffic no-op when v is unchanged
+        mig_lat = 0.0
+        if mig["total_bits"]:
+            from repro.sysmodel.latency import migration_latency
+
+            n_migrations += 1
+            N = sim.sim.n_clients
+            mig_lat = migration_latency(mig["up_bits"] / N,
+                                        mig["down_bits"] / N,
+                                        env.gains, env.comm)
+        fixed_lat = _fixed_alloc_latency(env, v)
+        # advance the MDP with the executed action: P2.1 reward inside,
+        # block-fading redraw, observation for the next policy query
+        obs, _r, done, info = env.step((v - 1) * env.n_codecs)
+        if alloc == "opt":
+            lat = info["latency"]
+            if not np.isfinite(lat):
+                infeasible += 1
+                lat = fixed_lat
+        else:
+            lat = fixed_lat
+        if done:
+            obs = env.reset()  # episode boundary: fresh fading, policy continues
+        m = sim.run_round(*round_batches(train, parts, sim.sim.batch,
+                                         sim.sim.tau, rng))
+        round_bits = m["bits_up"] + m["bits_down"] + mig["total_bits"]
+        t_wall += mig_lat + lat
+        total_bits += round_bits
+        mig_bits_total += mig["total_bits"]
+        cuts.append(v)
+        records.append({"round": t, "cut": v, "loss": m["loss"],
+                        "latency_s": lat, "migration_s": mig_lat,
+                        "migration_bits": mig["total_bits"],
+                        "bits": round_bits, "wall_clock_s": t_wall})
+        if (t + 1) % eval_every == 0 or t == rounds - 1:
+            acc = sim.evaluate(test.x, test.y)
+            curve.append((t_wall, acc))
+            if log_every and (t + 1) % log_every == 0:
+                print(f"  round {t+1}/{rounds} cut={v} acc={acc:.3f} "
+                      f"wall={t_wall:.2f}s")
+    return ClosedLoopResult(
+        name=name or schedule.name, cuts=cuts, records=records, curve=curve,
+        final_acc=curve[-1][1], total_latency_s=t_wall, total_bits=total_bits,
+        migration_bits_total=mig_bits_total, n_migrations=n_migrations,
+        infeasible_rounds=infeasible)

@@ -8,8 +8,11 @@ with vmap over the leading axis; per-round batches have shape
 Scheme semantics (who aggregates what, transport per direction, seed
 schedule, drift metric) come from ``repro.core.protocol.ProtocolEngine``
 — the same engine that drives the LLM train steps — and per-round
-traffic from ``repro.sysmodel.traffic``. See DESIGN.md §2 for the
-protocol table this simulator executes:
+traffic from ``repro.sysmodel.traffic``. The cut is DYNAMIC: ``set_cut``
+migrates boundary layers between the client and server stacks mid-run
+(per-cut jitted round functions, DESIGN.md §12); ``core.closed_loop``
+drives it from a DDQN cut schedule. See DESIGN.md §2 for the protocol
+table this simulator executes:
 
 * SFL-GA: server backward produces per-client smashed-data gradients s^n;
   the ρ-weighted aggregate s = Σ ρ^n s^n (eq. 5) is broadcast; every client
@@ -78,6 +81,7 @@ class FedSimulator:
             rho if rho is not None else np.full(sim.n_clients, 1.0 / sim.n_clients),
             jnp.float32)
         params = cnn.init_cnn(jax.random.key(seed), cnn_cfg)
+        self.cut = sim.cut  # current cut; SimConfig.cut stays the initial one
         v = sim.cut
         if sim.scheme == "fl":
             self.state = {"client": _stack(params, sim.n_clients), "server": []}
@@ -86,12 +90,54 @@ class FedSimulator:
                 "client": _stack(params[:v], sim.n_clients),
                 "server": _stack(params[v:], sim.n_clients),  # per-client replicas (eq. 6)
             }
-        self._round_jit = jax.jit(self._round)
+        # per-cut jit cache: dynamic splitting re-enters here with a new
+        # static v; a constant schedule only ever compiles one entry
+        self._round_fns: Dict[int, callable] = {}
 
     # ------------------------------------------------------------------
-    def _epoch_split(self, carry, batch):
+    def set_cut(self, v: int) -> Dict[str, int]:
+        """Migrate the cut boundary to ``v`` (Algorithm 1 executed live).
+
+        Both sides hold per-client stacks of per-block params, so the
+        migration is a pure list re-partition — blocks keep their values
+        bit for bit (v→v'→v round-trips losslessly) and each client keeps
+        its OWN copy of layers crossing in either direction. Returns the
+        migration traffic (``sysmodel.traffic.migration_bits``): layers
+        moving client-ward are downloaded by every client, layers moving
+        server-ward are uploaded by every client; zero when v is unchanged.
+        """
+        from repro.sysmodel.traffic import migration_bits
+
+        if not self.proto.spec.split:
+            raise ValueError("set_cut: scheme 'fl' has no cut boundary")
+        if not 1 <= v < self.cfg.num_layers:
+            raise ValueError(f"cut {v} outside [1, {self.cfg.num_layers - 1}]")
+        old = self.cut
+        bits = migration_bits(
+            cnn.phi(self.cfg, old), cnn.phi(self.cfg, v),
+            n_clients=self.sim.n_clients,
+            raw_bits_per_elem=self.sim.bytes_per_elem * 8)
+        if v != old:
+            client = list(self.state["client"])
+            server = list(self.state["server"])
+            if v > old:  # boundary layers move client-ward
+                client, server = client + server[:v - old], server[v - old:]
+            else:        # boundary layers move server-ward
+                client, server = client[:v], client[v:] + server
+            self.state = {"client": client, "server": server}
+            self.cut = v
+        return bits
+
+    def _round_fn(self, v: int):
+        fn = self._round_fns.get(v)
+        if fn is None:
+            fn = self._round_fns[v] = jax.jit(partial(self._round, v))
+        return fn
+
+    # ------------------------------------------------------------------
+    def _epoch_split(self, v, carry, batch):
         """One local epoch of split training (any of sfl_ga / sfl / psl)."""
-        cfg, sim, v = self.cfg, self.sim, self.sim.cut
+        cfg, sim = self.cfg, self.sim
         cp, sp = carry
         x, y, seed = batch  # (N,B,H,W,C), (N,B), uint32 scalar
 
@@ -136,9 +182,10 @@ class FedSimulator:
         cp = jax.tree.map(lambda p, g: p - sim.lr * g, cp, g_n)
         return (cp, []), jnp.sum(loss_n * self.rho)
 
-    def _round(self, state, x, y, seed):
+    def _round(self, v, state, x, y, seed):
         """x: (N, τ, B, H, W, C); y: (N, τ, B); seed: uint32 scalar."""
-        epoch = self._epoch_fl if not self.proto.spec.split else self._epoch_split
+        epoch = self._epoch_fl if not self.proto.spec.split \
+            else partial(self._epoch_split, v)
         xs = jnp.moveaxis(x, 1, 0)  # (τ, N, B, ...)
         ys = jnp.moveaxis(y, 1, 0)
         seeds = self.proto.epoch_seeds(seed, xs.shape[0])
@@ -154,7 +201,7 @@ class FedSimulator:
     def run_round(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
         seed = self.proto.round_seed(self._t)
         self._t += 1
-        self.state, loss, drift = self._round_jit(self.state, x, y, seed)
+        self.state, loss, drift = self._round_fn(self.cut)(self.state, x, y, seed)
         bits = self.comm_bits_per_round()
         return {"loss": float(loss), "client_drift": float(drift),
                 "bits_up": bits["up_bits"], "bits_down": bits["down_bits"]}
@@ -189,13 +236,44 @@ class FedSimulator:
         split = self.proto.spec.split
         return round_traffic_bits(
             sim.scheme, n_clients=sim.n_clients, tau=sim.tau,
-            smashed_elems=cnn.smashed_numel(cfg, sim.cut) * sim.batch
+            smashed_elems=cnn.smashed_numel(cfg, self.cut) * sim.batch
             if split else 0,
             label_bits=sim.batch * 32,
-            client_model_bits=cnn.phi(cfg, sim.cut) * be8 if split else 0,
+            client_model_bits=cnn.phi(cfg, self.cut) * be8 if split else 0,
             full_model_bits=cnn.total_params(cfg) * be8,
             uplink_codec=self.up_codec.name, downlink_codec=self.down_codec.name,
             raw_bits_per_elem=be8)
+
+    # ------------------------------------------------------------------
+    def save(self, path: str, extra_meta: Optional[Dict] = None) -> None:
+        """Checkpoint state + the round counter ``_t`` and current cut.
+
+        ``_t`` drives the codec stochastic-rounding seed schedule
+        (``ProtocolEngine.round_seed``); without it a resumed run would
+        replay round 0's seeds. The cut is needed so ``restore`` can
+        re-partition before loading (the treedef depends on it)."""
+        from repro.checkpoint import save_checkpoint
+
+        meta = {"t": self._t, "cut": self.cut, "scheme": self.sim.scheme,
+                "n_clients": self.sim.n_clients}
+        if extra_meta:
+            meta.update(extra_meta)
+        save_checkpoint(path, self.state, meta)
+
+    def restore(self, path: str) -> Dict:
+        """Resume from ``save``: re-partition to the saved cut, load the
+        state, and restore the round counter (codec seed schedule)."""
+        from repro.checkpoint import load_checkpoint, load_checkpoint_meta
+
+        meta = load_checkpoint_meta(path)
+        if meta.get("scheme") != self.sim.scheme:
+            raise ValueError(f"checkpoint scheme {meta.get('scheme')!r} != "
+                             f"simulator scheme {self.sim.scheme!r}")
+        if self.proto.spec.split and meta.get("cut") != self.cut:
+            self.set_cut(int(meta["cut"]))
+        self.state, meta = load_checkpoint(path, self.state)
+        self._t = int(meta["t"])
+        return meta
 
     def comm_bytes_per_round(self) -> Dict[str, int]:
         """Byte view of ``comm_bits_per_round`` (exact for the default

@@ -58,3 +58,18 @@ def client_batches(ds: SyntheticImageDataset, parts: List[np.ndarray],
         xs.append(ds.x[take])
         ys.append(ds.y[take])
     return np.stack(xs), np.stack(ys)
+
+
+def round_batches(ds: SyntheticImageDataset, parts: List[np.ndarray],
+                  batch: int, tau: int,
+                  rng: np.random.RandomState) -> Tuple[np.ndarray, np.ndarray]:
+    """One round's τ local-epoch batches: x (N, τ, B, ...), y (N, τ, B).
+
+    Each of the τ local epochs gets its OWN draw per client — repeating
+    one mini-batch τ times is just τ× the step size with extra flops,
+    not τ local epochs of SGD. τ=1 consumes exactly one ``client_batches``
+    draw, so existing single-epoch RNG streams are unchanged.
+    """
+    draws = [client_batches(ds, parts, batch, rng) for _ in range(tau)]
+    return (np.stack([d[0] for d in draws], axis=1),
+            np.stack([d[1] for d in draws], axis=1))

@@ -13,11 +13,21 @@ Both modes run the same protocol engine (core.protocol): ``--uplink-codec``
 ``--tau`` runs τ local steps per round; traffic is reported by the unified
 ``sysmodel.traffic`` accounting.
 
+``--dynamic-cut`` runs the paper's headline feature — per-round cut
+migration — in either mode: a comma list ("1,2,1") is cycled over
+rounds/steps, and CNN mode also accepts ``ddqn[:EPISODES]`` to train
+Algorithm 1 first and execute its policy against the live channel
+(core.closed_loop). Migration traffic (boundary layers moving between
+client and server) is priced by ``sysmodel.traffic.migration_bits``.
+
 Examples:
   python -m repro.launch.train --arch granite-8b --preset 100m --steps 300
   python -m repro.launch.train --arch granite-8b --preset smoke --steps 2 \
       --uplink-codec int8 --downlink-codec int8 --tau 2
+  python -m repro.launch.train --arch granite-8b --preset smoke --layers 3 \
+      --steps 4 --dynamic-cut 1,2
   python -m repro.launch.train --arch paper-cnn --scheme sfl_ga --cut 2 --rounds 100
+  python -m repro.launch.train --arch paper-cnn --rounds 40 --dynamic-cut ddqn:40
 """
 from __future__ import annotations
 
@@ -50,57 +60,110 @@ def train_lm(args) -> dict:
             num_kv_heads=4 if cfg.num_kv_heads else 0,
             d_ff=min(cfg.d_ff, 2048) if cfg.d_ff else 0,
             vocab_size=min(cfg.vocab_size, 32768), head_dim=64)
+    if args.layers:
+        cfg = cfg.with_overrides(num_layers=args.layers)
     from repro.core.protocol import round_seed
+    from repro.core.split import client_param_numel
+    from repro.sysmodel.traffic import migration_bits
 
     n, b, S, tau = args.clients, args.batch, args.seq, args.tau
-    tcfg = TrainConfig(model=cfg, algo=args.scheme, cut_layer=args.cut,
+    schedule = _parse_dynamic_cut(args, lm_mode=True)
+    cut0 = schedule(0) if schedule else args.cut
+    tcfg = TrainConfig(model=cfg, algo=args.scheme, cut_layer=cut0,
                        compute_dtype="float32", param_dtype="float32",
                        lr=args.lr, remat=False, tau=tau,
                        uplink_codec=args.uplink_codec,
                        downlink_codec=args.downlink_codec, seed=args.seed)
-    plan = lm.build_plan(cfg, args.cut)
+    plans = {cut0: lm.build_plan(cfg, cut0)}
+    cut = cut0
     params = alg.split_lm_params(
-        lm.init_lm(jax.random.key(args.seed), plan, jnp.float32), n)
+        lm.init_lm(jax.random.key(args.seed), plans[cut0], jnp.float32), n)
     opt = make_optimizer(args.optimizer, args.lr)
     opt_state = opt.init(params)
-    step = jax.jit(alg.make_train_step(plan, tcfg, opt, n))
+    steps_by_cut = {cut0: jax.jit(alg.make_train_step(plans[cut0], tcfg, opt, n))}
 
     it = synthetic_token_batches(cfg.vocab_size, n * b * tau, S, seed=args.seed)
     shape = (n, b, S) if tau == 1 else (n, tau, b, S)
     losses = []
+    mig_total_bits = 0
+    n_migrations = 0
     t0 = time.time()
     for i in range(args.steps):
+        if schedule is not None:
+            v = schedule(i)
+            if v != cut:
+                # migrate the boundary layers (and any optimizer moments)
+                # to the new cut; migration traffic is model parameters at
+                # the raw fp32 wire (sysmodel.traffic.migration_bits)
+                if v not in plans:
+                    plans[v] = lm.build_plan(cfg, v)
+                    steps_by_cut[v] = jax.jit(
+                        alg.make_train_step(plans[v], tcfg, opt, n))
+                params = alg.resplit_lm_params(params, plans[cut], plans[v])
+                opt_state = alg.resplit_opt_state(opt_state, plans[cut],
+                                                  plans[v])
+                mb = migration_bits(client_param_numel(plans[cut]),
+                                    client_param_numel(plans[v]),
+                                    n_clients=n, raw_bits_per_elem=32)
+                mig_total_bits += mb["total_bits"]
+                n_migrations += 1
+                print(f"step {i}: cut {cut} -> {v} "
+                      f"(migrated {mb['total_bits']/8e6:.2f} MB)")
+                cut = v
         toks, labels = next(it)
         batch = {"tokens": jnp.asarray(toks.reshape(shape)),
                  "labels": jnp.asarray(labels.reshape(shape)),
                  "seed": round_seed(args.seed, i)}
-        params, opt_state, m = step(params, opt_state, batch)
+        params, opt_state, m = steps_by_cut[cut](params, opt_state, batch)
         losses.append(float(m["loss"]))
         if (i + 1) % args.log_every == 0:
             print(f"step {i+1}/{args.steps} loss {losses[-1]:.4f} "
                   f"({(time.time()-t0)/(i+1):.2f} s/step)")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, params,
-                        {"arch": cfg.name, "algo": args.scheme,
+                        {"arch": cfg.name, "algo": args.scheme, "cut": cut,
                          "steps": args.steps, "final_loss": losses[-1]})
         print(f"checkpoint -> {args.checkpoint}")
     # unified per-round traffic (sysmodel.traffic via the LLM adapter);
     # this run computes in float32, so the raw wire is 4 bytes/element
     cb = alg.comm_bytes_per_round(
-        cfg, plan, args.scheme, n, b, S, tau=tau, bytes_per_elem=4,
+        cfg, plans[cut], args.scheme, n, b, S, tau=tau, bytes_per_elem=4,
         uplink_codec=args.uplink_codec, downlink_codec=args.downlink_codec)
-    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
-          f"comm/round {cb['total_bytes']/1e6:.2f} MB "
-          f"(up {cb['up_bytes']/1e6:.2f} / down {cb['down_bytes']/1e6:.2f}, "
-          f"codecs {args.uplink_codec}/{args.downlink_codec})")
-    return {"first_loss": losses[0], "final_loss": losses[-1], "comm": cb}
+    msg = (f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+           f"comm/round {cb['total_bytes']/1e6:.2f} MB "
+           f"(up {cb['up_bytes']/1e6:.2f} / down {cb['down_bytes']/1e6:.2f}, "
+           f"codecs {args.uplink_codec}/{args.downlink_codec})")
+    if schedule is not None:
+        msg += (f"; {n_migrations} cut migrations, "
+                f"{mig_total_bits/8e6:.2f} MB migrated")
+    print(msg)
+    return {"first_loss": losses[0], "final_loss": losses[-1], "comm": cb,
+            "migration_bits": mig_total_bits, "n_migrations": n_migrations}
+
+
+def _parse_dynamic_cut(args, lm_mode: bool):
+    """``--dynamic-cut`` → CutSchedule (or None). Comma list ("1,2,1") in
+    both modes; ``ddqn[:EPISODES]`` (CNN mode) is resolved by the caller,
+    which owns the env."""
+    spec = args.dynamic_cut
+    if not spec:
+        return None
+    from repro.core.closed_loop import CutSchedule
+
+    if spec.startswith("ddqn"):
+        if lm_mode:
+            raise SystemExit("--dynamic-cut ddqn is CNN-mode only; give an "
+                             "explicit comma schedule for LM runs")
+        return spec  # train_cnn trains the agent (needs the env)
+    return CutSchedule.from_sequence(
+        [int(v) for v in spec.split(",")], name=f"sequence[{spec}]")
 
 
 def train_cnn(args) -> dict:
     from repro.configs.paper_cnn import LIGHT_CONFIG
     from repro.core.simulator import FedSimulator, SimConfig
     from repro.data import iid_partition, make_image_dataset
-    from repro.data.federated import client_batches, rho_weights
+    from repro.data.federated import rho_weights, round_batches
 
     ds = make_image_dataset(args.dataset, n=args.n_samples, seed=args.seed)
     train, test = ds.split(0.9)
@@ -112,21 +175,71 @@ def train_cnn(args) -> dict:
                                  uplink_codec=args.uplink_codec,
                                  downlink_codec=args.downlink_codec),
                        rho=rho_weights(parts), seed=args.seed)
-    rng = np.random.RandomState(args.seed)
-    for r in range(args.rounds):
-        xs, ys = client_batches(train, parts, args.batch, rng)
-        xs = np.stack([xs] * args.tau, axis=1) if args.tau > 1 else xs[:, None]
-        ys = np.stack([ys] * args.tau, axis=1) if args.tau > 1 else ys[:, None]
-        m = sim.run_round(xs, ys)
-        if (r + 1) % args.log_every == 0:
-            acc = sim.evaluate(test.x, test.y)
-            print(f"round {r+1}/{args.rounds} loss {m['loss']:.4f} "
-                  f"acc {acc:.3f} drift {m['client_drift']:.2e}")
-    acc = sim.evaluate(test.x, test.y)
-    cb = sim.comm_bytes_per_round()
-    print(f"final acc {acc:.3f}; comm/round "
-          f"{cb['total_bytes']/1e6:.3f} MB ({args.scheme})")
-    return {"accuracy": acc, **cb}
+    done_rounds = 0
+    if args.resume:
+        meta = sim.restore(args.resume)
+        done_rounds = sim._t
+        print(f"resumed from {args.resume} at round {sim._t} "
+              f"(cut {sim.cut}); --rounds {args.rounds} more to run")
+    schedule = _parse_dynamic_cut(args, lm_mode=False)
+    if schedule is not None:
+        result = _train_cnn_closed_loop(args, sim, schedule, train, test,
+                                        parts, skip_batches=done_rounds)
+    else:
+        rng = np.random.RandomState(args.seed)
+        for _ in range(done_rounds):
+            # fast-forward the data stream past already-trained rounds so
+            # a resumed run continues the uninterrupted batch sequence
+            round_batches(train, parts, args.batch, args.tau, rng)
+        for r in range(args.rounds):
+            # τ DISTINCT local-epoch batches per client (repeating one
+            # batch τ times would just be a τ-scaled step, not τ epochs)
+            xs, ys = round_batches(train, parts, args.batch, args.tau, rng)
+            m = sim.run_round(xs, ys)
+            if (r + 1) % args.log_every == 0:
+                acc = sim.evaluate(test.x, test.y)
+                print(f"round {r+1}/{args.rounds} loss {m['loss']:.4f} "
+                      f"acc {acc:.3f} drift {m['client_drift']:.2e}")
+        acc = sim.evaluate(test.x, test.y)
+        cb = sim.comm_bytes_per_round()
+        print(f"final acc {acc:.3f}; comm/round "
+              f"{cb['total_bytes']/1e6:.3f} MB ({args.scheme})")
+        result = {"accuracy": acc, **cb}
+    if args.checkpoint:
+        sim.save(args.checkpoint, {"scheme_args": args.scheme})
+        print(f"checkpoint -> {args.checkpoint} (round {sim._t})")
+    return result
+
+
+def _train_cnn_closed_loop(args, sim, schedule, train, test, parts,
+                           skip_batches: int = 0) -> dict:
+    """CNN mode with ``--dynamic-cut``: run the closed loop (live cut
+    migration + wall-clock from the P2.1-solved allocation)."""
+    from repro.ccc.env import CuttingPointEnv, cnn_env_config
+    from repro.core.closed_loop import run_closed_loop
+
+    env = CuttingPointEnv(cnn_env_config(
+        n_clients=args.clients, batch=args.batch, seed=args.seed))
+    if isinstance(schedule, str):  # "ddqn[:EPISODES]"
+        from repro.ccc.strategy import run_algorithm1
+
+        episodes = int(schedule.split(":")[1]) if ":" in schedule else 60
+        print(f"training Algorithm 1 policy ({episodes} episodes)...")
+        res = run_algorithm1(CuttingPointEnv(cnn_env_config(
+            n_clients=args.clients, batch=args.batch, seed=args.seed)),
+            episodes=episodes)
+        schedule = res.cut_schedule(env)
+    r = run_closed_loop(sim, env, schedule, train, test, parts,
+                        rounds=args.rounds, eval_every=args.log_every,
+                        batch_seed=args.seed, skip_batches=skip_batches,
+                        log_every=args.log_every)
+    print(f"final acc {r.final_acc:.3f}; wall-clock {r.total_latency_s:.2f}s "
+          f"({r.n_migrations} migrations, "
+          f"{r.migration_bits_total/8e6:.2f} MB migrated); cuts {r.cuts}")
+    return {"accuracy": r.final_acc, "wall_clock_s": r.total_latency_s,
+            "cuts": r.cuts, "n_migrations": r.n_migrations,
+            "migration_bits": r.migration_bits_total,
+            "total_bits": r.total_bits}
 
 
 def main(argv=None):
@@ -143,6 +256,16 @@ def main(argv=None):
     p.add_argument("--rounds", type=int, default=50)
     p.add_argument("--tau", type=int, default=1,
                    help="local steps per round (both LM and CNN modes)")
+    p.add_argument("--dynamic-cut", default=None,
+                   help="per-round cut schedule: comma list '1,2,1' (cycled) "
+                        "or 'ddqn[:EPISODES]' (CNN mode: train Algorithm 1 "
+                        "and execute its policy via core.closed_loop)")
+    p.add_argument("--layers", type=int, default=None,
+                   help="override num_layers after the preset (e.g. give the "
+                        "smoke preset 3 layers so --dynamic-cut 1,2 has room)")
+    p.add_argument("--resume", default=None,
+                   help="CNN mode: resume a FedSimulator checkpoint (restores "
+                        "params, round counter and cut)")
     p.add_argument("--uplink-codec", default="fp32",
                    help="cut-layer uplink codec: fp32|bf16|fp8|int8|int4|topkP")
     p.add_argument("--downlink-codec", default="fp32",

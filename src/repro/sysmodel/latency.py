@@ -55,3 +55,33 @@ def round_latency(model: LatencyModel, bw, p_tx, gains, f_client, f_server) -> D
     chi = float(np.max(model.chi_terms(bw, p_tx, gains, f_client, f_server)))
     psi = float(np.max(model.psi_terms(gains, f_client)))
     return {"chi": chi, "psi": psi, "total": chi + psi}
+
+
+def migration_latency(up_bits: float, down_bits: float, gains,
+                      comm: CommParams) -> float:
+    """Wall-clock cost of a cut migration (per-client bits on each link).
+
+    The migration happens BEFORE the round's P2.1 allocation exists, so
+    resources are split equally at max power: uplink clients get B/N
+    sub-bands; the downlink is N per-client UNICASTS (replicas may have
+    drifted, and even identical payloads ship N times — matching
+    ``traffic.migration_bits``) sharing the server band, so each runs at
+    1/N of its eq.-11 full-band rate. The round stalls until the slowest
+    client has uploaded its departing layers and received the arriving
+    ones (sequential phases — a client cannot run the new client-side
+    model until both finish).
+    """
+    if up_bits <= 0 and down_bits <= 0:
+        return 0.0
+    g = np.asarray(gains, np.float64)
+    N = g.shape[-1]
+    bw = np.full(N, comm.total_bandwidth / N)
+    t_up = 0.0
+    if up_bits > 0:
+        r_up = uplink_rate(bw, comm.client_power, g, comm)
+        t_up = float(np.max(up_bits / np.maximum(r_up, 1e-9)))
+    t_dn = 0.0
+    if down_bits > 0:
+        r_dn = downlink_rate(g, comm) / N  # equal share of N unicasts
+        t_dn = float(np.max(down_bits / np.maximum(r_dn, 1e-9)))
+    return t_up + t_dn

@@ -86,6 +86,29 @@ def round_traffic_bits(scheme: str, *, n_clients: int, tau: int = 1,
             "total_bits": int(up + down)}
 
 
+def migration_bits(phi_old: int, phi_new: int, *, n_clients: int,
+                   raw_bits_per_elem: float = 32.0) -> Dict[str, int]:
+    """Wire cost of moving the cut from φ(v_old) to φ(v_new) parameters.
+
+    Dynamic splitting (Algorithm 1 executed against live training) is not
+    free: when the cut moves client-ward (φ grows) the server ships the
+    boundary layers' parameters DOWN to every client (each client needs
+    its own copy — per-client replicas are identical after an eq.-7
+    aggregation round, but the unicast still happens N times); when the
+    cut moves server-ward (φ shrinks) every client UPLOADS its own —
+    possibly drifted — copy of the departing layers. φ values are
+    parameter counts (``models.cnn.phi`` / ``core.split.client_param_numel``);
+    parameters ride the wire at ``raw_bits_per_elem`` (model payloads are
+    never codec-compressed, matching the model-sync rows above).
+    """
+    delta = int(phi_new) - int(phi_old)
+    if delta == 0:
+        return {"up_bits": 0, "down_bits": 0, "total_bits": 0}
+    payload = int(math.ceil(abs(delta) * raw_bits_per_elem)) * n_clients
+    up, down = (payload, 0) if delta < 0 else (0, payload)
+    return {"up_bits": up, "down_bits": down, "total_bits": up + down}
+
+
 def round_traffic_bytes(scheme: str, **kw) -> Dict[str, int]:
     """Byte view of ``round_traffic_bits`` (ceil per direction; exact for
     whole-byte wire formats, which every shipped codec has)."""

@@ -1,0 +1,361 @@
+"""Dynamic-cut migration + closed-loop driver (DESIGN.md §12).
+
+Pins the tentpole contracts:
+
+* ``FedSimulator.set_cut`` is a lossless re-partition (bit-identical
+  params after v→v'→v) whose returned traffic matches the φ-deltas and
+  is zero for a no-op;
+* a constant ``CutSchedule`` through ``run_closed_loop`` reproduces the
+  plain fixed-cut ``FedSimulator`` run bit for bit;
+* the LLM re-split (``resplit_lm_params``) round-trips losslessly from
+  equal client copies, in both directions and across heterogeneous
+  (scan-grouped) stacks;
+* migration traffic/latency pricing and the τ-distinct-batch contract.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.paper_cnn import LIGHT_CONFIG  # noqa: E402
+from repro.core.simulator import FedSimulator, SimConfig  # noqa: E402
+from repro.data.federated import (iid_partition, rho_weights,  # noqa: E402
+                                  round_batches)
+from repro.data.synthetic import make_image_dataset  # noqa: E402
+from repro.models import cnn  # noqa: E402
+from repro.sysmodel.traffic import migration_bits  # noqa: E402
+
+N_CLIENTS, BATCH = 4, 8
+
+
+def _sim(scheme="sfl_ga", cut=2, tau=1, seed=0):
+    return FedSimulator(LIGHT_CONFIG,
+                        SimConfig(scheme=scheme, cut=cut,
+                                  n_clients=N_CLIENTS, batch=BATCH, tau=tau),
+                        seed=seed)
+
+
+def _round_data(tau=1, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.rand(N_CLIENTS, tau, BATCH, 28, 28, 1).astype(np.float32)
+    y = rng.randint(0, 10, (N_CLIENTS, tau, BATCH))
+    return x, y
+
+
+class TestSetCut:
+    def test_roundtrip_bit_identical(self):
+        sim = _sim(cut=2)
+        sim.run_round(*_round_data())  # start from a trained (drifted) state
+        before = jax.tree.map(np.asarray, sim.state)
+        for v in (3, 1, 4, 2):
+            sim.set_cut(v)
+        after = jax.tree.map(np.asarray, sim.state)
+        assert sim.cut == 2
+        for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_noop_is_free(self):
+        sim = _sim(cut=2)
+        bits = sim.set_cut(2)
+        assert bits == {"up_bits": 0, "down_bits": 0, "total_bits": 0}
+
+    def test_migration_bits_match_phi_deltas(self):
+        sim = _sim(cut=2)
+        be8 = sim.sim.bytes_per_elem * 8
+        for v in (3, 4, 1, 2):
+            old = sim.cut
+            bits = sim.set_cut(v)
+            delta = cnn.phi(LIGHT_CONFIG, v) - cnn.phi(LIGHT_CONFIG, old)
+            expect = abs(delta) * be8 * N_CLIENTS
+            assert bits["total_bits"] == expect
+            # client-ward growth is a download, shrinkage an upload
+            if delta > 0:
+                assert bits["down_bits"] == expect and bits["up_bits"] == 0
+            elif delta < 0:
+                assert bits["up_bits"] == expect and bits["down_bits"] == 0
+
+    def test_training_continues_after_migration(self):
+        sim = _sim(cut=2)
+        m1 = sim.run_round(*_round_data())
+        sim.set_cut(3)
+        m2 = sim.run_round(*_round_data(seed=1))
+        assert np.isfinite(m2["loss"])
+        # traffic accounting follows the CURRENT cut
+        assert m2["bits_up"] != m1["bits_up"]
+
+    def test_fl_rejects_set_cut(self):
+        sim = _sim(scheme="fl", cut=1)
+        with pytest.raises(ValueError):
+            sim.set_cut(2)
+
+    def test_out_of_range_rejected(self):
+        sim = _sim(cut=2)
+        with pytest.raises(ValueError):
+            sim.set_cut(LIGHT_CONFIG.num_layers)
+
+
+class TestMigrationPricing:
+    def test_zero_when_equal(self):
+        assert migration_bits(100, 100, n_clients=5)["total_bits"] == 0
+
+    def test_direction_and_scale(self):
+        up = migration_bits(300, 100, n_clients=3, raw_bits_per_elem=32)
+        assert up["up_bits"] == 200 * 32 * 3 and up["down_bits"] == 0
+        dn = migration_bits(100, 300, n_clients=3, raw_bits_per_elem=32)
+        assert dn["down_bits"] == 200 * 32 * 3 and dn["up_bits"] == 0
+
+    def test_migration_latency(self):
+        from repro.sysmodel.comm import CommParams
+        from repro.sysmodel.latency import migration_latency
+
+        gains = np.asarray([1e-9, 2e-9, 5e-10])
+        comm = CommParams()
+        assert migration_latency(0, 0, gains, comm) == 0.0
+        t1 = migration_latency(1e6, 0, gains, comm)
+        t2 = migration_latency(2e6, 0, gains, comm)
+        assert 0 < t1 < t2
+        both = migration_latency(1e6, 1e6, gains, comm)
+        assert both > t1  # sequential upload + download phases
+
+
+class TestClosedLoop:
+    def _setup(self):
+        ds = make_image_dataset("mnist", n=400, seed=0)
+        train, test = ds.split(0.9)
+        parts = iid_partition(len(train.x), N_CLIENTS, seed=0)
+        return train, test, parts, rho_weights(parts)
+
+    def test_constant_schedule_bit_identical_to_fixed(self):
+        from repro.ccc.env import CuttingPointEnv, cnn_env_config
+        from repro.core.closed_loop import CutSchedule, run_closed_loop
+
+        train, test, parts, rho = self._setup()
+        rounds = 4
+        ref = FedSimulator(LIGHT_CONFIG,
+                           SimConfig(scheme="sfl_ga", cut=2,
+                                     n_clients=N_CLIENTS, batch=BATCH),
+                           rho=rho, seed=0)
+        rng = np.random.RandomState(7)
+        for _ in range(rounds):
+            ref.run_round(*round_batches(train, parts, BATCH, 1, rng))
+
+        sim = FedSimulator(LIGHT_CONFIG,
+                           SimConfig(scheme="sfl_ga", cut=2,
+                                     n_clients=N_CLIENTS, batch=BATCH),
+                           rho=rho, seed=0)
+        env = CuttingPointEnv(cnn_env_config(n_clients=N_CLIENTS,
+                                             batch=BATCH, seed=0))
+        res = run_closed_loop(sim, env, CutSchedule.constant(2), train, test,
+                              parts, rounds=rounds, eval_every=2,
+                              batch_seed=7)
+        assert res.n_migrations == 0 and res.migration_bits_total == 0
+        assert sim._t == ref._t  # same codec seed schedule position
+        for a, b in zip(jax.tree.leaves(ref.state),
+                        jax.tree.leaves(sim.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_dynamic_schedule_migrates_and_prices(self):
+        from repro.ccc.env import CuttingPointEnv, cnn_env_config
+        from repro.core.closed_loop import CutSchedule, run_closed_loop
+
+        train, test, parts, rho = self._setup()
+        sim = FedSimulator(LIGHT_CONFIG,
+                           SimConfig(scheme="sfl_ga", cut=2,
+                                     n_clients=N_CLIENTS, batch=BATCH),
+                           rho=rho, seed=0)
+        env = CuttingPointEnv(cnn_env_config(n_clients=N_CLIENTS,
+                                             batch=BATCH, seed=0))
+        res = run_closed_loop(sim, env, CutSchedule.from_sequence([2, 3, 2]),
+                              train, test, parts, rounds=3, eval_every=3,
+                              batch_seed=0)
+        assert res.cuts == [2, 3, 2]
+        assert res.n_migrations == 2
+        be8 = sim.sim.bytes_per_elem * 8
+        delta = (cnn.phi(LIGHT_CONFIG, 3) - cnn.phi(LIGHT_CONFIG, 2)) \
+            * be8 * N_CLIENTS
+        assert res.migration_bits_total == 2 * delta
+        # migration traffic lands on the migrating rounds and is included
+        # in the round's reported bits (protocol + migration)
+        assert [r["migration_bits"] for r in res.records] == [0, delta, delta]
+        for rec in res.records:
+            assert rec["bits"] > rec["migration_bits"]  # protocol bits too
+        assert res.total_latency_s > 0 and np.isfinite(res.total_latency_s)
+        assert res.records[1]["migration_s"] > 0
+
+    def test_cut_schedule_semantics(self):
+        from repro.core.closed_loop import CutSchedule
+
+        s = CutSchedule.from_sequence([1, 2, 3])
+        assert [s(t) for t in range(5)] == [1, 2, 3, 1, 2]  # cycles
+        s2 = CutSchedule.from_sequence([1, 2, 3], cycle=False)
+        assert [s2(t) for t in range(5)] == [1, 2, 3, 3, 3]  # clamps
+        assert CutSchedule.constant(4)(123) == 4
+        with pytest.raises(ValueError):
+            CutSchedule()
+
+    def test_ccc_result_exports_schedule(self):
+        from repro.ccc.strategy import CCCResult
+
+        res = CCCResult([], [], [2, 3, 2], agent=None)
+        sched = res.cut_schedule()
+        assert [sched(t) for t in range(4)] == [2, 3, 2, 2]
+        res_joint = CCCResult([], [], [(2, "int8"), (1, "fp32")], agent=None)
+        assert [res_joint.cut_schedule()(t) for t in range(2)] == [2, 1]
+
+
+class TestLMResplit:
+    def _cfg(self, **kw):
+        from repro.configs import get_config, reduced_config
+
+        return reduced_config(get_config("granite-8b")).with_overrides(
+            num_layers=3, d_model=64, d_ff=128, vocab_size=256,
+            num_heads=2, num_kv_heads=1, head_dim=32, **kw)
+
+    def test_roundtrip_lossless_both_directions(self):
+        from repro.core import algorithms as alg
+        from repro.models import lm
+
+        cfg = self._cfg()
+        plans = {v: lm.build_plan(cfg, v) for v in (1, 2)}
+        params = alg.split_lm_params(
+            lm.init_lm(jax.random.key(0), plans[1], jnp.float32), 3)
+        # up then down (broadcast, then ρ-average of equal copies)
+        back = alg.resplit_lm_params(
+            alg.resplit_lm_params(params, plans[1], plans[2]),
+            plans[2], plans[1])
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # down then up from the wider split
+        params2 = alg.split_lm_params(
+            lm.init_lm(jax.random.key(1), plans[2], jnp.float32), 3)
+        back2 = alg.resplit_lm_params(
+            alg.resplit_lm_params(params2, plans[2], plans[1]),
+            plans[1], plans[2])
+        for a, b in zip(jax.tree.leaves(params2), jax.tree.leaves(back2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_global_model_invariant_under_resplit(self):
+        """Migrating the cut must not change the global (merged) model:
+        the same layers exist, just partitioned differently."""
+        from repro.core import algorithms as alg
+        from repro.models import lm
+
+        cfg = self._cfg()
+        p1, p2 = lm.build_plan(cfg, 1), lm.build_plan(cfg, 2)
+        split = alg.split_lm_params(
+            lm.init_lm(jax.random.key(0), p1, jnp.float32), 2)
+        moved = alg.resplit_lm_params(split, p1, p2)
+        # flatten each side back to a per-layer list and compare the full
+        # layer stack (client layers then server layers) across cuts
+        def layer_stack(s, plan):
+            c = alg._ungroup_layers(s["client"]["groups"],
+                                    plan.client_groups, layer_axis=1)
+            c = [jax.tree.map(lambda x: x[0], l) for l in c]  # client 0
+            srv = alg._ungroup_layers(s["server"]["groups"],
+                                      plan.server_groups, layer_axis=0)
+            return c + srv
+
+        for la, lb in zip(layer_stack(split, p1), layer_stack(moved, p2)):
+            for x, y in zip(jax.tree.leaves(la), jax.tree.leaves(lb)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_opt_state_resplit(self):
+        from repro.core import algorithms as alg
+        from repro.models import lm
+        from repro.optim import make_optimizer
+
+        cfg = self._cfg()
+        p1, p2 = lm.build_plan(cfg, 1), lm.build_plan(cfg, 2)
+        params = alg.split_lm_params(
+            lm.init_lm(jax.random.key(0), p1, jnp.float32), 2)
+        opt = make_optimizer("adamw", 1e-3)
+        st = opt.init(params)
+        st2 = alg.resplit_opt_state(st, p1, p2)
+        assert int(st2["count"]) == int(st["count"])
+        # moments now have the cut-2 params structure
+        params2 = alg.resplit_lm_params(params, p1, p2)
+        assert jax.tree.structure(st2["m"]) == jax.tree.structure(params2)
+
+
+class TestTauBatches:
+    def test_tau_slices_are_distinct(self):
+        """Regression: τ>1 must draw τ DIFFERENT mini-batches per client
+        (the launcher used to tile one batch τ times)."""
+        ds = make_image_dataset("mnist", n=400, seed=0)
+        parts = iid_partition(len(ds.x), N_CLIENTS, seed=0)
+        x, y = round_batches(ds, parts, BATCH, 3, np.random.RandomState(0))
+        assert x.shape[:3] == (N_CLIENTS, 3, BATCH)
+        for a in range(3):
+            for b in range(a + 1, 3):
+                assert not np.array_equal(x[:, a], x[:, b])
+
+    def test_tau1_matches_client_batches(self):
+        from repro.data.federated import client_batches
+
+        ds = make_image_dataset("mnist", n=400, seed=0)
+        parts = iid_partition(len(ds.x), N_CLIENTS, seed=0)
+        x1, y1 = client_batches(ds, parts, BATCH, np.random.RandomState(3))
+        x2, y2 = round_batches(ds, parts, BATCH, 1, np.random.RandomState(3))
+        np.testing.assert_array_equal(x1, x2[:, 0])
+        np.testing.assert_array_equal(y1, y2[:, 0])
+
+
+class TestBaselinePenaltyParity:
+    """fig6 baselines must pay the SAME eq.-35 penalty the DDQN reward
+    pays on privacy violation / infeasibility — not raw χ+ψ."""
+
+    def _env(self, epsilon):
+        from repro.ccc.env import CuttingPointEnv, cnn_env_config
+
+        return CuttingPointEnv(cnn_env_config(
+            n_clients=4, batch=8, horizon=3, epsilon=epsilon, seed=0))
+
+    def test_privacy_violation_pays_penalty(self):
+        from repro.ccc.strategy import (fixed_alloc_policy_cost,
+                                        fixed_cut_policy_cost)
+        from repro.sysmodel.privacy import privacy_ok
+
+        env = self._env(epsilon=0.05)  # strict: shallow cuts violate
+        cfg = env.cfg
+        v_bad = 1
+        assert not privacy_ok(cfg.phis[v_bad - 1], cfg.total_params,
+                              cfg.epsilon)
+        rounds = 3
+        r = fixed_cut_policy_cost(self._env(0.05), v_bad, rounds=rounds)
+        assert r["cost"] == pytest.approx(rounds * cfg.penalty)
+        r2 = fixed_alloc_policy_cost(self._env(0.05), v_bad, rounds=rounds)
+        assert r2["cost"] == pytest.approx(rounds * cfg.penalty)
+
+    def test_feasible_cut_unchanged(self):
+        """The penalty path must not perturb the feasible case: baseline
+        cost equals the sum of per-round env rewards for the same cut."""
+        from repro.ccc.strategy import fixed_cut_policy_cost
+
+        env = self._env(epsilon=0.001)
+        v = 2
+        env2 = self._env(epsilon=0.001)
+        total = 0.0
+        env2.reset()
+        for _ in range(3):
+            _, r, _, _ = env2.step((v - 1) * env2.n_codecs)
+            total += -r
+        got = fixed_cut_policy_cost(env, v, rounds=3)
+        assert got["cost"] == pytest.approx(total)
+
+    def test_random_cut_penalty_matches_env(self):
+        from repro.ccc.strategy import random_cut_policy_cost
+
+        env = self._env(epsilon=0.05)
+        cfg = env.cfg
+        got = random_cut_policy_cost(env, rounds=4, seed=0)
+        # replay the same action stream through the env reward rules
+        env2 = self._env(epsilon=0.05)
+        rng = np.random.RandomState(0)
+        env2.reset()
+        total = 0.0
+        for _ in range(4):
+            a = int(rng.randint(env2.n_actions))
+            _, r, _, _ = env2.step(a)
+            total += -r
+        assert got["cost"] == pytest.approx(total)
