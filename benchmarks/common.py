@@ -31,9 +31,12 @@ def fed_setup(dataset: str = "mnist", n: int = 2400, n_clients: int = 10,
 def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
                n_clients: int = 10, batch: int = 16, tau: int = 1,
                lr: float = 0.05, eval_every: int = 20, seed: int = 0,
-               uplink_codec: str = "fp32",
-               downlink_codec: str = "fp32") -> Dict:
-    """Train one scheme; returns accuracy curve + comm accounting."""
+               uplink_codec: str = "fp32", downlink_codec: str = "fp32",
+               cohort: Optional[int] = None,
+               sampler: str = "uniform") -> Dict:
+    """Train one scheme; returns accuracy curve + comm accounting.
+    ``cohort``/``sampler`` opt into partial participation (K of
+    n_clients per round, DESIGN.md §13); default is everyone."""
     from repro.configs.paper_cnn import LIGHT_CONFIG
     from repro.core.simulator import FedSimulator, SimConfig
     from repro.data.federated import round_batches
@@ -43,12 +46,16 @@ def run_scheme(scheme: str, cut: int, rounds: int, dataset: str = "mnist",
                        SimConfig(scheme=scheme, cut=cut, n_clients=n_clients,
                                  batch=batch, tau=tau, lr=lr,
                                  uplink_codec=uplink_codec,
-                                 downlink_codec=downlink_codec),
+                                 downlink_codec=downlink_codec,
+                                 cohort=cohort,
+                                 sampler=sampler if cohort else "full",
+                                 cohort_seed=seed),
                        rho=rho, seed=seed)
     rng = np.random.RandomState(seed)
     accs, rounds_axis, losses, drifts = [], [], [], []
     for r in range(rounds):
-        xs, ys = round_batches(train, parts, batch, tau, rng)
+        idx, _ = sim.cohort_for_round(sim._t)
+        xs, ys = round_batches(train, parts, batch, tau, rng, idx=idx)
         m = sim.run_round(xs, ys)
         losses.append(m["loss"])
         drifts.append(m["client_drift"])

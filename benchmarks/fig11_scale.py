@@ -1,0 +1,133 @@
+"""Fig. 11 (extension) — scaling past N=10: round cost vs bank size.
+
+The cohort engine (DESIGN.md §13) keeps ONE aggregated server model
+between rounds and trains a sampled cohort of K participants per round,
+so both server memory and round wall-clock should be INDEPENDENT of how
+many clients are registered in the bank. This benchmark sweeps
+N ∈ {10, 100, 1k, 10k} at fixed K and measures:
+
+* per-round wall-clock (post-jit; gather → vmapped round → scatter),
+  compared against the N=K full-participation baseline — the acceptance
+  bar is within 2× of it at N=10k on a 2-core CPU;
+* server-side state bytes — ONE copy, flat across the sweep (the
+  pre-cohort layout held N replicas, O(N));
+* client-bank bytes — the only O(N) state left, client-side params only;
+* the ``replacement_fraction`` stat surfaced by ``data.federated``:
+  at N=10k a 2k-sample dataset leaves every client < batch samples, the
+  exact silent-data-repetition condition the stat exists to expose.
+
+Run:  PYTHONPATH=src:. python benchmarks/fig11_scale.py [--fast]
+Fast mode (CI) sweeps {10, 256} at K=8 with 2 timed rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import warnings
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import FULL
+
+CUT = 1  # keep the O(N) bank small (conv1 only) — the sweep is about N
+BATCH = 16
+
+
+def _bytes(tree) -> int:
+    import jax
+
+    return sum(int(np.asarray(x).nbytes) for x in jax.tree.leaves(tree))
+
+
+def run_one(n_clients: int, cohort: int, rounds: int, n_samples: int,
+            seed: int = 0) -> Dict:
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.core.simulator import FedSimulator, SimConfig
+    from repro.data import iid_partition, make_image_dataset
+    from repro.data.federated import (replacement_fraction, rho_weights,
+                                      round_batches)
+
+    ds = make_image_dataset("mnist", n=n_samples, seed=seed)
+    parts = iid_partition(len(ds.x), n_clients, seed=seed)
+    full = cohort >= n_clients
+    sim = FedSimulator(
+        LIGHT_CONFIG,
+        SimConfig(scheme="sfl_ga", cut=CUT, n_clients=n_clients, batch=BATCH,
+                  cohort=None if full else cohort,
+                  sampler="full" if full else "uniform", cohort_seed=seed),
+        rho=rho_weights(parts), seed=seed)
+    rng = np.random.RandomState(seed)
+
+    def one_round():
+        idx, _ = sim.cohort_for_round(sim._t)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # replacement reported as a stat
+            xs, ys = round_batches(ds, parts, BATCH, 1, rng, idx=idx)
+        return sim.run_round(xs, ys)
+
+    one_round()  # jit warmup
+    times = []
+    loss = float("nan")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        m = one_round()
+        times.append(time.perf_counter() - t0)
+        loss = m["loss"]
+    return {
+        "n_clients": n_clients,
+        "cohort": sim.n_participants,
+        "round_ms": 1e3 * float(np.median(times)),
+        "server_bytes": _bytes(sim.state["server"]),
+        "bank_bytes": _bytes(sim.state["client"]),
+        "replacement_fraction": replacement_fraction(parts, BATCH),
+        "loss": loss,
+    }
+
+
+def run(fast: bool = None) -> List[Dict]:
+    fast = (not FULL) if fast is None else fast
+    if fast:
+        ns, k, rounds = [10, 256], 8, 2
+    else:
+        ns, k, rounds = [10, 100, 1000, 10000], 16, 3
+
+    def samples_for(n):  # every client needs >= 1 sample; 2/client at 10k
+        return max(2000, 2 * n)
+
+    rows = [run_one(k, k, rounds, samples_for(k))]  # N=K baseline
+    rows[0]["name"] = "baseline_N=K"
+    for n in ns:
+        r = run_one(n, k, rounds, samples_for(n))
+        r["name"] = f"N={n}"
+        rows.append(r)
+    base = rows[0]
+    for r in rows:
+        r["round_ms_vs_baseline"] = r["round_ms"] / base["round_ms"]
+        r["server_bytes_flat"] = r["server_bytes"] == base["server_bytes"]
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI sweep: N in {10, 256}, K=8, 2 timed rounds")
+    args = ap.parse_args(argv)
+    rows = run(fast=args.fast or None)
+    print("name,n_clients,cohort,round_ms,server_bytes,bank_bytes,"
+          "ratio_vs_baseline,replacement_fraction")
+    for r in rows:
+        print(f"{r['name']},{r['n_clients']},{r['cohort']},"
+              f"{r['round_ms']:.1f},{r['server_bytes']},{r['bank_bytes']},"
+              f"{r['round_ms_vs_baseline']:.2f},"
+              f"{r['replacement_fraction']:.2f}")
+    worst = max(r["round_ms_vs_baseline"] for r in rows[1:])
+    flat = all(r["server_bytes_flat"] for r in rows)
+    print(f"# server state one copy across the sweep: {flat}; "
+          f"worst round-time ratio vs N=K baseline: {worst:.2f}x "
+          f"(bar: <= 2x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -131,6 +131,18 @@ def bench_fig10():
                dyn["n_migrations"], dyn["migration_mb"]))
 
 
+def bench_fig11():
+    from benchmarks import fig11_scale as f
+
+    rows = f.run()
+    worst = max(r["round_ms_vs_baseline"] for r in rows[1:])
+    flat = all(r["server_bytes_flat"] for r in rows)
+    big = rows[-1]
+    return ("server_one_copy=%s worst_ratio=%.2fx N=%d round_ms=%.0f "
+            "server_kb=%d" % (flat, worst, big["n_clients"],
+                              big["round_ms"], big["server_bytes"] // 1024))
+
+
 def bench_kernels():
     from benchmarks import kernels_bench as f
 
@@ -149,6 +161,7 @@ BENCHES = [
     ("fig5_latency_schemes", bench_fig5),
     ("fig9_accuracy_vs_bits", bench_fig9),
     ("fig10_closed_loop", bench_fig10),
+    ("fig11_scale", bench_fig11),
 ]
 
 

@@ -47,13 +47,24 @@ class CuttingEnvConfig:
     # fp32 codec reduces exactly to the paper's action space.
     codecs: Tuple[str, ...] = ("fp32",)
     gamma_q: float = 100.0
+    # partial participation (DESIGN.md §13): per round only K ≤ N
+    # sampled clients train, so the P2.1 solve shares the bandwidth
+    # K-ways and the DDQN observes the K participants' gains (state_dim
+    # = K+1). None = everyone (the paper's setting).
+    cohort: Optional[int] = None
 
 
 class CuttingPointEnv:
     """Gym-like environment; channel redrawn per round (block fading).
 
     Action = cut index × codec index: ``a = (v-1) * n_codecs + c`` picks
-    cutting point v and transport codec cfg.codecs[c] jointly."""
+    cutting point v and transport codec cfg.codecs[c] jointly.
+
+    With ``cfg.cohort = K < n_clients`` the env draws a fresh uniform
+    cohort of K participants per round (or honors an externally supplied
+    one via :meth:`set_cohort` — how ``core.closed_loop`` aligns the MDP
+    with the simulator's cohort schedule); gains, the P2.1 allocation and
+    the observation then cover exactly those K clients."""
 
     def __init__(self, cfg: CuttingEnvConfig,
                  comm: Optional[CommParams] = None,
@@ -64,16 +75,40 @@ class CuttingPointEnv:
         self.rng = np.random.RandomState(cfg.seed)
         self.n_codecs = len(cfg.codecs)
         self.n_actions = len(cfg.phis) * self.n_codecs
-        self.state_dim = cfg.n_clients + 1
+        self.n_participants = cfg.cohort or cfg.n_clients
+        assert 1 <= self.n_participants <= cfg.n_clients
+        self.state_dim = self.n_participants + 1
         self._dists = None
+        self._cohort_idx = None  # external override (closed loop)
         self.reset()
 
     # --------------------------------------------------------------
+    def set_cohort(self, idx) -> None:
+        """Pin the participant set used for every subsequent gain draw
+        (``None`` reverts to the env's own uniform per-round sampling).
+        Call before ``reset``/``step`` so round t's channel state covers
+        the same K clients the training stack gathered."""
+        if idx is not None:
+            idx = np.asarray(idx, np.int64)
+            if idx.shape != (self.n_participants,):
+                raise ValueError(
+                    f"cohort index shape {idx.shape} != "
+                    f"({self.n_participants},)")
+        self._cohort_idx = idx
+
     def _draw_gains(self) -> np.ndarray:
         if self._dists is None:
             lo, hi = self.cfg.dist_km_range
             self._dists = self.rng.uniform(lo, hi, size=self.cfg.n_clients)
-        return path_loss_gain(self._dists, self.rng)
+        d = self._dists
+        if self._cohort_idx is not None:
+            d = d[self._cohort_idx]
+        elif self.n_participants < self.cfg.n_clients:
+            pick = np.sort(self.rng.choice(self.cfg.n_clients,
+                                           self.n_participants,
+                                           replace=False))
+            d = d[pick]
+        return path_loss_gain(d, self.rng)
 
     def _state(self) -> np.ndarray:
         # log-gain normalized to ~[-1,1]; cumulative cost normalized by horizon
@@ -171,7 +206,9 @@ class BatchedCuttingPointEnv:
         self.n_envs = n_envs
         self.n_codecs = len(cfg.codecs)
         self.n_actions = len(cfg.phis) * self.n_codecs
-        self.state_dim = cfg.n_clients + 1
+        self.n_participants = cfg.cohort or cfg.n_clients
+        assert 1 <= self.n_participants <= cfg.n_clients
+        self.state_dim = self.n_participants + 1
 
         # per-action lookup tables (action = (v-1) * n_codecs + c)
         xbits, gammas, fracs, priv = [], [], [], []
@@ -201,9 +238,18 @@ class BatchedCuttingPointEnv:
     # --------------------------------------------------------------
     def _draw_gains(self, key):
         import jax
+        import jax.numpy as jnp
 
-        ray = jax.random.exponential(key, self._det_gain.shape)  # |h|^2~Exp(1)
-        return self._det_gain * ray
+        det = self._det_gain
+        if self.n_participants < self.cfg.n_clients:
+            # fresh uniform cohort of K participants per env per round
+            k_pick, key = jax.random.split(key)
+            pick = jax.vmap(lambda k: jnp.sort(jax.random.permutation(
+                k, self.cfg.n_clients)[:self.n_participants]))(
+                jax.random.split(k_pick, self.n_envs))
+            det = jnp.take_along_axis(det, pick, axis=1)  # (B, K)
+        ray = jax.random.exponential(key, det.shape)  # |h|^2~Exp(1)
+        return det * ray
 
     def _obs(self, state: BatchedEnvState):
         import jax.numpy as jnp

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.gradagg import uniform_rho
-from repro.core.protocol import ProtocolEngine
+from repro.core.protocol import ProtocolEngine, aggregate_cohort
 from repro.models import lm as lm_mod
 from repro.models import transformer as tf
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -160,6 +160,58 @@ def resplit_opt_state(opt_state: Dict, old_plan: lm_mod.ModelPlan,
     return out
 
 
+def gather_cohort(tree: Dict, idx) -> Dict:
+    """Slice the client bank to the round's cohort rows (DESIGN.md §13).
+
+    ``tree`` is any params-shaped {client, server} dict — the params
+    themselves or one optimizer moment. The server side is shared (O(1)
+    in N) and passes through; client leaves lose their (N,) bank axis
+    for a (K,) cohort axis, ready for the jitted train step."""
+    jidx = jnp.asarray(idx)
+    return dict(tree, client=jax.tree.map(lambda x: x[jidx], tree["client"]))
+
+
+def scatter_cohort(bank: Dict, cohort: Dict, idx,
+                   broadcast_client: bool = False) -> Dict:
+    """Fold a trained cohort back into the bank: the shared server side
+    replaces wholesale; client rows scatter to their bank slots
+    (duplicate indices — the ρ sampler's with-replacement draws —
+    resolve arbitrarily, each being an independent local update of the
+    same client). ``broadcast_client=True`` writes cohort row 0 to EVERY
+    bank row — the client-aggregating schemes (sfl), whose train step
+    already made all cohort rows the new global client model."""
+    if broadcast_client:
+        client = jax.tree.map(
+            lambda b, u: jnp.broadcast_to(u[0][None], b.shape).astype(b.dtype),
+            bank["client"], cohort["client"])
+    else:
+        jidx = jnp.asarray(idx)
+        client = jax.tree.map(lambda b, u: b.at[jidx].set(u),
+                              bank["client"], cohort["client"])
+    return dict(bank, client=client, server=cohort["server"])
+
+
+def gather_cohort_opt(opt_state: Dict, idx) -> Dict:
+    """Cohort slice of the optimizer state: params-shaped moments (adamw
+    m/v, momentum mu) gather like params; scalars (count) pass through."""
+    out = dict(opt_state)
+    for k in ("m", "v", "mu"):
+        if k in out:
+            out[k] = gather_cohort(out[k], idx)
+    return out
+
+
+def scatter_cohort_opt(bank_opt: Dict, cohort_opt: Dict, idx) -> Dict:
+    """Inverse of ``gather_cohort_opt``. Moments always scatter per-row
+    (each client keeps its OWN moment history even under sfl's parameter
+    aggregation); scalars (count) come from the cohort run."""
+    out = dict(cohort_opt)
+    for k in ("m", "v", "mu"):
+        if k in out:
+            out[k] = scatter_cohort(bank_opt[k], cohort_opt[k], idx)
+    return out
+
+
 def merge_lm_params(split: Dict, rho: Optional[jnp.ndarray] = None) -> Dict:
     """Global eval/serve model: ρ-weighted mean of client copies + server."""
     n = jax.tree.leaves(split["client"])[0].shape[0]
@@ -205,7 +257,10 @@ def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
     impl = "jnp"
     engine = _engine_for(tcfg) if engine is None else engine
 
-    def loss_fn(params, batch, seed=0):
+    def loss_fn(params, batch, seed=0, rho_w=None):
+        # rho_w: cohort aggregation weights replacing the full-bank ρ
+        # over the K gathered participants (None = full participation)
+        r = rho if rho_w is None else rho_w
         tokens = batch["tokens"]  # (N, b, S) int32 — or embeds (N, b, S, d)
         labels = batch["labels"]  # (N, b, S)
         n = tokens.shape[0]
@@ -222,7 +277,7 @@ def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
             )(params["client"], tokens)
         # the scheme's cut-layer transport: lossy uplink forward; eq.-5
         # aggregate-broadcast (sfl_ga) or per-client unicast backward
-        smashed = engine.boundary(smashed, rho, seed)
+        smashed = engine.boundary(smashed, r, seed)
         nb, b, S, d = smashed.shape
         logits, aux_s = _server_forward(params["server"], plan,
                                         smashed.reshape(nb * b, S, d),
@@ -242,18 +297,26 @@ def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
     loss_fn = make_loss_fn(plan, tcfg, rho, engine=engine)
     tau = tcfg.resolved_tau
 
-    def local_step(params, opt_state, batch, seed):
+    def local_step(params, opt_state, batch, seed, w):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch, seed)
+            params, batch, seed, w)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = apply_updates(params, updates)
         return params, opt_state, dict(metrics, loss=loss)
 
     def train_step(params, opt_state, batch):
         seed = batch.get("seed", 0)
+        # cohort weights over the gathered participants (DESIGN.md §13);
+        # absent = full participation, bit-identical to the pre-cohort step
+        w = batch.get("rho")
+        # anchor for the partial-cohort aggregate: the model every
+        # participant STARTED from (rows are identical — the previous
+        # round broadcast the aggregate into the bank), so row 0
+        client0 = jax.tree.map(lambda x: x[0], params["client"]) \
+            if (w is not None and engine.spec.client_aggregate) else None
         if tau == 1:
             params, opt_state, metrics = local_step(params, opt_state,
-                                                    batch, seed)
+                                                    batch, seed, w)
         else:
             # τ local steps: tokens/labels carry a local-epoch axis
             # (N, τ, b, S[, d]); scan over it with per-epoch codec seeds.
@@ -268,7 +331,7 @@ def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
             def body(carry, sl):
                 p, s = carry
                 t, l, sd = sl
-                p, s, m = local_step(p, s, {"tokens": t, "labels": l}, sd)
+                p, s, m = local_step(p, s, {"tokens": t, "labels": l}, sd, w)
                 return (p, s), m
 
             (params, opt_state), ms = jax.lax.scan(
@@ -277,8 +340,18 @@ def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
         if engine.spec.client_aggregate:
             # traditional SFL: aggregate client-side models every round —
             # the φ(v)-byte collective SFL-GA eliminates.
-            params = dict(params,
-                          client=engine.aggregate(params["client"], rho))
+            if w is None:
+                client = engine.aggregate(params["client"], rho)
+            else:
+                # partial cohort: unbiased anchored-delta aggregate
+                # (weights need not sum to 1), broadcast back over the
+                # cohort axis for the launcher's bank scatter
+                agg = aggregate_cohort(params["client"], w, anchor=client0)
+                client = jax.tree.map(
+                    lambda a, like: jnp.broadcast_to(
+                        a[None], like.shape).astype(like.dtype),
+                    agg, params["client"])
+            params = dict(params, client=client)
         return params, opt_state, metrics
 
     return train_step
@@ -319,7 +392,10 @@ def comm_bytes_per_round(cfg: ModelConfig, plan: lm_mod.ModelPlan, algo: str,
                          downlink_codec: str = "fp32") -> Dict[str, int]:
     """Edge-protocol traffic accounting (who sends what over the WAN).
 
-    Thin adapter over the unified ``sysmodel.traffic`` accounting: this
+    ``n_clients`` is the round's PARTICIPANT count — under partial
+    participation pass the cohort size K (idle bank entries send
+    nothing). Thin adapter over the unified ``sysmodel.traffic``
+    accounting: this
     function only supplies the LLM's element counts — X(v) smashed-data
     elements per client per epoch, φ(v) client-model bytes. Codecs price
     the cut-layer payloads; labels and model sync stay at the raw

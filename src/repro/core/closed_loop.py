@@ -142,12 +142,28 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
     instead (nature does not halt — the round just runs unoptimized).
     ``skip_batches`` fast-forwards the data stream past rounds a resumed
     simulator already trained on (pass the restored ``sim._t``).
+
+    The simulator's COHORT schedule is threaded through everything: per
+    round the sampler's K participants get the data draws (O(K), not
+    O(N)), the env's channel state (``set_cohort`` — so the DDQN
+    observation and the P2.1 bandwidth split cover exactly the clients
+    that train), and the migration pricing. Full participation (the
+    default identity cohort) reproduces pre-cohort runs bit for bit.
     """
     assert env.n_codecs == 1, "closed loop prices the cut-only action space"
+    assert env.n_participants == sim.n_participants, \
+        (f"env prices {env.n_participants} participants but the simulator "
+         f"samples {sim.n_participants}")
     assert alloc in ("opt", "fixed")
     rng = np.random.RandomState(batch_seed)
-    for _ in range(skip_batches):
-        round_batches(train, parts, sim.sim.batch, sim.sim.tau, rng)
+    t0 = sim._t - skip_batches  # first round the data stream covers
+    for i in range(skip_batches):
+        idx, _ = sim.cohort_for_round(t0 + i)
+        round_batches(train, parts, sim.sim.batch, sim.sim.tau, rng, idx=idx)
+    threaded = sim.n_participants < sim.sim.n_clients
+    idx, _w = sim.cohort_for_round(sim._t)
+    if threaded:
+        env.set_cohort(idx)
     obs = env.reset()
     t_wall = 0.0
     total_bits = 0.0
@@ -165,11 +181,15 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
             from repro.sysmodel.latency import migration_latency
 
             n_migrations += 1
-            N = sim.sim.n_clients
-            mig_lat = migration_latency(mig["up_bits"] / N,
-                                        mig["down_bits"] / N,
+            K = sim.n_participants  # migration bits are already ×K
+            mig_lat = migration_latency(mig["up_bits"] / K,
+                                        mig["down_bits"] / K,
                                         env.gains, env.comm)
         fixed_lat = _fixed_alloc_latency(env, v)
+        # the NEXT round's cohort owns the gains env.step draws at the end
+        nxt_idx, _ = sim.cohort_for_round(sim._t + 1)
+        if threaded:
+            env.set_cohort(nxt_idx)
         # advance the MDP with the executed action: P2.1 reward inside,
         # block-fading redraw, observation for the next policy query
         obs, _r, done, info = env.step((v - 1) * env.n_codecs)
@@ -183,7 +203,8 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
         if done:
             obs = env.reset()  # episode boundary: fresh fading, policy continues
         m = sim.run_round(*round_batches(train, parts, sim.sim.batch,
-                                         sim.sim.tau, rng))
+                                         sim.sim.tau, rng, idx=idx))
+        idx = nxt_idx
         round_bits = m["bits_up"] + m["bits_down"] + mig["total_bits"]
         t_wall += mig_lat + lat
         total_bits += round_bits

@@ -42,6 +42,53 @@ def round_seed(base_seed: int, t: int) -> np.uint32:
                      & 0xFFFFFFFF)
 
 
+def rho_cohort(rho, idx, inclusion_prob):
+    """Unbiased ρ re-weighting over a sampled cohort (Horvitz-Thompson).
+
+    ``w_n = ρ_n / π_n`` for the participants ``idx``, where ``π_n`` is
+    each client's inclusion probability (K/N for uniform sampling without
+    replacement): E[Σ_{n∈C} w_n x_n] = Σ_n ρ_n x_n, the full-participation
+    aggregate. With the identity cohort π=1 and the division is an exact
+    no-op, so K=N reduces bit-for-bit to ρ itself. Cohort weights need
+    NOT sum to 1 per round — model aggregation must then anchor
+    (``aggregate_cohort``)."""
+    rho = np.asarray(rho)
+    return (rho[np.asarray(idx)] / inclusion_prob).astype(np.float32)
+
+
+def aggregate_cohort(tree, w, anchor=None):
+    """ρ-weighted reduction over the leading cohort axis to ONE copy —
+    the O(1)-state form of eq. 7 (the server never needs the K replicas
+    past the round boundary). Leaves lose their leading (K,) axis.
+
+    Without ``anchor``: plain Σ_k w_k x_k — the same reduction as
+    ``client_param_average`` rows, so full-participation cohorts (w = ρ)
+    reproduce pre-cohort aggregation bit for bit.
+
+    With ``anchor`` (the model every participant started the round
+    from): the anchored-delta form ``anchor + Σ_k w_k (x_k − anchor)``.
+    This is the unbiased partial-participation update: Horvitz-Thompson
+    weights don't sum to 1 per cohort, and scaling the MODEL by Σw would
+    be catastrophic — scaling the round's DELTAS by it is exactly the
+    estimator whose expectation is the full-participation aggregate.
+    """
+
+    def plain(p):
+        ww = jnp.asarray(w).reshape((-1,) + (1,) * (p.ndim - 1))
+        return jnp.sum(p.astype(jnp.float32) * ww, axis=0).astype(p.dtype)
+
+    if anchor is None:
+        return jax.tree.map(plain, tree)
+
+    def delta(p, a):
+        ww = jnp.asarray(w).reshape((-1,) + (1,) * (p.ndim - 1))
+        a32 = a.astype(jnp.float32)
+        upd = jnp.sum((p.astype(jnp.float32) - a32[None]) * ww, axis=0)
+        return (a32 + upd).astype(p.dtype)
+
+    return jax.tree.map(delta, tree, anchor)
+
+
 @dataclass(frozen=True)
 class SchemeSpec:
     """Who aggregates what, per round (the paper's §II + §V baselines)."""
@@ -157,12 +204,19 @@ class ProtocolEngine:
         """ρ-weighted mean over the leading client axis, broadcast back."""
         return client_param_average(tree, rho)
 
-    def finalize_round(self, client, server, rho):
-        """Apply the scheme's per-round aggregation rules to both sides."""
+    def finalize_cohort(self, client, server, w, client_anchor=None,
+                        server_anchor=None):
+        """Cohort form of the per-round aggregation rules: aggregating
+        sides come back as ONE copy (no leading axis — eq. 7 stores a
+        single server model between rounds); non-aggregating sides pass
+        through with their per-participant axis for the bank scatter.
+        Anchors (the pre-round models) select the unbiased anchored-delta
+        estimator for partial cohorts; ``None`` is the plain Σ w x
+        reduction, bit-identical to full participation."""
         if self.spec.server_aggregate:
-            server = self.aggregate(server, rho)
+            server = aggregate_cohort(server, w, server_anchor)
         if self.spec.client_aggregate:
-            client = self.aggregate(client, rho)
+            client = aggregate_cohort(client, w, client_anchor)
         return client, server
 
     # -- metrics ---------------------------------------------------------

@@ -1,24 +1,45 @@
 """Faithful CNN-scale federated simulator for the paper's experiments.
 
 Implements the literal SFL-GA protocol of §II-A/B, plus the three benchmark
-schemes (§V): traditional SFL [11], PSL, and FL. Clients are vectorized
-with vmap over the leading axis; per-round batches have shape
-(N, τ, B, ...). Everything inside ``round_fn`` is one jit-compiled step.
+schemes (§V): traditional SFL [11], PSL, and FL. Participants are
+vectorized with vmap over the leading axis; per-round batches have shape
+(K, τ, B, ...). Everything inside ``round_fn`` is one jit-compiled step.
+
+State layout (DESIGN.md §13 — the cohort engine). The server keeps ONE
+aggregated model between rounds: eq. 7 ρ-averages the per-client server
+replicas every round anyway, so storing N copies was pure waste — server
+memory and round cost are now independent of N. Client-side models live
+in a **bank**:
+
+* ``sfl_ga`` / ``psl`` — per-client stacks with a leading (N,) axis
+  (client models drift; that drift is the paper's Γ);
+* ``sfl`` / ``fl``   — ONE copy (client aggregation makes every bank
+  entry identical, so the bank collapses).
+
+Each round a :class:`repro.core.cohort.CohortSampler` picks K ≤ N
+participants; their client stacks are gathered, the server model is
+re-broadcast into the vmapped epoch body (the eq.-6 replicas exist only
+inside the round), cohort-reweighted aggregation (``protocol.rho_cohort``
+/ ``aggregate_cohort``) folds the results back, and updated client
+stacks scatter into the bank. With K=N and the identity cohort every
+gather/scatter is a no-op and rounds are bit-identical to full
+participation.
 
 Scheme semantics (who aggregates what, transport per direction, seed
 schedule, drift metric) come from ``repro.core.protocol.ProtocolEngine``
 — the same engine that drives the LLM train steps — and per-round
-traffic from ``repro.sysmodel.traffic``. The cut is DYNAMIC: ``set_cut``
-migrates boundary layers between the client and server stacks mid-run
-(per-cut jitted round functions, DESIGN.md §12); ``core.closed_loop``
-drives it from a DDQN cut schedule. See DESIGN.md §2 for the protocol
-table this simulator executes:
+traffic from ``repro.sysmodel.traffic`` (priced for the K participants).
+The cut is DYNAMIC: ``set_cut`` migrates boundary layers between the
+client bank and the server stack mid-run (per-cut jitted round
+functions, DESIGN.md §12); ``core.closed_loop`` drives it from a DDQN
+cut schedule. See DESIGN.md §2 for the protocol table this simulator
+executes:
 
 * SFL-GA: server backward produces per-client smashed-data gradients s^n;
-  the ρ-weighted aggregate s = Σ ρ^n s^n (eq. 5) is broadcast; every client
+  the weighted aggregate s = Σ w^n s^n (eq. 5) is broadcast; every client
   back-props the SAME cotangent through its OWN Jacobian (client models may
   drift — the drift is Γ(φ(v)) of Assumption 4 and is reported as a metric).
-  No client-side aggregation. Server-side models aggregated per round (eq. 7).
+  No client-side aggregation. Server side aggregated per round (eq. 7).
 * SFL: per-client cotangents; BOTH sides aggregated per round.
 * PSL: per-client cotangents; only server side aggregated (personalized
   client models).
@@ -35,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_cnn import CNNConfig
+from repro.core.cohort import make_sampler
 from repro.core.protocol import SCHEMES, ProtocolEngine
 from repro.models import cnn
 
@@ -56,6 +78,12 @@ class SimConfig:
     uplink_codec: str = "fp32"
     downlink_codec: str = "fp32"
     codec_seed: int = 0
+    # partial participation (core.cohort): K participants per round out
+    # of the N-client bank. None = everyone (the identity cohort, which
+    # with sampler='full' is bit-identical to pre-cohort runs).
+    cohort: Optional[int] = None
+    sampler: str = "full"  # full | uniform | rho | latency
+    cohort_seed: int = 0
 
 
 def _stack(tree, n):
@@ -76,36 +104,66 @@ class FedSimulator:
                                     base_seed=sim.codec_seed)
         self.up_codec = self.proto.uplink
         self.down_codec = self.proto.downlink
-        self._t = 0  # round counter (drives codec stochastic-round seeds)
+        self._t = 0  # round counter (drives codec + cohort seed schedules)
         self.rho = jnp.asarray(
             rho if rho is not None else np.full(sim.n_clients, 1.0 / sim.n_clients),
             jnp.float32)
+        self.n_participants = sim.cohort or sim.n_clients
+        self.sampler = make_sampler(sim.sampler, sim.n_clients,
+                                    self.n_participants,
+                                    rho=np.asarray(self.rho),
+                                    seed=sim.cohort_seed)
+        # drifting schemes keep an (N,)-stacked bank; aggregating ones
+        # collapse it to one copy (every entry is identical anyway)
+        spec = self.proto.spec
+        self._bank_stacked = spec.split and not spec.client_aggregate
         params = cnn.init_cnn(jax.random.key(seed), cnn_cfg)
         self.cut = sim.cut  # current cut; SimConfig.cut stays the initial one
         v = sim.cut
         if sim.scheme == "fl":
-            self.state = {"client": _stack(params, sim.n_clients), "server": []}
-        else:
-            self.state = {
-                "client": _stack(params[:v], sim.n_clients),
-                "server": _stack(params[v:], sim.n_clients),  # per-client replicas (eq. 6)
-            }
+            self.state = {"client": list(params), "server": []}
+        elif self._bank_stacked:
+            self.state = {"client": _stack(params[:v], sim.n_clients),
+                          "server": list(params[v:])}
+        else:  # sfl: single client copy + single server copy
+            self.state = {"client": list(params[:v]),
+                          "server": list(params[v:])}
         # per-cut jit cache: dynamic splitting re-enters here with a new
         # static v; a constant schedule only ever compiles one entry
         self._round_fns: Dict[int, callable] = {}
+        self._drift_fn = jax.jit(ProtocolEngine.client_drift)
+        self._eval_fn = None  # built lazily (jitted forward + argmax count)
+
+    # ------------------------------------------------------------------
+    def cohort_for_round(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        """The round-``t`` cohort ``(idx, weights)`` — pure in ``t``, so
+        launchers/closed loops can derive data and channel state for the
+        exact participants ``run_round`` will use (and resume replays)."""
+        return self.sampler.cohort(t)
 
     # ------------------------------------------------------------------
     def set_cut(self, v: int) -> Dict[str, int]:
         """Migrate the cut boundary to ``v`` (Algorithm 1 executed live).
 
-        Both sides hold per-client stacks of per-block params, so the
-        migration is a pure list re-partition — blocks keep their values
-        bit for bit (v→v'→v round-trips losslessly) and each client keeps
-        its OWN copy of layers crossing in either direction. Returns the
-        migration traffic (``sysmodel.traffic.migration_bits``): layers
-        moving client-ward are downloaded by every client, layers moving
-        server-ward are uploaded by every client; zero when v is unchanged.
-        """
+        Blocks crossing server→client are broadcast into the bank (each
+        client gets its own copy); blocks crossing client→server from a
+        drifting bank ρ-MERGE into the single server copy via the
+        anchored-delta mean — exact (v→v'→v lossless) whenever the bank
+        entries agree, and the eq.-7-style merge otherwise (the same
+        semantics as the LLM ``resplit_lm_params``; the global model is
+        preserved, per-client drift in the departing layers is folded).
+        For collapsed banks (sfl) the move is a pure list re-partition,
+        lossless in both directions. Returns the migration traffic
+        (``sysmodel.traffic.migration_bits``), priced for the K
+        PARTICIPANTS of a round; zero when v is unchanged. NOTE the
+        idealization under partial participation: the bank re-partition
+        is central simulator bookkeeping and touches all N entries (the
+        server-ward merge folds every client's drifted blocks), while
+        only the K participants' transfers are charged — the same
+        free-global-state idealization ``evaluate``'s bank-wide mean
+        makes. A deployment would sync stragglers on their next
+        participation; that deferred traffic is NOT modeled
+        (DESIGN.md §13)."""
         from repro.sysmodel.traffic import migration_bits
 
         if not self.proto.spec.split:
@@ -115,18 +173,38 @@ class FedSimulator:
         old = self.cut
         bits = migration_bits(
             cnn.phi(self.cfg, old), cnn.phi(self.cfg, v),
-            n_clients=self.sim.n_clients,
+            n_clients=self.n_participants,
             raw_bits_per_elem=self.sim.bytes_per_elem * 8)
         if v != old:
             client = list(self.state["client"])
             server = list(self.state["server"])
-            if v > old:  # boundary layers move client-ward
-                client, server = client + server[:v - old], server[v - old:]
-            else:        # boundary layers move server-ward
-                client, server = client[:v], client[v:] + server
+            if self._bank_stacked:
+                n = self.sim.n_clients
+                if v > old:  # boundary layers move client-ward: broadcast
+                    client = client + [_stack(b, n) for b in server[:v - old]]
+                    server = server[v - old:]
+                else:        # client-ward layers merge into the ONE server copy
+                    server = [self._merge_bank_block(b)
+                              for b in client[v:]] + server
+                    client = client[:v]
+            else:            # single-copy bank: pure list re-partition
+                if v > old:
+                    client, server = client + server[:v - old], server[v - old:]
+                else:
+                    client, server = client[:v], client[v:] + server
             self.state = {"client": client, "server": server}
             self.cut = v
         return bits
+
+    def _merge_bank_block(self, block):
+        """Anchored-delta ρ-average of one bank block (N, ...) → (...):
+        bit-exact pass-through when the N entries agree (so migration
+        round-trips are lossless from any aggregated state). The same
+        ``aggregate_cohort`` estimator the round finalization uses."""
+        from repro.core.protocol import aggregate_cohort
+
+        anchor = jax.tree.map(lambda p: p[0], block)
+        return aggregate_cohort(block, self.rho, anchor=anchor)
 
     def _round_fn(self, v: int):
         fn = self._round_fns.get(v)
@@ -135,18 +213,18 @@ class FedSimulator:
         return fn
 
     # ------------------------------------------------------------------
-    def _epoch_split(self, v, carry, batch):
+    def _epoch_split(self, v, w, carry, batch):
         """One local epoch of split training (any of sfl_ga / sfl / psl)."""
-        cfg, sim = self.cfg, self.sim
+        cfg = self.cfg
         cp, sp = carry
-        x, y, seed = batch  # (N,B,H,W,C), (N,B), uint32 scalar
+        x, y, seed = batch  # (K,B,H,W,C), (K,B), uint32 scalar
 
         def client_fwd(c, xb):
             return cnn.client_forward(c, xb, cfg, v)
 
-        smashed = jax.vmap(client_fwd)(cp, x)  # (N,B,...)
-        # uplink: each client ships an encoded X(v); the server trains
-        # against the reconstruction (quantization-aware protocol)
+        smashed = jax.vmap(client_fwd)(cp, x)  # (K,B,...)
+        # uplink: each participant ships an encoded X(v); the server
+        # trains against the reconstruction (quantization-aware protocol)
         smashed = self.proto.encode_uplink(smashed, seed)
 
         def srv_loss(s, sm, yb):
@@ -156,21 +234,21 @@ class FedSimulator:
             lambda s, sm, yb: jax.value_and_grad(srv_loss, argnums=(0, 1))(s, sm, yb)
         )(sp, smashed, y)
 
-        # eq. 5 for sfl_ga (ONE broadcast payload); per-client unicast
-        # cotangents for sfl / psl
-        s_ct = self.proto.downlink_cotangent(s_n, self.rho, seed)
+        # eq. 5 for sfl_ga (ONE broadcast payload) with the cohort's
+        # unbiased weights; per-client unicast cotangents for sfl / psl
+        s_ct = self.proto.downlink_cotangent(s_n, w, seed)
 
         def client_grad(c, xb, ct):
             _, vjp = jax.vjp(lambda cc: client_fwd(cc, xb), c)
             return vjp(ct)[0]
 
         gc_n = jax.vmap(client_grad)(cp, x, s_ct)
-        lr = sim.lr
+        lr = self.sim.lr
         cp = jax.tree.map(lambda p, g: p - lr * g, cp, gc_n)
         sp = jax.tree.map(lambda p, g: p - lr * g, sp, gs_n)
-        return (cp, sp), jnp.sum(loss_n * self.rho)
+        return (cp, sp), jnp.sum(loss_n * w)
 
-    def _epoch_fl(self, carry, batch):
+    def _epoch_fl(self, w, carry, batch):
         cfg, sim = self.cfg, self.sim
         cp, _ = carry
         x, y, _seed = batch  # no cut layer -> codecs do not apply
@@ -180,62 +258,129 @@ class FedSimulator:
 
         loss_n, g_n = jax.vmap(jax.value_and_grad(full_loss))(cp, x, y)
         cp = jax.tree.map(lambda p, g: p - sim.lr * g, cp, g_n)
-        return (cp, []), jnp.sum(loss_n * self.rho)
+        return (cp, []), jnp.sum(loss_n * w)
 
-    def _round(self, v, state, x, y, seed):
-        """x: (N, τ, B, H, W, C); y: (N, τ, B); seed: uint32 scalar."""
-        epoch = self._epoch_fl if not self.proto.spec.split \
-            else partial(self._epoch_split, v)
-        xs = jnp.moveaxis(x, 1, 0)  # (τ, N, B, ...)
+    def _round(self, v, state, x, y, seed, w):
+        """state: {"client": cohort stacks (K,...) for drifting banks or
+        the single copy, "server": single copy}; x: (K, τ, B, H, W, C);
+        y: (K, τ, B); seed: uint32 scalar; w: (K,) cohort weights."""
+        spec = self.proto.spec
+        K = x.shape[0]
+        anchored = self.sampler.anchored
+        if not spec.split:
+            cp0, sp0 = state["client"], []
+            cp, sp = _stack(cp0, K), []
+            epoch = partial(self._epoch_fl, w)
+        else:
+            cp0, sp0 = state["client"], state["server"]
+            # the eq.-6 per-participant server replicas exist only inside
+            # the round: re-broadcast the single aggregated server model
+            sp = _stack(sp0, K)
+            cp = _stack(cp0, K) if spec.client_aggregate else cp0
+            epoch = partial(self._epoch_split, v, w)
+        xs = jnp.moveaxis(x, 1, 0)  # (τ, K, B, ...)
         ys = jnp.moveaxis(y, 1, 0)
         seeds = self.proto.epoch_seeds(seed, xs.shape[0])
         (cp, sp), losses = jax.lax.scan(
-            lambda c, b: epoch(c, b), (state["client"], state["server"]),
-            (xs, ys, seeds))
+            lambda c, b: epoch(c, b), (cp, sp), (xs, ys, seeds))
 
-        cp, sp = self.proto.finalize_round(cp, sp, self.rho)
-        d = self.proto.client_drift(cp)
-        return {"client": cp, "server": sp}, losses.mean(), d
+        cp, sp = self.proto.finalize_cohort(
+            cp, sp, w,
+            client_anchor=cp0 if (anchored and spec.client_aggregate) else None,
+            server_anchor=sp0 if (anchored and spec.server_aggregate) else None)
+        return {"client": cp, "server": sp}, losses.mean()
 
     # ------------------------------------------------------------------
     def run_round(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
+        """One federated round over the round-``t`` cohort. ``x``/``y``
+        carry data for the K PARTICIPANTS (leading axis K, in
+        ``cohort_for_round(t)`` order), not the whole bank."""
+        idx, w = self.cohort_for_round(self._t)
+        K = self.n_participants
+        if x.shape[0] != K:
+            raise ValueError(
+                f"run_round: got data for {x.shape[0]} clients, round "
+                f"cohort has {K} participants (see cohort_for_round)")
         seed = self.proto.round_seed(self._t)
         self._t += 1
-        self.state, loss, drift = self._round_fn(self.cut)(self.state, x, y, seed)
+        bank = self.state["client"]
+        identity = self.sampler.identity
+        if self._bank_stacked and not identity:
+            jidx = jnp.asarray(idx)
+            client_in = jax.tree.map(lambda b: b[jidx], bank)
+        else:
+            client_in = bank
+        out, loss = self._round_fn(self.cut)(
+            {"client": client_in, "server": self.state["server"]},
+            x, y, seed, jnp.asarray(w))
+        if self._bank_stacked:
+            if identity:
+                new_bank = out["client"]
+            else:
+                # duplicate indices (rho sampler) resolve arbitrarily —
+                # each is an independent local update of the same client
+                jidx = jnp.asarray(idx)
+                new_bank = jax.tree.map(lambda b, u: b.at[jidx].set(u),
+                                        bank, out["client"])
+            self.state = {"client": new_bank, "server": out["server"]}
+            drift = float(self._drift_fn(new_bank))
+        else:
+            # collapsed bank: one copy — drift is zero by construction
+            self.state = out
+            drift = 0.0
         bits = self.comm_bits_per_round()
-        return {"loss": float(loss), "client_drift": float(drift),
+        return {"loss": float(loss), "client_drift": drift,
                 "bits_up": bits["up_bits"], "bits_down": bits["down_bits"]}
 
     def global_params(self):
-        """ρ-weighted mean model for evaluation."""
-        mean = jax.tree.map(lambda p: jnp.sum(
-            p * self.rho.reshape((-1,) + (1,) * (p.ndim - 1)), axis=0),
-            self.state)
-        return list(mean["client"]) + list(mean["server"])
+        """Global evaluation model: ρ-weighted mean over the full client
+        bank + the single aggregated server copy."""
+        client = self.state["client"]
+        if self._bank_stacked:
+            w = self.rho
+
+            def mean(p):
+                ww = w.reshape((-1,) + (1,) * (p.ndim - 1))
+                return jnp.sum(p * ww, axis=0)
+
+            client = [jax.tree.map(mean, b) for b in client]
+        return list(client) + list(self.state["server"])
 
     def evaluate(self, x: np.ndarray, y: np.ndarray, batch: int = 512) -> float:
+        """Accuracy of the global model. The forward pass + argmax count
+        runs as ONE cached jit per (treedef, batch-shape) — the eval
+        loops of fig3/fig10 used to re-dispatch every block eagerly per
+        batch."""
+        if self._eval_fn is None:
+            cfg = self.cfg
+
+            def _count(params, xb, yb):
+                logits = cnn.forward_blocks(params, xb, cfg, 0, cfg.num_layers)
+                return jnp.sum(jnp.argmax(logits, -1) == yb)
+
+            self._eval_fn = jax.jit(_count)
         params = self.global_params()
         correct = 0
         for i in range(0, len(x), batch):
-            logits = cnn.forward_blocks(params, jnp.asarray(x[i:i + batch]),
-                                        self.cfg, 0, self.cfg.num_layers)
-            correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i:i + batch])))
+            correct += int(self._eval_fn(params, jnp.asarray(x[i:i + batch]),
+                                         jnp.asarray(y[i:i + batch])))
         return correct / len(x)
 
     # ------------------------------------------------------------------
     def comm_bits_per_round(self) -> Dict[str, int]:
         """Thin adapter over the unified accounting (sysmodel.traffic):
-        this simulator only supplies the CNN's element counts. Downlink
-        broadcast counted once for SFL-GA (the point of the scheme);
-        codecs compress the smashed-data/gradient payloads; labels and
-        model-sync traffic stay fp32."""
+        this simulator only supplies the CNN's element counts, priced for
+        the K PARTICIPANTS of a round (idle bank entries send nothing).
+        Downlink broadcast counted once for SFL-GA (the point of the
+        scheme); codecs compress the smashed-data/gradient payloads;
+        labels and model-sync traffic stay fp32."""
         from repro.sysmodel.traffic import round_traffic_bits
 
         cfg, sim = self.cfg, self.sim
         be8 = sim.bytes_per_elem * 8
         split = self.proto.spec.split
         return round_traffic_bits(
-            sim.scheme, n_clients=sim.n_clients, tau=sim.tau,
+            sim.scheme, n_clients=self.n_participants, tau=sim.tau,
             smashed_elems=cnn.smashed_numel(cfg, self.cut) * sim.batch
             if split else 0,
             label_bits=sim.batch * 32,
@@ -248,30 +393,47 @@ class FedSimulator:
     def save(self, path: str, extra_meta: Optional[Dict] = None) -> None:
         """Checkpoint state + the round counter ``_t`` and current cut.
 
-        ``_t`` drives the codec stochastic-rounding seed schedule
-        (``ProtocolEngine.round_seed``); without it a resumed run would
-        replay round 0's seeds. The cut is needed so ``restore`` can
-        re-partition before loading (the treedef depends on it)."""
+        ``_t`` drives the codec stochastic-rounding seeds AND the cohort
+        schedule (both pure in ``(seed, t)``); without it a resumed run
+        would replay round 0. The cut is needed so ``restore`` can
+        re-partition before loading (the treedef depends on it); the
+        cohort fields guard against resuming under a different sampling
+        schedule than the one that produced the state."""
         from repro.checkpoint import save_checkpoint
 
         meta = {"t": self._t, "cut": self.cut, "scheme": self.sim.scheme,
-                "n_clients": self.sim.n_clients}
+                "n_clients": self.sim.n_clients,
+                "cohort": self.n_participants,
+                "sampler": self.sim.sampler,
+                "cohort_seed": self.sim.cohort_seed}
         if extra_meta:
             meta.update(extra_meta)
         save_checkpoint(path, self.state, meta)
 
     def restore(self, path: str) -> Dict:
         """Resume from ``save``: re-partition to the saved cut, load the
-        state, and restore the round counter (codec seed schedule)."""
+        state, and restore the round counter (codec seeds + cohort
+        schedule continue where the run stopped)."""
         from repro.checkpoint import load_checkpoint, load_checkpoint_meta
 
         meta = load_checkpoint_meta(path)
         if meta.get("scheme") != self.sim.scheme:
             raise ValueError(f"checkpoint scheme {meta.get('scheme')!r} != "
                              f"simulator scheme {self.sim.scheme!r}")
+        for key, got in (("cohort", self.n_participants),
+                         ("sampler", self.sim.sampler),
+                         ("cohort_seed", self.sim.cohort_seed)):
+            if key in meta and meta[key] != got:
+                raise ValueError(
+                    f"checkpoint {key} {meta[key]!r} != simulator {got!r}: "
+                    f"resuming would replay a different cohort schedule")
         if self.proto.spec.split and meta.get("cut") != self.cut:
             self.set_cut(int(meta["cut"]))
         self.state, meta = load_checkpoint(path, self.state)
+        # back onto the device: the bank scatter (`.at[idx].set`) and the
+        # jitted round functions want jax arrays, not the host copies
+        # load_checkpoint restores
+        self.state = jax.tree.map(jnp.asarray, self.state)
         self._t = int(meta["t"])
         return meta
 

@@ -1,12 +1,21 @@
 """Federated data partitioning: IID and Dirichlet non-IID splits.
 
 Returns per-client index arrays; ``client_batches`` builds the per-round
-mini-batch tensor (N, B, ...) consumed by the federated simulator, plus the
-paper's ρ^n = D^n / D aggregation weights (eq. 5).
+mini-batch tensor (K, B, ...) consumed by the federated simulator — for
+the whole bank, or (``idx=``) just the round's cohort of participants —
+plus the paper's ρ^n = D^n / D aggregation weights (eq. 5).
+
+Data-loss surfacing: partitions that cannot honor the request degrade
+LOUDLY. ``iid_partition(sizes=...)`` warns when it drops leftover
+samples; ``client_batches`` warns (once per call site) when a client's
+partition is smaller than the batch and sampling falls back to
+replacement — ``replacement_fraction`` exposes the same condition as a
+stat benchmarks/launchers can report.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import warnings
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -18,8 +27,22 @@ def iid_partition(n_samples: int, n_clients: int, seed: int = 0,
     rng = np.random.RandomState(seed)
     idx = rng.permutation(n_samples)
     if sizes is None:
+        if n_clients > n_samples:
+            warnings.warn(
+                f"iid_partition: {n_clients} clients > {n_samples} samples; "
+                f"{n_clients - n_samples} clients get EMPTY partitions",
+                stacklevel=2)
         return list(np.array_split(idx, n_clients))
-    assert sum(sizes) <= n_samples
+    assert len(sizes) == n_clients, \
+        f"sizes has {len(sizes)} entries for {n_clients} clients"
+    assert sum(sizes) <= n_samples, \
+        f"requested {sum(sizes)} samples, dataset has {n_samples}"
+    leftover = n_samples - sum(sizes)
+    if leftover:
+        warnings.warn(
+            f"iid_partition: sizes sum to {sum(sizes)} < {n_samples}; "
+            f"dropping {leftover} samples ({leftover / n_samples:.1%} of "
+            f"the dataset) that no client will ever see", stacklevel=2)
     out, start = [], 0
     for s in sizes:
         out.append(idx[start:start + s])
@@ -49,11 +72,45 @@ def rho_weights(parts: List[np.ndarray]) -> np.ndarray:
     return (d / d.sum()).astype(np.float32)
 
 
+def replacement_fraction(parts: List[np.ndarray], batch: int,
+                         idx: Optional[Sequence[int]] = None) -> float:
+    """Fraction of (participating) clients whose partition is smaller
+    than ``batch`` — i.e. whose draws sample WITH replacement and repeat
+    data within a mini-batch. 0.0 means every draw is replacement-free."""
+    sel = parts if idx is None else [parts[i] for i in idx]
+    if not sel:
+        return 0.0
+    return sum(len(p) < batch for p in sel) / len(sel)
+
+
 def client_batches(ds: SyntheticImageDataset, parts: List[np.ndarray],
-                   batch: int, rng: np.random.RandomState) -> Tuple[np.ndarray, np.ndarray]:
-    """One round's mini-batches: x (N, B, H, W, C), y (N, B)."""
+                   batch: int, rng: np.random.RandomState,
+                   idx: Optional[Sequence[int]] = None,
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """One round's mini-batches: x (K, B, H, W, C), y (K, B).
+
+    ``idx`` selects the participating clients (the round's cohort, in
+    sampler order); ``None`` draws for the whole bank — identical RNG
+    stream to the pre-cohort behaviour. Clients with fewer than ``batch``
+    samples fall back to sampling with replacement — loudly (a warning,
+    deduplicated per call site) instead of silently repeating data;
+    empty partitions are an error, not a crash deep inside numpy.
+    """
+    sel = parts if idx is None else [parts[i] for i in idx]
+    short = [i for i, p in enumerate(sel) if len(p) < batch]
+    if any(len(sel[i]) == 0 for i in short):
+        raise ValueError(
+            "client_batches: empty client partition(s) "
+            f"{[i for i in short if len(sel[i]) == 0]} — more clients than "
+            "samples? (see iid_partition warning)")
+    if short:
+        warnings.warn(
+            f"client_batches: {len(short)}/{len(sel)} participating "
+            f"clients have < {batch} samples; drawing WITH replacement "
+            f"(replacement_fraction={len(short) / len(sel):.2f})",
+            stacklevel=2)
     xs, ys = [], []
-    for p in parts:
+    for p in sel:
         take = rng.choice(p, size=batch, replace=len(p) < batch)
         xs.append(ds.x[take])
         ys.append(ds.y[take])
@@ -61,15 +118,20 @@ def client_batches(ds: SyntheticImageDataset, parts: List[np.ndarray],
 
 
 def round_batches(ds: SyntheticImageDataset, parts: List[np.ndarray],
-                  batch: int, tau: int,
-                  rng: np.random.RandomState) -> Tuple[np.ndarray, np.ndarray]:
-    """One round's τ local-epoch batches: x (N, τ, B, ...), y (N, τ, B).
+                  batch: int, tau: int, rng: np.random.RandomState,
+                  idx: Optional[Sequence[int]] = None,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """One round's τ local-epoch batches: x (K, τ, B, ...), y (K, τ, B).
 
     Each of the τ local epochs gets its OWN draw per client — repeating
     one mini-batch τ times is just τ× the step size with extra flops,
     not τ local epochs of SGD. τ=1 consumes exactly one ``client_batches``
-    draw, so existing single-epoch RNG streams are unchanged.
+    draw, so existing single-epoch RNG streams are unchanged. ``idx``
+    restricts the draws to the round's cohort (O(K) data movement per
+    round, not O(N) — fig11's point); resumed runs must fast-forward
+    with the SAME per-round cohorts to stay on the stream.
     """
-    draws = [client_batches(ds, parts, batch, rng) for _ in range(tau)]
+    draws = [client_batches(ds, parts, batch, rng, idx=idx)
+             for _ in range(tau)]
     return (np.stack([d[0] for d in draws], axis=1),
             np.stack([d[1] for d in draws], axis=1))

@@ -20,8 +20,18 @@ Algorithm 1 first and execute its policy against the live channel
 (core.closed_loop). Migration traffic (boundary layers moving between
 client and server) is priced by ``sysmodel.traffic.migration_bits``.
 
+``--cohort K --sampler S`` runs PARTIAL participation in either mode:
+each round/step samples K of ``--clients`` devices from the bank
+(core.cohort — uniform / ρ-weighted / latency-aware straggler-avoiding),
+trains just those, and folds the results back with unbiased cohort
+re-weighting. Server-side state is ONE copy regardless of N, so
+``--clients 10000 --cohort 16`` costs the same per round as N=16
+(benchmarks/fig11_scale.py).
+
 Examples:
   python -m repro.launch.train --arch granite-8b --preset 100m --steps 300
+  python -m repro.launch.train --arch paper-cnn --rounds 20 \
+      --clients 256 --cohort 8 --sampler uniform
   python -m repro.launch.train --arch granite-8b --preset smoke --steps 2 \
       --uplink-codec int8 --downlink-codec int8 --tau 2
   python -m repro.launch.train --arch granite-8b --preset smoke --layers 3 \
@@ -67,6 +77,15 @@ def train_lm(args) -> dict:
     from repro.sysmodel.traffic import migration_bits
 
     n, b, S, tau = args.clients, args.batch, args.seq, args.tau
+    K = args.cohort or n
+    sampler = None
+    if args.cohort:
+        from repro.core.cohort import make_sampler
+        from repro.core.protocol import scheme_spec
+
+        sampler = make_sampler(args.sampler, n, K, seed=args.seed)
+        spec = scheme_spec(args.scheme)
+        print(f"cohort: {K}/{n} clients per step ({args.sampler} sampler)")
     schedule = _parse_dynamic_cut(args, lm_mode=True)
     cut0 = schedule(0) if schedule else args.cut
     tcfg = TrainConfig(model=cfg, algo=args.scheme, cut_layer=cut0,
@@ -76,14 +95,16 @@ def train_lm(args) -> dict:
                        downlink_codec=args.downlink_codec, seed=args.seed)
     plans = {cut0: lm.build_plan(cfg, cut0)}
     cut = cut0
+    # the BANK holds all N per-client stacks; the jitted step only ever
+    # sees the K gathered participants (server side is shared, O(1) in N)
     params = alg.split_lm_params(
         lm.init_lm(jax.random.key(args.seed), plans[cut0], jnp.float32), n)
     opt = make_optimizer(args.optimizer, args.lr)
     opt_state = opt.init(params)
-    steps_by_cut = {cut0: jax.jit(alg.make_train_step(plans[cut0], tcfg, opt, n))}
+    steps_by_cut = {cut0: jax.jit(alg.make_train_step(plans[cut0], tcfg, opt, K))}
 
-    it = synthetic_token_batches(cfg.vocab_size, n * b * tau, S, seed=args.seed)
-    shape = (n, b, S) if tau == 1 else (n, tau, b, S)
+    it = synthetic_token_batches(cfg.vocab_size, K * b * tau, S, seed=args.seed)
+    shape = (K, b, S) if tau == 1 else (K, tau, b, S)
     losses = []
     mig_total_bits = 0
     n_migrations = 0
@@ -98,13 +119,15 @@ def train_lm(args) -> dict:
                 if v not in plans:
                     plans[v] = lm.build_plan(cfg, v)
                     steps_by_cut[v] = jax.jit(
-                        alg.make_train_step(plans[v], tcfg, opt, n))
+                        alg.make_train_step(plans[v], tcfg, opt, K))
+                # the whole BANK migrates (resplit is N-agnostic); wire
+                # cost is paid by the K participants of the step
                 params = alg.resplit_lm_params(params, plans[cut], plans[v])
                 opt_state = alg.resplit_opt_state(opt_state, plans[cut],
                                                   plans[v])
                 mb = migration_bits(client_param_numel(plans[cut]),
                                     client_param_numel(plans[v]),
-                                    n_clients=n, raw_bits_per_elem=32)
+                                    n_clients=K, raw_bits_per_elem=32)
                 mig_total_bits += mb["total_bits"]
                 n_migrations += 1
                 print(f"step {i}: cut {cut} -> {v} "
@@ -114,7 +137,20 @@ def train_lm(args) -> dict:
         batch = {"tokens": jnp.asarray(toks.reshape(shape)),
                  "labels": jnp.asarray(labels.reshape(shape)),
                  "seed": round_seed(args.seed, i)}
-        params, opt_state, m = steps_by_cut[cut](params, opt_state, batch)
+        if sampler is None:
+            params, opt_state, m = steps_by_cut[cut](params, opt_state, batch)
+        else:
+            # partial participation: gather the step-i cohort (params +
+            # optimizer moments), train with unbiased cohort weights,
+            # scatter back (sfl broadcasts its new global client model)
+            idx, w = sampler.cohort(i)
+            cp = alg.gather_cohort(params, idx)
+            cop = alg.gather_cohort_opt(opt_state, idx)
+            cp, cop, m = steps_by_cut[cut](
+                cp, cop, dict(batch, rho=jnp.asarray(w)))
+            params = alg.scatter_cohort(params, cp, idx,
+                                        broadcast_client=spec.client_aggregate)
+            opt_state = alg.scatter_cohort_opt(opt_state, cop, idx)
         losses.append(float(m["loss"]))
         if (i + 1) % args.log_every == 0:
             print(f"step {i+1}/{args.steps} loss {losses[-1]:.4f} "
@@ -124,10 +160,11 @@ def train_lm(args) -> dict:
                         {"arch": cfg.name, "algo": args.scheme, "cut": cut,
                          "steps": args.steps, "final_loss": losses[-1]})
         print(f"checkpoint -> {args.checkpoint}")
-    # unified per-round traffic (sysmodel.traffic via the LLM adapter);
-    # this run computes in float32, so the raw wire is 4 bytes/element
+    # unified per-round traffic (sysmodel.traffic via the LLM adapter)
+    # priced for the K participants of a step; this run computes in
+    # float32, so the raw wire is 4 bytes/element
     cb = alg.comm_bytes_per_round(
-        cfg, plans[cut], args.scheme, n, b, S, tau=tau, bytes_per_elem=4,
+        cfg, plans[cut], args.scheme, K, b, S, tau=tau, bytes_per_elem=4,
         uplink_codec=args.uplink_codec, downlink_codec=args.downlink_codec)
     msg = (f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
            f"comm/round {cb['total_bytes']/1e6:.2f} MB "
@@ -163,7 +200,8 @@ def train_cnn(args) -> dict:
     from repro.configs.paper_cnn import LIGHT_CONFIG
     from repro.core.simulator import FedSimulator, SimConfig
     from repro.data import iid_partition, make_image_dataset
-    from repro.data.federated import rho_weights, round_batches
+    from repro.data.federated import (replacement_fraction, rho_weights,
+                                      round_batches)
 
     ds = make_image_dataset(args.dataset, n=args.n_samples, seed=args.seed)
     train, test = ds.split(0.9)
@@ -173,8 +211,19 @@ def train_cnn(args) -> dict:
                                  n_clients=args.clients, batch=args.batch,
                                  tau=args.tau, lr=args.lr,
                                  uplink_codec=args.uplink_codec,
-                                 downlink_codec=args.downlink_codec),
+                                 downlink_codec=args.downlink_codec,
+                                 cohort=args.cohort,
+                                 sampler=args.sampler if args.cohort
+                                 else "full",
+                                 cohort_seed=args.seed),
                        rho=rho_weights(parts), seed=args.seed)
+    if args.cohort:
+        print(f"cohort: {sim.n_participants}/{args.clients} clients per "
+              f"round ({sim.sampler.kind} sampler)")
+    rf = replacement_fraction(parts, args.batch)
+    if rf:
+        print(f"note: {rf:.0%} of client partitions are smaller than the "
+              f"batch ({args.batch}); their draws sample with replacement")
     done_rounds = 0
     if args.resume:
         meta = sim.restore(args.resume)
@@ -187,14 +236,19 @@ def train_cnn(args) -> dict:
                                         parts, skip_batches=done_rounds)
     else:
         rng = np.random.RandomState(args.seed)
-        for _ in range(done_rounds):
+        for t in range(done_rounds):
             # fast-forward the data stream past already-trained rounds so
             # a resumed run continues the uninterrupted batch sequence
-            round_batches(train, parts, args.batch, args.tau, rng)
+            # (cohorts are pure in t, so the replay hits the same draws)
+            idx, _ = sim.cohort_for_round(t)
+            round_batches(train, parts, args.batch, args.tau, rng, idx=idx)
         for r in range(args.rounds):
-            # τ DISTINCT local-epoch batches per client (repeating one
-            # batch τ times would just be a τ-scaled step, not τ epochs)
-            xs, ys = round_batches(train, parts, args.batch, args.tau, rng)
+            # τ DISTINCT local-epoch batches per participating client
+            # (repeating one batch τ times would just be a τ-scaled
+            # step, not τ epochs); O(K) data per round, not O(N)
+            idx, _ = sim.cohort_for_round(sim._t)
+            xs, ys = round_batches(train, parts, args.batch, args.tau, rng,
+                                   idx=idx)
             m = sim.run_round(xs, ys)
             if (r + 1) % args.log_every == 0:
                 acc = sim.evaluate(test.x, test.y)
@@ -203,8 +257,9 @@ def train_cnn(args) -> dict:
         acc = sim.evaluate(test.x, test.y)
         cb = sim.comm_bytes_per_round()
         print(f"final acc {acc:.3f}; comm/round "
-              f"{cb['total_bytes']/1e6:.3f} MB ({args.scheme})")
-        result = {"accuracy": acc, **cb}
+              f"{cb['total_bytes']/1e6:.3f} MB ({args.scheme}, "
+              f"{sim.n_participants} participants)")
+        result = {"accuracy": acc, "replacement_fraction": rf, **cb}
     if args.checkpoint:
         sim.save(args.checkpoint, {"scheme_args": args.scheme})
         print(f"checkpoint -> {args.checkpoint} (round {sim._t})")
@@ -218,15 +273,19 @@ def _train_cnn_closed_loop(args, sim, schedule, train, test, parts,
     from repro.ccc.env import CuttingPointEnv, cnn_env_config
     from repro.core.closed_loop import run_closed_loop
 
+    # env cohort matches the simulator's: the DDQN observation and the
+    # P2.1 bandwidth split cover the K participants, not the N-bank
     env = CuttingPointEnv(cnn_env_config(
-        n_clients=args.clients, batch=args.batch, seed=args.seed))
+        n_clients=args.clients, batch=args.batch, seed=args.seed,
+        cohort=args.cohort))
     if isinstance(schedule, str):  # "ddqn[:EPISODES]"
         from repro.ccc.strategy import run_algorithm1
 
         episodes = int(schedule.split(":")[1]) if ":" in schedule else 60
         print(f"training Algorithm 1 policy ({episodes} episodes)...")
         res = run_algorithm1(CuttingPointEnv(cnn_env_config(
-            n_clients=args.clients, batch=args.batch, seed=args.seed)),
+            n_clients=args.clients, batch=args.batch, seed=args.seed,
+            cohort=args.cohort)),
             episodes=episodes)
         schedule = res.cut_schedule(env)
     r = run_closed_loop(sim, env, schedule, train, test, parts,
@@ -256,6 +315,14 @@ def main(argv=None):
     p.add_argument("--rounds", type=int, default=50)
     p.add_argument("--tau", type=int, default=1,
                    help="local steps per round (both LM and CNN modes)")
+    p.add_argument("--cohort", type=int, default=None,
+                   help="partial participation: K clients sampled per round "
+                        "out of --clients (both modes; default: everyone)")
+    p.add_argument("--sampler", default="uniform",
+                   choices=["full", "uniform", "rho", "latency"],
+                   help="cohort sampler (core.cohort) when --cohort is set: "
+                        "uniform (unbiased HT weights), rho (ρ-proportional "
+                        "with replacement), latency (straggler-avoiding)")
     p.add_argument("--dynamic-cut", default=None,
                    help="per-round cut schedule: comma list '1,2,1' (cycled) "
                         "or 'ddqn[:EPISODES]' (CNN mode: train Algorithm 1 "

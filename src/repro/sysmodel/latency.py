@@ -61,9 +61,12 @@ def migration_latency(up_bits: float, down_bits: float, gains,
                       comm: CommParams) -> float:
     """Wall-clock cost of a cut migration (per-client bits on each link).
 
-    The migration happens BEFORE the round's P2.1 allocation exists, so
-    resources are split equally at max power: uplink clients get B/N
-    sub-bands; the downlink is N per-client UNICASTS (replicas may have
+    ``gains`` covers the round's PARTICIPANTS — under partial
+    participation pass the K cohort gains, so the band is shared K-ways
+    (idle clients neither transmit nor hold sub-bands). The migration
+    happens BEFORE the round's P2.1 allocation exists, so resources are
+    split equally at max power: uplink clients get B/N sub-bands; the
+    downlink is N per-client UNICASTS (replicas may have
     drifted, and even identical payloads ship N times — matching
     ``traffic.migration_bits``) sharing the server band, so each runs at
     1/N of its eq.-11 full-band rate. The round stalls until the slowest

@@ -8,7 +8,13 @@ elements per payload, label bits, model sizes); this module owns the
 scheme structure (who sends what, how often) and the codec wire formats
 (via ``repro.sysmodel.payload``).
 
-Scheme structure per round (eqs. 5, 7, 12-13; N clients, τ local epochs):
+``n_clients`` everywhere below means the round's PARTICIPANTS — under
+partial participation (DESIGN.md §13) callers pass the cohort size K,
+not the bank size N: idle clients send nothing, so per-round traffic is
+O(K) and independent of how many devices are registered.
+
+Scheme structure per round (eqs. 5, 7, 12-13; N participants, τ local
+epochs):
 
 ===========  ==============================  ==============================
 scheme       uplink                          downlink
@@ -96,7 +102,10 @@ def migration_bits(phi_old: int, phi_new: int, *, n_clients: int,
     its own copy — per-client replicas are identical after an eq.-7
     aggregation round, but the unicast still happens N times); when the
     cut moves server-ward (φ shrinks) every client UPLOADS its own —
-    possibly drifted — copy of the departing layers. φ values are
+    possibly drifted — copy of the departing layers. Under partial
+    participation pass the COHORT size: only the K participants of the
+    migrating round move layers over the wire; idle bank entries sync
+    lazily when next sampled (DESIGN.md §13). φ values are
     parameter counts (``models.cnn.phi`` / ``core.split.client_param_numel``);
     parameters ride the wire at ``raw_bits_per_elem`` (model payloads are
     never codec-compressed, matching the model-sync rows above).

@@ -44,9 +44,12 @@ def _round_data(tau=1, seed=0):
 
 
 class TestSetCut:
-    def test_roundtrip_bit_identical(self):
-        sim = _sim(cut=2)
-        sim.run_round(*_round_data())  # start from a trained (drifted) state
+    def test_roundtrip_bit_identical_collapsed_bank(self):
+        """sfl's single-copy bank: any migration cycle is a pure list
+        re-partition, lossless in both directions even from a trained
+        state."""
+        sim = _sim(scheme="sfl", cut=2)
+        sim.run_round(*_round_data())
         before = jax.tree.map(np.asarray, sim.state)
         for v in (3, 1, 4, 2):
             sim.set_cut(v)
@@ -54,6 +57,41 @@ class TestSetCut:
         assert sim.cut == 2
         for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
             np.testing.assert_array_equal(a, b)
+
+    def test_roundtrip_bit_identical_clientward(self):
+        """Drifting bank (sfl_ga): server blocks broadcast client-ward
+        and anchored-ρ-merge back from equal copies — bit-exact
+        round-trip even with drifted client-side layers below the cut."""
+        sim = _sim(cut=2)
+        sim.run_round(*_round_data())  # drifted client bank
+        before = jax.tree.map(np.asarray, sim.state)
+        for v in (3, 4, 2):  # never moves a drifted block server-ward
+            sim.set_cut(v)
+        after = jax.tree.map(np.asarray, sim.state)
+        assert sim.cut == 2
+        for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_serverward_merge_preserves_global_model(self):
+        """Moving DRIFTED client blocks server-ward folds them into the
+        single server copy (eq.-7-style ρ-merge, same semantics as the
+        LLM resplit): per-client drift in the departing layers is
+        aggregated, but the ρ-mean global model is preserved."""
+        sim = _sim(cut=3)
+        sim.run_round(*_round_data())
+        g_before = [np.asarray(l) for l in jax.tree.leaves(sim.global_params())]
+        drift_before = float(sim._drift_fn(sim.state["client"]))
+        assert drift_before > 0  # the bank really drifted
+        sim.set_cut(1)  # blocks 1,2 merge into the server copy
+        g_after = [np.asarray(l) for l in jax.tree.leaves(sim.global_params())]
+        for a, b in zip(g_before, g_after):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+        # and from the merged (equal-copy) state, cycles are lossless
+        state1 = jax.tree.map(np.asarray, sim.state)
+        sim.set_cut(4)
+        sim.set_cut(1)
+        for a, b in zip(jax.tree.leaves(state1), jax.tree.leaves(sim.state)):
+            np.testing.assert_array_equal(a, np.asarray(b))
 
     def test_noop_is_free(self):
         sim = _sim(cut=2)

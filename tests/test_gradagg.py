@@ -84,7 +84,10 @@ def test_identical_data_makes_sflga_equal_sfl():
                                      batch=8, lr=0.1), seed=0)
         for _ in range(3):
             sim.run_round(x, y)
-        outs[scheme] = [np.asarray(l) for l in jax.tree.leaves(sim.state)]
+        # schemes store different bank layouts now (sfl collapses its
+        # client bank); compare the global models instead of raw state
+        outs[scheme] = [np.asarray(l)
+                        for l in jax.tree.leaves(sim.global_params())]
     for a, b in zip(outs["sfl_ga"], outs["sfl"]):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
     for a, b in zip(outs["sfl_ga"], outs["psl"]):

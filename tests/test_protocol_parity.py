@@ -85,21 +85,38 @@ class TestSimulatorParity:
 
     @pytest.mark.parametrize("scheme", ["sfl_ga", "sfl", "psl"])
     def test_round_bitexact(self, scheme):
+        from repro.core.protocol import scheme_spec
         from repro.configs.paper_cnn import LIGHT_CONFIG
-        from repro.core.simulator import FedSimulator, SimConfig
+        from repro.core.simulator import FedSimulator, SimConfig, _stack
 
         n, tau, b, cut, lr = 3, 2, 8, 1, 0.05
         x, y = self._data(n, tau, b)
         sim = FedSimulator(LIGHT_CONFIG, SimConfig(
             scheme=scheme, cut=cut, n_clients=n, batch=b, tau=tau, lr=lr),
             seed=11)
-        ref_state = jax.tree.map(lambda p: p, sim.state)
+        # reconstruct the pre-refactor replica layout from the bank: the
+        # old simulator held N per-client stacks on BOTH sides
+        spec = scheme_spec(scheme)
+        ref_state = {
+            "client": (jax.tree.map(lambda p: p, sim.state["client"])
+                       if not spec.client_aggregate
+                       else _stack(sim.state["client"], n)),
+            "server": _stack(sim.state["server"], n),
+        }
         ref_state, ref_loss = self._reference_round(
             LIGHT_CONFIG, scheme, cut, ref_state, sim.rho, x, y, lr)
         m = sim.run_round(x, y)
         assert m["loss"] == pytest.approx(ref_loss, abs=0, rel=0)
-        for pa, pb in zip(jax.tree.leaves(sim.state),
-                          jax.tree.leaves(ref_state)):
+        # aggregated sides are now stored as ONE copy; the old layout's N
+        # replicas were bit-identical rows, so compare against row 0
+        row0 = jax.tree.map(lambda p: p[0], ref_state["server"])
+        for pa, pb in zip(jax.tree.leaves(sim.state["server"]),
+                          jax.tree.leaves(row0)):
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+        ref_client = ref_state["client"] if not spec.client_aggregate \
+            else jax.tree.map(lambda p: p[0], ref_state["client"])
+        for pa, pb in zip(jax.tree.leaves(sim.state["client"]),
+                          jax.tree.leaves(ref_client)):
             np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
 
 
