@@ -38,6 +38,8 @@ from repro.ccc.strategy import run_algorithm1
 from repro.configs.paper_cnn import LIGHT_CONFIG
 from repro.core.closed_loop import CutSchedule, run_closed_loop
 from repro.core.simulator import FedSimulator, SimConfig
+
+from repro import obs
 from repro.sysmodel.comm import CommParams
 from repro.sysmodel.comp import CompParams
 
@@ -108,20 +110,20 @@ def main():
     rows = run(rounds=args.rounds, episodes=args.episodes,
                dataset=args.dataset)
     budget = rows[0]["wall_clock_s"]
-    print(f"# fig10 closed-loop dynamic splitting "
+    obs.log(f"# fig10 closed-loop dynamic splitting "
           f"(sfl_ga, acc@budget={budget:.1f}s)")
     for r in rows:
         cuts = r["cuts"]
         cut_str = ",".join(map(str, cuts[:12])) + ("..." if len(cuts) > 12
                                                    else "")
-        print(f"  {r['strategy']:>15}: acc@budget={r['acc_at_budget']:.3f} "
+        obs.log(f"  {r['strategy']:>15}: acc@budget={r['acc_at_budget']:.3f} "
               f"final_acc={r['final_acc']:.3f} wall={r['wall_clock_s']:.1f}s "
               f"traffic={r['total_mb']:.1f}MB "
               f"(migrated {r['migration_mb']:.1f}MB in "
               f"{r['n_migrations']} moves) cuts=[{cut_str}]")
     dyn, fx_alloc = rows[0], rows[3]
     verdict = dyn["acc_at_budget"] > fx_alloc["acc_at_budget"]
-    print(f"  dynamic beats fixed-alloc at its own budget: {verdict} "
+    obs.log(f"  dynamic beats fixed-alloc at its own budget: {verdict} "
           f"({dyn['acc_at_budget']:.3f} vs {fx_alloc['acc_at_budget']:.3f})")
 
 

@@ -29,6 +29,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import FULL
+from repro import obs
 
 CUT = 1  # keep the O(N) bank small (conv1 only) — the sweep is about N
 BATCH = 16
@@ -123,9 +124,9 @@ def main(argv=None):
               f"{r['replacement_fraction']:.2f}")
     worst = max(r["round_ms_vs_baseline"] for r in rows[1:])
     flat = all(r["server_bytes_flat"] for r in rows)
-    print(f"# server state one copy across the sweep: {flat}; "
-          f"worst round-time ratio vs N=K baseline: {worst:.2f}x "
-          f"(bar: <= 2x)")
+    obs.log(f"# server state one copy across the sweep: {flat}; "
+            f"worst round-time ratio vs N=K baseline: {worst:.2f}x "
+            f"(bar: <= 2x)")
     return rows
 
 

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from benchmarks.common import FULL, run_scheme
 
+from repro import obs
+
 
 def run(dataset: str = "mnist", rounds: int = None):
     rounds = rounds or (150 if FULL else 60)
@@ -28,9 +30,9 @@ def run(dataset: str = "mnist", rounds: int = None):
 def main():
     datasets = ["mnist", "fmnist", "cifar10"] if FULL else ["mnist"]
     for ds in datasets:
-        print(f"# fig3 dataset={ds}")
+        obs.log(f"# fig3 dataset={ds}")
         for row in run(ds):
-            print(f"  {row['scheme']}: final_acc={row['final_acc']:.3f} "
+            obs.log(f"  {row['scheme']}: final_acc={row['final_acc']:.3f} "
                   f"drift={row['drift']:.3e}")
 
 

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 from benchmarks.common import FULL, run_scheme
 
+from repro import obs
+
 
 def unified_traffic(scheme: str, cut: int, codec: str = "fp32",
                     n_clients: int = 10, batch: int = 16,
@@ -51,25 +53,25 @@ def run(dataset: str = "mnist", rounds: int = None):
 def main():
     datasets = ["mnist", "fmnist", "cifar10"] if FULL else ["mnist"]
     for ds in datasets:
-        print(f"# fig4 dataset={ds}")
+        obs.log(f"# fig4 dataset={ds}")
         rows = run(ds)
         for row in rows:
-            print(f"  {row['scheme']}: {row['mb_per_round']:.3f} MB/round, "
+            obs.log(f"  {row['scheme']}: {row['mb_per_round']:.3f} MB/round, "
                   f"final_acc={row['final_acc']:.3f}")
         # traffic to reach 90% of the best final accuracy
         target = 0.9 * max(r["final_acc"] for r in rows)
         for row in rows:
             hit = next((mb for mb, a in row["mb_acc_curve"] if a >= target),
                        None)
-            print(f"  {row['scheme']}: MB to reach acc {target:.3f}: "
+            obs.log(f"  {row['scheme']}: MB to reach acc {target:.3f}: "
                   f"{'%.2f' % hit if hit else 'not reached'}")
     # codec projection: the same workload priced under compressed
     # transports (sysmodel.traffic directly; cut-layer payloads only)
-    print("# codec projection (MB/round, cut=2)")
+    obs.log("# codec projection (MB/round, cut=2)")
     for scheme in ("sfl_ga", "psl", "sfl"):
         row = {c: unified_traffic(scheme, 2, c)["total_bytes"] / 1e6
                for c in ("fp32", "int8", "int4")}
-        print(f"  {scheme}: " + "  ".join(
+        obs.log(f"  {scheme}: " + "  ".join(
             f"{c}={v:.3f}" for c, v in row.items()))
 
 

@@ -10,6 +10,8 @@ import numpy as np
 
 from benchmarks.common import FULL, run_scheme
 
+from repro import obs
+
 
 def _round_latency(scheme: str, cut: int, seed: int = 0) -> float:
     """Expected per-round latency under the paper's §V-A system constants."""
@@ -64,9 +66,9 @@ def run(dataset: str = "mnist", rounds: int = None):
 
 
 def main():
-    print("# fig5 accuracy vs latency (mnist)")
+    obs.log("# fig5 accuracy vs latency (mnist)")
     for row in run():
-        print(f"  {row['scheme']}: {row['latency_per_round_s']:.3f} s/round, "
+        obs.log(f"  {row['scheme']}: {row['latency_per_round_s']:.3f} s/round, "
               f"final_acc={row['final_acc']:.3f}, "
               f"time_to_final={row['time_acc_curve'][-1][0]:.1f}s")
 

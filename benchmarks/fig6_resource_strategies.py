@@ -23,6 +23,8 @@ from repro.ccc.strategy import (fixed_alloc_policy_cost, fixed_cut_policy_cost,
                                 random_cut_policy_cost, run_algorithm1,
                                 run_algorithm1_batched)
 
+from repro import obs
+
 
 def run(episodes: int = None, horizon: int = 10, backend: str = "numpy",
         n_envs: int = 32):
@@ -65,11 +67,11 @@ def main():
     ap.add_argument("--episodes", type=int, default=None)
     ap.add_argument("--n-envs", type=int, default=32)
     args = ap.parse_args()
-    print(f"# fig6 resource strategies (10-round horizon, {args.backend})")
+    obs.log(f"# fig6 resource strategies (10-round horizon, {args.backend})")
     for row in run(episodes=args.episodes, backend=args.backend,
                    n_envs=args.n_envs):
         extra = f" policy={row['policy']}" if "policy" in row else ""
-        print(f"  {row['strategy']}: latency={row['latency']:.2f}s "
+        obs.log(f"  {row['strategy']}: latency={row['latency']:.2f}s "
               f"cost={row['cost']:.2f}{extra}")
 
 

@@ -19,6 +19,8 @@ from repro.ccc.env import (BatchedCuttingPointEnv, CuttingPointEnv,
                            cnn_env_config)
 from repro.ccc.strategy import run_algorithm1, run_algorithm1_batched
 
+from repro import obs
+
 
 def run(episodes: int = None, backend: str = "numpy", n_envs: int = 32):
     episodes = episodes or (300 if FULL else 80)
@@ -47,11 +49,11 @@ def main():
     ap.add_argument("--episodes", type=int, default=None)
     ap.add_argument("--n-envs", type=int, default=32)
     args = ap.parse_args()
-    print(f"# fig7 DDQN reward convergence vs privacy epsilon "
+    obs.log(f"# fig7 DDQN reward convergence vs privacy epsilon "
           f"({args.backend})")
     for row in run(episodes=args.episodes, backend=args.backend,
                    n_envs=args.n_envs):
-        print(f"  eps={row['epsilon']}: reward {row['first_rewards']:.1f} -> "
+        obs.log(f"  eps={row['epsilon']}: reward {row['first_rewards']:.1f} -> "
               f"{row['last_rewards']:.1f}, greedy v={row['greedy_policy']}")
 
 

@@ -15,6 +15,8 @@ from repro.models import cnn
 from repro.sysmodel.comm import CommParams, downlink_rate, path_loss_gain, uplink_rate
 from repro.sysmodel.comp import CompParams
 
+from repro import obs
+
 BANDWIDTHS = (5e6, 10e6, 20e6, 40e6)
 
 
@@ -62,10 +64,10 @@ def run():
 
 
 def main():
-    print("# fig8 latency (s/round) vs bandwidth (MHz)")
-    print("  MHz, sfl_ga, psl, sfl, fl")
+    obs.log("# fig8 latency (s/round) vs bandwidth (MHz)")
+    obs.log("  MHz, sfl_ga, psl, sfl, fl")
     for row in run():
-        print(f"  {row['bandwidth_mhz']:.0f}, {row['sfl_ga']:.3f}, "
+        obs.log(f"  {row['bandwidth_mhz']:.0f}, {row['sfl_ga']:.3f}, "
               f"{row['psl']:.3f}, {row['sfl']:.3f}, {row['fl']:.3f}")
 
 

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from benchmarks.common import FULL, run_scheme
 
+from repro import obs
+
 CODECS = ("fp32", "bf16", "fp8", "int8", "int4")
 
 
@@ -33,9 +35,9 @@ def run(dataset: str = "mnist", rounds: int = None, cut: int = 2):
 def main():
     datasets = ["mnist", "fmnist"] if FULL else ["mnist"]
     for ds in datasets:
-        print(f"# fig9 dataset={ds} (sfl_ga, cut=2)")
+        obs.log(f"# fig9 dataset={ds} (sfl_ga, cut=2)")
         for row in run(ds):
-            print(f"  {row['codec']:>5}: final_acc={row['final_acc']:.3f} "
+            obs.log(f"  {row['codec']:>5}: final_acc={row['final_acc']:.3f} "
                   f"{row['kb_per_round']:8.1f} kB/round "
                   f"({row['ratio_vs_fp32']:.2f}x vs fp32)")
 

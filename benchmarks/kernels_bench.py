@@ -7,6 +7,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 
 def _time(fn, *args, iters=3):
     fn(*args)  # warmup/compile
@@ -57,7 +59,7 @@ def run():
 
 def main():
     for name, us in run():
-        print(f"  {name}: {us:.0f} us/call")
+        obs.log(f"  {name}: {us:.0f} us/call")
 
 
 if __name__ == "__main__":

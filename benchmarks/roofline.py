@@ -5,6 +5,8 @@ from __future__ import annotations
 import json
 import os
 
+from repro import obs
+
 DEFAULT_PATHS = ("results/dryrun_baseline.jsonl", "results/dryrun.jsonl")
 
 
@@ -37,21 +39,21 @@ def fmt_row(r):
 def main(path=None):
     rows = load(path)
     if not rows:
-        print("# roofline: no dry-run results found "
+        obs.log("# roofline: no dry-run results found "
               "(run python -m repro.launch.dryrun --all first)")
         return
     rows.sort(key=lambda r: (r.get("arch", ""), r.get("shape", ""),
                              r.get("mesh", "")))
-    print("# roofline table (from dry-run artifacts)")
+    obs.log("# roofline table (from dry-run artifacts)")
     for r in rows:
-        print(fmt_row(r))
+        obs.log(fmt_row(r))
     ok = [r for r in rows if r.get("status") == "ok"]
     if ok:
         worst = min(ok, key=lambda r: r.get("useful_flops_ratio", 1.0))
         coll = max(ok, key=lambda r: r.get("t_collective_s", 0.0))
-        print(f"# worst useful-FLOP ratio: {worst['arch']} x {worst['shape']}"
+        obs.log(f"# worst useful-FLOP ratio: {worst['arch']} x {worst['shape']}"
               f" ({worst['useful_flops_ratio']:.3f})")
-        print(f"# most collective-bound: {coll['arch']} x {coll['shape']}"
+        obs.log(f"# most collective-bound: {coll['arch']} x {coll['shape']}"
               f" (Tcoll={coll['t_collective_s']:.3f}s)")
 
 

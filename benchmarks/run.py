@@ -4,10 +4,13 @@ Prints ``name,us_per_call,derived`` CSV per the repo convention. Each
 "call" is the full benchmark routine; ``derived`` carries the headline
 metric(s) the paper figure reports.
 
-``--json OUT`` additionally writes a machine-readable ``BENCH_*.json``
-(name → us_per_call + derived) so CI can archive the perf trajectory —
-the stdout CSV alone leaves no artifact behind. ``--only a,b`` filters
-benchmarks by substring (CI runs the cheap analytic subset).
+A machine-readable ``BENCH_*.json`` is always written (default
+``BENCH_local.json``; override with ``--json OUT``, disable with
+``--json -``) so every run leaves a perf artifact behind. The JSON
+carries a manifest header (schema, git SHA, platform, jax version,
+timestamp) plus per-entry wall-clock, matching the ``repro.obs``
+provenance fields. ``--only a,b`` filters benchmarks by substring (CI
+runs the cheap analytic subset).
 
 Fast mode by default (2-core container); REPRO_BENCH_FULL=1 for
 paper-scale rounds/episodes/datasets.
@@ -24,14 +27,15 @@ def _bench(name, fn, results):
     t0 = time.time()
     try:
         derived = fn()
-        us = (time.time() - t0) * 1e6
+        wall = time.time() - t0
+        us = wall * 1e6
         print(f"{name},{us:.0f},{derived}")
-        results[name] = {"us_per_call": round(us), "derived": derived,
-                         "status": "ok"}
+        results[name] = {"us_per_call": round(us), "wall_s": round(wall, 3),
+                         "derived": derived, "status": "ok"}
     except Exception as e:  # pragma: no cover
         traceback.print_exc()
         print(f"{name},-1,ERROR:{type(e).__name__}")
-        results[name] = {"us_per_call": -1,
+        results[name] = {"us_per_call": -1, "wall_s": round(time.time() - t0, 3),
                          "derived": f"ERROR:{type(e).__name__}",
                          "status": "error"}
 
@@ -165,10 +169,34 @@ BENCHES = [
 ]
 
 
+def _manifest() -> dict:
+    """Provenance header matching repro.obs manifests — same fields, so a
+    BENCH_*.json and a metrics dir from the same commit line up."""
+    import platform
+    import sys
+
+    from repro.obs import recorder as _rec
+
+    man = {"schema": "repro.bench.v1",
+           "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+           "git_sha": _rec.git_sha(),
+           "platform": platform.platform(),
+           "python": sys.version.split()[0]}
+    try:
+        import jax
+
+        man["jax_version"] = jax.__version__
+        man["backend"] = jax.default_backend()
+    except Exception:  # pragma: no cover
+        pass
+    return man
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default=None, metavar="OUT",
-                    help="also write results as JSON (e.g. BENCH_ci.json)")
+    ap.add_argument("--json", default="BENCH_local.json", metavar="OUT",
+                    help="JSON artifact path (default BENCH_local.json; "
+                         "'-' disables)")
     ap.add_argument("--only", default=None,
                     help="comma-separated substrings: run matching benches only")
     args = ap.parse_args(argv)
@@ -179,11 +207,9 @@ def main(argv=None) -> None:
         if wanted and not any(w in name for w in wanted):
             continue
         _bench(name, fn, results)
-    if args.json:
+    if args.json and args.json != "-":
         with open(args.json, "w") as f:
-            json.dump({"results": results,
-                       "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
-                                                  time.gmtime())},
+            json.dump({"manifest": _manifest(), "results": results},
                       f, indent=2, sort_keys=True)
         print(f"# json -> {args.json}")
 

@@ -2,16 +2,34 @@
 families — a dense GQA model and an attention-free Mamba-2 (whose decode
 state is O(1) in context length — the long_500k story).
 
-Run:  PYTHONPATH=src python examples/serve_decode.py
+Each arch emits the per-token latency schema (``serve_token`` /
+``serve_summary`` events, repro.obs.v1) into its own metrics dir when
+``--metrics-dir`` is given; render with ``python -m repro.obs.report DIR``.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--metrics-dir DIR]
 """
+import argparse
+import os
+
 from repro.launch import serve as serve_mod
 
 
-def main():
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--metrics-dir", default=None,
+                   help="per-arch metrics land in DIR/<arch>/")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+
     for arch in ("granite-8b", "mamba2-130m"):
         print(f"\n=== {arch} (reduced config) ===")
+        extra = []
+        if args.metrics_dir:
+            extra += ["--metrics-dir", os.path.join(args.metrics_dir, arch)]
+        if args.quiet:
+            extra += ["--quiet"]
         serve_mod.main(["--arch", arch, "--preset", "smoke", "--batch", "2",
-                        "--prompt-len", "32", "--gen", "12"])
+                        "--prompt-len", "32", "--gen", "12"] + extra)
 
 
 if __name__ == "__main__":

@@ -116,6 +116,10 @@ class DDQNAgent:
         self._update = jax.jit(partial(ddqn_update, opt=self.opt,
                                        gamma=cfg.gamma))
         self._q = jax.jit(qnet_apply)
+        # obs: recorder captured at construction; gauges are sampled
+        # every ~50 transitions so the scalar training loop stays cheap
+        from repro import obs as _obs
+        self._rec = _obs.get_recorder()
 
     # --------------------------------------------------------------
     def epsilon(self) -> float:
@@ -145,7 +149,18 @@ class DDQNAgent:
             self.grad_steps += 1
             if self.grad_steps % self.cfg.target_update == 0:
                 self.target = jax.tree.map(jnp.copy, self.params)
+        if self._rec.enabled and self.steps % 50 == 0:
+            self._rec.gauge("ddqn_td_loss", loss, step=self.steps)
+            self._rec.gauge("ddqn_epsilon", self.epsilon(), step=self.steps)
+            self._rec.gauge("ddqn_q", self.q_stats(s), step=self.steps)
         return loss
+
+    def q_stats(self, state) -> dict:
+        """Q(s,·) summary for one state (obs / diagnostics)."""
+        q = np.asarray(self._q(self.params,
+                               jnp.asarray(np.asarray(state)[None])))[0]
+        return {"q_mean": float(q.mean()), "q_max": float(q.max()),
+                "q_min": float(q.min()), "q_argmax": int(q.argmax())}
 
 
 # ------------------------------------------------------------------

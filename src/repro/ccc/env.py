@@ -122,11 +122,19 @@ class CuttingPointEnv:
         self.gains = self._draw_gains()
         return self._state()
 
+    def gamma_terms(self, v: int, codec: str = "fp32") -> Tuple[float, float]:
+        """Γ decomposed: (convergence term gamma0·φ/q, quantization term
+        gamma_q·D(codec)) — the reward-decomposition view the obs layer
+        reports per episode."""
+        conv = self.cfg.gamma0 * self.cfg.phis[v - 1] / self.cfg.total_params
+        dist = self.cfg.gamma_q * spec_for(codec).distortion
+        return conv, dist
+
     def gamma_fn(self, v: int, codec: str = "fp32") -> float:
         """Γ(φ_t(v)) — Assumption 4 instantiation — plus the codec's
         quantization-distortion penalty (zero for fp32)."""
-        base = self.cfg.gamma0 * self.cfg.phis[v - 1] / self.cfg.total_params
-        return base + self.cfg.gamma_q * spec_for(codec).distortion
+        conv, dist = self.gamma_terms(v, codec)
+        return conv + dist
 
     def smashed_bits(self, v: int, codec: str = "fp32") -> float:
         """X_t(v) on the wire under ``codec`` — a thin adapter over the
@@ -164,9 +172,11 @@ class CuttingPointEnv:
         self.t += 1
         done = self.t >= cfg.horizon
         self.gains = self._draw_gains()
+        g_conv, g_dist = self.gamma_terms(v, codec)
         return self._state(), float(reward), done, {
             "v": v, "codec": codec, "bits": self.smashed_bits(v, codec),
             "chi": chi, "psi": psi, "gamma": gamma,
+            "gamma_conv": g_conv, "gamma_dist": g_dist,
             "privacy_ok": ok, "latency": chi + psi}
 
 
@@ -211,19 +221,24 @@ class BatchedCuttingPointEnv:
         self.state_dim = self.n_participants + 1
 
         # per-action lookup tables (action = (v-1) * n_codecs + c)
-        xbits, gammas, fracs, priv = [], [], [], []
+        xbits, g_conv, g_dist, fracs, priv = [], [], [], [], []
         for a in range(self.n_actions):
             v_idx, c_idx = divmod(a, self.n_codecs)
             v, codec = v_idx + 1, cfg.codecs[c_idx]
             elems = cfg.smashed_elems[v - 1] * cfg.batch
             xbits.append(float(wire_bits(codec, elems, cfg.bytes_per_elem * 8)))
-            gammas.append(cfg.gamma0 * cfg.phis[v - 1] / cfg.total_params
-                          + cfg.gamma_q * spec_for(codec).distortion)
+            g_conv.append(cfg.gamma0 * cfg.phis[v - 1] / cfg.total_params)
+            g_dist.append(cfg.gamma_q * spec_for(codec).distortion)
             fracs.append(cfg.flop_fracs[v - 1])
             priv.append(privacy_ok(cfg.phis[v - 1], cfg.total_params,
                                    cfg.epsilon))
         self.xbits_table = jnp.asarray(xbits, jnp.float32)
-        self.gamma_table = jnp.asarray(gammas, jnp.float32)
+        self.gamma_conv_table = jnp.asarray(g_conv, jnp.float32)
+        self.gamma_dist_table = jnp.asarray(g_dist, jnp.float32)
+        # summed in python floats BEFORE the f32 cast — bit-identical to
+        # the pre-decomposition table
+        self.gamma_table = jnp.asarray(
+            [c + d for c, d in zip(g_conv, g_dist)], jnp.float32)
         self.frac_table = jnp.asarray(fracs, jnp.float32)
         self.priv_table = jnp.asarray(priv, dtype=bool)
 
@@ -306,6 +321,8 @@ class BatchedCuttingPointEnv:
             gains=self._draw_gains(k_g), key=key)
         info = {"v": actions // self.n_codecs + 1, "bits": X_bits,
                 "chi": alloc.chi, "psi": alloc.psi, "gamma": gamma,
+                "gamma_conv": self.gamma_conv_table[actions],
+                "gamma_dist": self.gamma_dist_table[actions],
                 "privacy_ok": priv, "latency": latency}
         return state2, self._obs(state2), reward, done, info
 

@@ -13,6 +13,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs as obslib
 from repro.ccc.ddqn import BatchedDDQNAgent, DDQNAgent, DDQNConfig
 from repro.ccc.env import BatchedCuttingPointEnv, CuttingPointEnv
 
@@ -48,23 +49,38 @@ def run_algorithm1(env: CuttingPointEnv, episodes: int = 200,
         agent = DDQNAgent(DDQNConfig(state_dim=env.state_dim,
                                      n_actions=env.n_actions,
                                      seed=env.cfg.seed))
+    rec = obslib.get_recorder()
     ep_rewards, ep_lat = [], []
     for ep in range(episodes):
         s = env.reset()
         total_r, total_l = 0.0, 0.0
+        # per-episode reward decomposition (eq. 35 terms) + TD-loss mean
+        dec = {"gamma_conv": 0.0, "gamma_dist": 0.0, "chi": 0.0, "psi": 0.0}
+        penalties, losses = 0, []
         done = False
         while not done:
             a = agent.act(s)
             s2, r, done, info = env.step(a)
-            agent.observe(s, a, r, s2, done)
+            losses.append(agent.observe(s, a, r, s2, done))
             s = s2
             total_r += r
             total_l += info["latency"] if np.isfinite(info["latency"]) else 0.0
+            if np.isfinite(info["latency"]) and info["privacy_ok"]:
+                for k in dec:
+                    dec[k] += float(info[k])
+            else:
+                penalties += 1
         ep_rewards.append(total_r)
         ep_lat.append(total_l)
+        if rec.enabled:
+            rec.event("ddqn_episode", name="episode", episode=ep,
+                      reward=total_r, latency=total_l,
+                      eps=agent.epsilon(),
+                      td_loss=float(np.mean(losses)) if losses else None,
+                      penalties=penalties, q=agent.q_stats(s), **dec)
         if log_every and (ep + 1) % log_every == 0:
-            print(f"  episode {ep+1}/{episodes} reward {total_r:.2f} "
-                  f"eps {agent.epsilon():.2f}")
+            obslib.log(f"  episode {ep+1}/{episodes} reward {total_r:.2f} "
+                       f"eps {agent.epsilon():.2f}")
     # greedy rollout to expose the learned cutting-point (+codec) policy
     s = env.reset()
     policy = []
@@ -107,9 +123,17 @@ def run_algorithm1_batched(env: BatchedCuttingPointEnv, episodes: int = 200,
             wave_l = wave_l + jnp.where(jnp.isfinite(lat), lat, 0.0)
         ep_rewards.extend(np.asarray(wave_r).tolist())
         ep_lat.extend(np.asarray(wave_l).tolist())
+        rec = obslib.get_recorder()
+        if rec.enabled:
+            # one episode event per env in the wave (episode = global idx)
+            for i, (rr, ll) in enumerate(zip(np.asarray(wave_r),
+                                             np.asarray(wave_l))):
+                rec.event("ddqn_episode", name="episode",
+                          episode=wave * B + i, reward=float(rr),
+                          latency=float(ll))
         if log_every and (wave + 1) % max(1, log_every // B) == 0:
-            print(f"  wave {wave+1}/{waves} ({len(ep_rewards)} episodes) "
-                  f"mean reward {float(np.mean(np.asarray(wave_r))):.2f}")
+            obslib.log(f"  wave {wave+1}/{waves} ({len(ep_rewards)} episodes) "
+                       f"mean reward {float(np.mean(np.asarray(wave_r))):.2f}")
     ep_rewards, ep_lat = ep_rewards[:episodes], ep_lat[:episodes]
     # greedy rollout (env 0's trajectory) exposes the learned policy
     env_state, obs = env.reset()

@@ -290,10 +290,13 @@ def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
 
 
 def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
-                    n_clients: int, rho: Optional[jnp.ndarray] = None) -> Callable:
+                    n_clients: int, rho: Optional[jnp.ndarray] = None,
+                    engine: Optional[ProtocolEngine] = None) -> Callable:
     assert tcfg.algo in ALGOS, tcfg.algo
     rho = uniform_rho(n_clients) if rho is None else rho
-    engine = _engine_for(tcfg)
+    # launchers pass their own engine when they attach an obs traffic
+    # ledger (the taps must live in the SAME engine the step traces)
+    engine = _engine_for(tcfg) if engine is None else engine
     loss_fn = make_loss_fn(plan, tcfg, rho, engine=engine)
     tau = tcfg.resolved_tau
 
@@ -340,6 +343,7 @@ def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
         if engine.spec.client_aggregate:
             # traditional SFL: aggregate client-side models every round —
             # the φ(v)-byte collective SFL-GA eliminates.
+            engine.tap_model_sync(params["client"])
             if w is None:
                 client = engine.aggregate(params["client"], rho)
             else:
@@ -415,6 +419,30 @@ def comm_bytes_per_round(cfg: ModelConfig, plan: lm_mod.ModelPlan, algo: str,
         raw_bits_per_elem=be8)
 
 
+def comm_breakdown_per_round(cfg: ModelConfig, plan: lm_mod.ModelPlan,
+                             algo: str, n_clients: int,
+                             per_client_batch: int, seq: int, tau: int = 1,
+                             bytes_per_elem: int = 2,
+                             uplink_codec: str = "fp32",
+                             downlink_codec: str = "fp32") -> Dict[str, int]:
+    """Per-category (obs-ledger) view of ``comm_bytes_per_round`` — in
+    BITS, the reconciliation target for the LLM path's traffic ledger.
+    Model-sync payloads price the CLIENT-side parameters at the raw wire
+    precision, matching ``ProtocolEngine.tap_model_sync``."""
+    from repro.core.split import client_param_numel, total_param_numel
+    from repro.sysmodel.traffic import round_traffic_breakdown
+
+    be8 = bytes_per_elem * 8
+    return round_traffic_breakdown(
+        algo, n_clients=n_clients, tau=tau,
+        smashed_elems=per_client_batch * seq * cfg.d_model,
+        label_bits=per_client_batch * seq * 32,
+        client_model_bits=client_param_numel(plan) * be8,
+        full_model_bits=total_param_numel(plan) * be8 if algo == "fl" else 0,
+        uplink_codec=uplink_codec, downlink_codec=downlink_codec,
+        raw_bits_per_elem=be8)
+
+
 # ---------------------------------------------------------------------------
 # Whisper (enc-dec) split training — smashed data = (residual, enc states)
 # ---------------------------------------------------------------------------
@@ -438,7 +466,7 @@ def make_whisper_train_step(cfg: ModelConfig, tcfg: TrainConfig, opt: Optimizer,
         # both boundary tensors cross the scheme's transport (eq. 5 for
         # sfl_ga: aggregated + broadcast; unicast for sfl/psl)
         x = engine.boundary(x, rho, seed)
-        enc = engine.boundary(enc, rho, seed)
+        enc = engine.boundary(enc, rho, seed, tap_labels=False)
         n, b = x.shape[:2]
         logits = encdec.whisper_server_forward(
             params["server"], cfg, x.reshape((n * b,) + x.shape[2:]),
@@ -453,6 +481,7 @@ def make_whisper_train_step(cfg: ModelConfig, tcfg: TrainConfig, opt: Optimizer,
         updates, opt_state = opt.update(grads, opt_state, params)
         params = apply_updates(params, updates)
         if engine.spec.client_aggregate:
+            engine.tap_model_sync(params["client"])
             params = dict(params,
                           client=engine.aggregate(params["client"], rho))
         return params, opt_state, dict(metrics, loss=loss)

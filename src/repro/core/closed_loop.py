@@ -25,12 +25,14 @@ A constant schedule reproduces the fixed-cut run bit for bit.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.data.federated import round_batches
+from repro import obs as obslib
+from repro.data.federated import round_batches, replacement_fraction
 
 
 class CutSchedule:
@@ -173,18 +175,22 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
     cuts: List[int] = []
     records: List[dict] = []
     curve: List[Tuple[float, float]] = []
+    rec = obslib.get_recorder()
     for t in range(rounds):
+        if rec.enabled:
+            rec.set_round(sim._t)
         v = schedule(t, obs)
-        mig = sim.set_cut(v)  # zero-traffic no-op when v is unchanged
-        mig_lat = 0.0
-        if mig["total_bits"]:
-            from repro.sysmodel.latency import migration_latency
+        with rec.span("migration", cut=v):
+            mig = sim.set_cut(v)  # zero-traffic no-op when v is unchanged
+            mig_lat = 0.0
+            if mig["total_bits"]:
+                from repro.sysmodel.latency import migration_latency
 
-            n_migrations += 1
-            K = sim.n_participants  # migration bits are already ×K
-            mig_lat = migration_latency(mig["up_bits"] / K,
-                                        mig["down_bits"] / K,
-                                        env.gains, env.comm)
+                n_migrations += 1
+                K = sim.n_participants  # migration bits are already ×K
+                mig_lat = migration_latency(mig["up_bits"] / K,
+                                            mig["down_bits"] / K,
+                                            env.gains, env.comm)
         fixed_lat = _fixed_alloc_latency(env, v)
         # the NEXT round's cohort owns the gains env.step draws at the end
         nxt_idx, _ = sim.cohort_for_round(sim._t + 1)
@@ -192,7 +198,9 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
             env.set_cohort(nxt_idx)
         # advance the MDP with the executed action: P2.1 reward inside,
         # block-fading redraw, observation for the next policy query
+        t_solve = time.perf_counter()
         obs, _r, done, info = env.step((v - 1) * env.n_codecs)
+        t_solve = time.perf_counter() - t_solve
         if alloc == "opt":
             lat = info["latency"]
             if not np.isfinite(lat):
@@ -202,8 +210,22 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
             lat = fixed_lat
         if done:
             obs = env.reset()  # episode boundary: fresh fading, policy continues
+        t_round = time.perf_counter()
         m = sim.run_round(*round_batches(train, parts, sim.sim.batch,
                                          sim.sim.tau, rng, idx=idx))
+        t_round = time.perf_counter() - t_round
+        if rec.enabled:
+            # modeled latency is the sysmodel wall-clock the paper prices
+            # (χ+ψ at the executed cut + migration); measured is the
+            # host's — reconciling the two is fig. 10's x-axis sanity
+            rec.event("round", name="closed_loop", cut=v,
+                      latency_modeled=mig_lat + lat,
+                      latency_measured=t_round, p21_solve_s=t_solve,
+                      migration_s=mig_lat, infeasible=alloc == "opt"
+                      and not np.isfinite(info["latency"]))
+            rec.gauge("p21_solve_s", t_solve)
+            rec.event("cohort", name="data", replacement_fraction=float(
+                replacement_fraction(parts, sim.sim.batch, idx=idx)))
         idx = nxt_idx
         round_bits = m["bits_up"] + m["bits_down"] + mig["total_bits"]
         t_wall += mig_lat + lat
@@ -215,11 +237,12 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
                         "migration_bits": mig["total_bits"],
                         "bits": round_bits, "wall_clock_s": t_wall})
         if (t + 1) % eval_every == 0 or t == rounds - 1:
-            acc = sim.evaluate(test.x, test.y)
+            with rec.span("eval"):
+                acc = sim.evaluate(test.x, test.y)
             curve.append((t_wall, acc))
             if log_every and (t + 1) % log_every == 0:
-                print(f"  round {t+1}/{rounds} cut={v} acc={acc:.3f} "
-                      f"wall={t_wall:.2f}s")
+                obslib.log(f"  round {t+1}/{rounds} cut={v} acc={acc:.3f} "
+                           f"wall={t_wall:.2f}s")
     return ClosedLoopResult(
         name=name or schedule.name, cuts=cuts, records=records, curve=curve,
         final_acc=curve[-1][1], total_latency_s=t_wall, total_bits=total_bits,

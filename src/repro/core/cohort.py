@@ -174,3 +174,23 @@ def make_sampler(kind: str, n_clients: int, k: Optional[int] = None,
                  latency_fn=None) -> CohortSampler:
     return CohortSampler(kind, n_clients, k, rho=rho, seed=seed,
                          latency_fn=latency_fn)
+
+
+def cohort_stats(idx, w, n_clients: int) -> dict:
+    """Summarize one round's cohort for the obs event stream: who
+    participated, how far the Horvitz-Thompson weights are from the
+    uniform 1/K, and how much of the bank the round touched. Pure
+    numpy so recorders can call it per round for free."""
+    idx = np.asarray(idx)
+    w = np.asarray(w, np.float64)
+    return {
+        "participants": [int(i) for i in idx],
+        "k": int(idx.size),
+        "n_clients": int(n_clients),
+        "distinct": int(np.unique(idx).size),
+        "bank_fraction": float(np.unique(idx).size / max(n_clients, 1)),
+        "w_sum": float(w.sum()),
+        "w_min": float(w.min()) if w.size else 0.0,
+        "w_max": float(w.max()) if w.size else 0.0,
+        "w_mean": float(w.mean()) if w.size else 0.0,
+    }

@@ -148,6 +148,11 @@ class ProtocolEngine:
         self.uplink = get_codec(uplink_codec)
         self.downlink = get_codec(downlink_codec)
         self.base_seed = int(base_seed)
+        # traffic ledger (repro.obs): None = zero instrumentation — the
+        # transport methods trace exactly the pre-obs graphs
+        self._ledger = None
+        self._raw_bits = 32.0
+        self._label_bits = 0
         # boundary op resolved once per engine (codecs are static under jit)
         if not self.spec.split:
             self._boundary_op = None
@@ -159,6 +164,52 @@ class ProtocolEngine:
         else:
             self._boundary_op = _make_unicast_boundary(self.uplink,
                                                        self.downlink)
+
+    # -- traffic ledger (repro.obs) --------------------------------------
+    def attach_ledger(self, ledger, *, raw_bits_per_elem: float = 32.0,
+                      label_bits_per_epoch: int = 0) -> None:
+        """Meter this engine's transport: every method below stages a
+        ``jax.debug.callback`` next to the real transport op, crediting
+        the ledger with the payload's wire bits. The bits are computed
+        at TRACE time (payload shapes and codec wire formats are static
+        under jit) but credited once per EXECUTION — so the τ-scan, the
+        cohort size and broadcast-vs-unicast multiplicities come from
+        what actually ran, which is exactly what the reconciliation
+        against ``sysmodel.traffic`` checks. Attach BEFORE any jit
+        compiles the transport (taps change the traced graph)."""
+        self._ledger = ledger
+        self._raw_bits = float(raw_bits_per_elem)
+        self._label_bits = int(label_bits_per_epoch)
+
+    def _tap(self, category: str, bits: int) -> None:
+        if self._ledger is None:
+            return
+        bits = int(bits)
+        if bits <= 0:
+            return
+        ledger = self._ledger
+        jax.debug.callback(lambda: ledger.add(category, bits))
+
+    def _wire(self, codec, numel: int) -> int:
+        from repro.sysmodel.traffic import wire_bits
+
+        return wire_bits(codec.name, int(numel), self._raw_bits)
+
+    def _tap_model_sync(self, tree) -> None:
+        """Client-model sync round-trip (sfl φ / fl q): the aggregated
+        tree's leading axis is the cohort, so per-participant numel is
+        size/K — priced raw (model payloads are never codec-compressed,
+        matching ``sysmodel.traffic``'s model-sync rows)."""
+        import math as _math
+
+        leaves = jax.tree.leaves(tree)
+        if not leaves:
+            return
+        k = int(leaves[0].shape[0])
+        per = sum(int(np.prod(l.shape)) for l in leaves) // k
+        bits = k * int(_math.ceil(per * self._raw_bits))
+        self._tap("up_model", bits)
+        self._tap("down_model", bits)
 
     # -- seed schedule --------------------------------------------------
     def round_seed(self, t: int) -> np.uint32:
@@ -174,6 +225,11 @@ class ProtocolEngine:
     # -- explicit transport (simulator-style epoch bodies) ---------------
     def encode_uplink(self, smashed: jnp.ndarray, seed) -> jnp.ndarray:
         """Per-client lossy uplink of the smashed data X(v); (N, ...)."""
+        if self._ledger is not None:
+            k = int(smashed.shape[0])
+            elems = int(np.prod(smashed.shape[1:]))
+            self._tap("up_smashed", k * self._wire(self.uplink, elems))
+            self._tap("up_labels", k * self._label_bits)
         return uplink_channel(self.uplink, smashed, seed)
 
     def downlink_cotangent(self, s_n: jnp.ndarray, rho: jnp.ndarray,
@@ -181,6 +237,11 @@ class ProtocolEngine:
         """Scheme-dependent downlink of the smashed-data gradients s^n:
         SFL-GA ρ-aggregates and broadcasts ONE payload (eq. 5); sfl/psl
         unicast each client its own cotangent."""
+        if self._ledger is not None:
+            k = int(s_n.shape[0])
+            elems = int(np.prod(s_n.shape[1:]))
+            payloads = 1 if self.spec.gradient_broadcast else k
+            self._tap("down_grad", payloads * self._wire(self.downlink, elems))
         if self.spec.gradient_broadcast:
             w = rho.reshape((-1,) + (1,) * (s_n.ndim - 1))
             agg = jnp.sum(s_n * w, axis=0, keepdims=True)
@@ -189,14 +250,38 @@ class ProtocolEngine:
         return unicast_channel(self.downlink, s_n, seed)
 
     # -- autodiff boundary (LLM-style loss functions) --------------------
-    def boundary(self, x: jnp.ndarray, rho: jnp.ndarray, seed=0) -> jnp.ndarray:
+    def boundary(self, x: jnp.ndarray, rho: jnp.ndarray, seed=0,
+                 tap_labels: bool = True) -> jnp.ndarray:
         """Apply the scheme's cut-layer transport as one differentiable op:
         forward = lossy uplink, backward = the scheme's downlink (eq.-5
         aggregate-broadcast for SFL-GA, per-client unicast otherwise).
-        Identity (and bit-exact) for non-broadcast schemes at fp32."""
+        Identity (and bit-exact) for non-broadcast schemes at fp32.
+
+        Ledger taps for BOTH directions land here at forward-trace time
+        (one backward per forward — true for every train step in the
+        repo; the custom_vjp rules themselves are tap-free because the
+        fwd rule re-runs the primal). ``tap_labels=False`` for extra
+        boundaries in the same step (whisper's encoder hop) so label
+        traffic is counted once."""
+        if self._ledger is not None and self.spec.split:
+            k = int(x.shape[0])
+            elems = int(np.prod(x.shape[1:]))
+            self._tap("up_smashed", k * self._wire(self.uplink, elems))
+            if tap_labels:
+                self._tap("up_labels", k * self._label_bits)
+            payloads = 1 if self.spec.gradient_broadcast else k
+            self._tap("down_grad", payloads * self._wire(self.downlink, elems))
         if self._boundary_op is None:
             return x
         return self._boundary_op(x, rho, seed)
+
+    def tap_model_sync(self, tree) -> None:
+        """Meter the client-model sync round-trip for aggregations done
+        OUTSIDE ``finalize_cohort`` (the LLM train steps call
+        ``aggregate`` directly). No-op without a ledger or for schemes
+        that don't sync client models."""
+        if self._ledger is not None and self.spec.client_aggregate:
+            self._tap_model_sync(tree)
 
     # -- per-round model aggregation (eq. 7 + baselines) -----------------
     @staticmethod
@@ -216,6 +301,8 @@ class ProtocolEngine:
         if self.spec.server_aggregate:
             server = aggregate_cohort(server, w, server_anchor)
         if self.spec.client_aggregate:
+            if self._ledger is not None:
+                self._tap_model_sync(client)
             client = aggregate_cohort(client, w, client_anchor)
         return client, server
 

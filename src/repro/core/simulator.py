@@ -55,8 +55,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.paper_cnn import CNNConfig
-from repro.core.cohort import make_sampler
+from repro.core.cohort import cohort_stats, make_sampler
 from repro.core.protocol import SCHEMES, ProtocolEngine
 from repro.models import cnn
 
@@ -104,6 +105,17 @@ class FedSimulator:
                                     base_seed=sim.codec_seed)
         self.up_codec = self.proto.uplink
         self.down_codec = self.proto.downlink
+        # obs: the recorder active at CONSTRUCTION is captured for the
+        # simulator's lifetime — the ledger taps change the traced round
+        # graphs, so swapping recorders after jit caches fill would
+        # silently meter nothing. Disabled recorder ⇒ no ledger attached
+        # ⇒ the jit graphs are bit-identical to pre-obs builds.
+        self._rec = obs.get_recorder()
+        if self._rec.enabled:
+            self.proto.attach_ledger(
+                self._rec.ledger,
+                raw_bits_per_elem=sim.bytes_per_elem * 8,
+                label_bits_per_epoch=sim.batch * 32)
         self._t = 0  # round counter (drives codec + cohort seed schedules)
         self.rho = jnp.asarray(
             rho if rho is not None else np.full(sim.n_clients, 1.0 / sim.n_clients),
@@ -178,8 +190,15 @@ class FedSimulator:
         if v != old:
             client = list(self.state["client"])
             server = list(self.state["server"])
+
+            def numel(blocks):  # total elements across a list of blocks
+                return sum(int(np.prod(l.shape))
+                           for b in blocks for l in jax.tree.leaves(b))
+
             if self._bank_stacked:
                 n = self.sim.n_clients
+                moved = numel(server[:v - old]) if v > old \
+                    else numel(client[v:]) // n
                 if v > old:  # boundary layers move client-ward: broadcast
                     client = client + [_stack(b, n) for b in server[:v - old]]
                     server = server[v - old:]
@@ -189,11 +208,30 @@ class FedSimulator:
                     client = client[:v]
             else:            # single-copy bank: pure list re-partition
                 if v > old:
+                    moved = numel(server[:v - old])
                     client, server = client + server[:v - old], server[v - old:]
                 else:
+                    moved = numel(client[v:])
                     client, server = client[:v], client[v:] + server
             self.state = {"client": client, "server": server}
             self.cut = v
+            if self._rec.enabled:
+                # measured from the tensors that actually changed sides
+                # (vs the modeled φ-delta pricing), charged for the K
+                # participants at raw wire precision like `bits` above
+                import math
+
+                payload = int(math.ceil(
+                    moved * self.sim.bytes_per_elem * 8)) * self.n_participants
+                measured = {
+                    "up_bits": payload if v < old else 0,
+                    "down_bits": payload if v > old else 0,
+                    "total_bits": payload,
+                }
+                self._rec.event(
+                    "migration", name="set_cut", scheme=self.sim.scheme,
+                    cut=v, cut_from=old, participants=self.n_participants,
+                    measured=measured, modeled=bits)
         return bits
 
     def _merge_bank_block(self, block):
@@ -288,13 +326,47 @@ class FedSimulator:
             cp, sp, w,
             client_anchor=cp0 if (anchored and spec.client_aggregate) else None,
             server_anchor=sp0 if (anchored and spec.server_aggregate) else None)
+        if self._rec.enabled:
+            # (τ,)-vector of local-epoch losses, surfaced through the
+            # jax.debug.callback emit path each time this jit runs
+            self._rec.emit_from_jit("epoch_loss", losses)
         return {"client": cp, "server": sp}, losses.mean()
 
     # ------------------------------------------------------------------
     def run_round(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
         """One federated round over the round-``t`` cohort. ``x``/``y``
         carry data for the K PARTICIPANTS (leading axis K, in
-        ``cohort_for_round(t)`` order), not the whole bank."""
+        ``cohort_for_round(t)`` order), not the whole bank.
+
+        With metrics enabled the round runs inside a ``span("round")``
+        and emits three events: ``traffic`` (the ledger snapshot
+        reconciled against ``round_traffic_breakdown``), ``cohort``
+        (participation + HT-weight stats) and ``round`` (loss/drift/
+        cut). Disabled recorder ⇒ the original code path, untouched."""
+        rec = self._rec
+        if not rec.enabled:
+            return self._run_round_impl(x, y)
+        t = self._t
+        rec.set_round(t)
+        idx, w = self.cohort_for_round(t)
+        with rec.span("round", cut=self.cut, scheme=self.sim.scheme):
+            out = self._run_round_impl(x, y)
+            jax.effects_barrier()  # drain pending ledger callbacks
+        measured = rec.ledger.snapshot_and_reset()
+        rec.event(
+            "traffic", name="round_traffic", scheme=self.sim.scheme,
+            cut=self.cut, tau=self.sim.tau, participants=self.n_participants,
+            uplink_codec=self.up_codec.name,
+            downlink_codec=self.down_codec.name,
+            measured=measured, modeled=self.comm_breakdown_per_round())
+        rec.event("cohort", name="cohort",
+                  **cohort_stats(idx, w, self.sim.n_clients))
+        rec.event("round", name="round", loss=out["loss"],
+                  client_drift=out["client_drift"], cut=self.cut,
+                  participants=self.n_participants)
+        return out
+
+    def _run_round_impl(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
         idx, w = self.cohort_for_round(self._t)
         K = self.n_participants
         if x.shape[0] != K:
@@ -376,17 +448,29 @@ class FedSimulator:
         labels and model-sync traffic stay fp32."""
         from repro.sysmodel.traffic import round_traffic_bits
 
+        return round_traffic_bits(self.sim.scheme, **self._traffic_kwargs())
+
+    def comm_breakdown_per_round(self) -> Dict[str, int]:
+        """Per-category view of ``comm_bits_per_round`` (the obs ledger's
+        reconciliation target): same inputs, split by flow."""
+        from repro.sysmodel.traffic import round_traffic_breakdown
+
+        return round_traffic_breakdown(self.sim.scheme,
+                                       **self._traffic_kwargs())
+
+    def _traffic_kwargs(self) -> Dict:
         cfg, sim = self.cfg, self.sim
         be8 = sim.bytes_per_elem * 8
         split = self.proto.spec.split
-        return round_traffic_bits(
-            sim.scheme, n_clients=self.n_participants, tau=sim.tau,
+        return dict(
+            n_clients=self.n_participants, tau=sim.tau,
             smashed_elems=cnn.smashed_numel(cfg, self.cut) * sim.batch
             if split else 0,
             label_bits=sim.batch * 32,
             client_model_bits=cnn.phi(cfg, self.cut) * be8 if split else 0,
             full_model_bits=cnn.total_params(cfg) * be8,
-            uplink_codec=self.up_codec.name, downlink_codec=self.down_codec.name,
+            uplink_codec=self.up_codec.name,
+            downlink_codec=self.down_codec.name,
             raw_bits_per_elem=be8)
 
     # ------------------------------------------------------------------

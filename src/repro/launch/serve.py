@@ -2,6 +2,14 @@
 
   python -m repro.launch.serve --arch mamba2-130m --preset smoke \
       --batch 4 --prompt-len 64 --gen 32
+
+Emits the split-inference telemetry contract (ROADMAP item 4) through
+``repro.obs``: one ``serve_token`` event per decode step —
+``{model, step, batch, latency_s}`` host wall-clock, synced per step —
+plus a ``serve_summary`` event with p50/p99/mean. ``--metrics-dir``
+persists them; ``python -m repro.obs.report DIR`` renders the
+percentiles. The SLO measurements for real serving land on this same
+schema.
 """
 from __future__ import annotations
 
@@ -9,6 +17,13 @@ import argparse
 import time
 
 import numpy as np
+
+from repro import obs
+
+
+def _pct(vals, q: float) -> float:
+    s = sorted(vals)
+    return s[min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))]
 
 
 def main(argv=None):
@@ -20,8 +35,27 @@ def main(argv=None):
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--checkpoint", default=None)
+    p.add_argument("--metrics-dir", default=None,
+                   help="record per-token latency events (repro.obs)")
+    p.add_argument("--quiet", action="store_true")
     args = p.parse_args(argv)
 
+    rec = None
+    if args.metrics_dir:
+        rec = obs.Recorder(args.metrics_dir, quiet=args.quiet,
+                           config=vars(args))
+        obs.set_recorder(rec)
+    obs.set_quiet(args.quiet)
+    try:
+        _serve(args)
+    finally:
+        if rec is not None:
+            rec.close()
+            obs.set_recorder(None)
+        obs.set_quiet(False)
+
+
+def _serve(args):
     import jax
     import jax.numpy as jnp
 
@@ -29,6 +63,7 @@ def main(argv=None):
     from repro.configs import get_config, reduced_config
     from repro.models import lm
 
+    rec = obs.get_recorder()
     cfg = get_config(args.arch)
     if args.preset == "smoke":
         cfg = reduced_config(cfg)
@@ -36,34 +71,51 @@ def main(argv=None):
     params = lm.init_lm(jax.random.key(args.seed), plan, jnp.float32)
     if args.checkpoint:
         params, meta = load_checkpoint(args.checkpoint, params)
-        print(f"restored checkpoint meta={meta}")
+        obs.log(f"restored checkpoint meta={meta}")
 
     B, S = args.batch, args.prompt_len
     max_len = S + args.gen
     rng = np.random.RandomState(args.seed)
     toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
 
-    t0 = time.time()
-    logits, caches = lm.prefill(params, plan, toks, max_len=max_len,
-                                dtype=jnp.float32)
-    print(f"prefill {B}x{S} in {time.time()-t0:.2f}s")
+    t0 = time.perf_counter()
+    with rec.span("prefill", batch=B, prompt_len=S):
+        logits, caches = lm.prefill(params, plan, toks, max_len=max_len,
+                                    dtype=jnp.float32)
+        logits.block_until_ready()
+    prefill_s = time.perf_counter() - t0
+    obs.log(f"prefill {B}x{S} in {prefill_s:.2f}s")
+    rec.gauge("prefill_s", prefill_s, batch=B, prompt_len=S)
 
     decode = jax.jit(lambda p, t, c: lm.decode_step(p, plan, t, c,
                                                     dtype=jnp.float32))
     tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
     outs = [tok]
-    t0 = time.time()
+    lat = []
+    t0 = time.perf_counter()
     for i in range(args.gen - 1):
+        ts = time.perf_counter()
         logits, caches = decode(params, tok, caches)
         tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        tok.block_until_ready()  # per-token latency needs a per-step sync
+        step_s = time.perf_counter() - ts
         outs.append(tok)
-    dt = time.time() - t0
+        lat.append(step_s)
+        rec.event("serve_token", name="decode", model=cfg.name, step=i,
+                  batch=B, latency_s=step_s)
+    dt = time.perf_counter() - t0
     gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
-    print(f"decoded {args.gen-1} steps in {dt:.2f}s "
-          f"({(args.gen-1)*B/max(dt,1e-9):.1f} tok/s)")
-    print("sample generations (token ids):")
+    obs.log(f"decoded {args.gen-1} steps in {dt:.2f}s "
+            f"({(args.gen-1)*B/max(dt,1e-9):.1f} tok/s)")
+    if lat:
+        rec.event("serve_summary", name="decode", model=cfg.name,
+                  tokens=len(lat), batch=B,
+                  p50_s=_pct(lat, 0.50), p99_s=_pct(lat, 0.99),
+                  mean_s=sum(lat) / len(lat),
+                  tok_per_s=(args.gen - 1) * B / max(dt, 1e-9))
+    obs.log("sample generations (token ids):")
     for row in gen[: min(4, B)]:
-        print("  ", row[:16].tolist(), "...")
+        obs.log("   " + str(row[:16].tolist()) + " ...")
 
 
 if __name__ == "__main__":

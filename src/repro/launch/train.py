@@ -43,9 +43,40 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+from contextlib import contextmanager
 
 import numpy as np
+
+from repro import obs
+
+
+@contextmanager
+def _maybe_profile(args, step: int):
+    """``--profile N``: capture a ``jax.profiler`` trace of the one
+    designated round/step (the trace of a single post-warmup step is
+    what you can actually read; tracing a whole run is noise)."""
+    if args.profile is None or step != args.profile:
+        yield
+        return
+    import jax
+
+    out = os.path.join(args.metrics_dir or ".", "profile")
+    try:
+        jax.profiler.start_trace(out)
+    except Exception as e:  # profiling is best-effort, never fatal
+        obs.log(f"profiler unavailable ({e}); skipping trace")
+        yield
+        return
+    try:
+        yield
+    finally:
+        try:
+            jax.profiler.stop_trace()
+            obs.log(f"profiler trace for step {step} -> {out}")
+        except Exception as e:
+            obs.log(f"profiler stop failed ({e})")
 
 
 def train_lm(args) -> dict:
@@ -85,7 +116,7 @@ def train_lm(args) -> dict:
 
         sampler = make_sampler(args.sampler, n, K, seed=args.seed)
         spec = scheme_spec(args.scheme)
-        print(f"cohort: {K}/{n} clients per step ({args.sampler} sampler)")
+        obs.log(f"cohort: {K}/{n} clients per step ({args.sampler} sampler)")
     schedule = _parse_dynamic_cut(args, lm_mode=True)
     cut0 = schedule(0) if schedule else args.cut
     tcfg = TrainConfig(model=cfg, algo=args.scheme, cut_layer=cut0,
@@ -93,6 +124,19 @@ def train_lm(args) -> dict:
                        lr=args.lr, remat=False, tau=tau,
                        uplink_codec=args.uplink_codec,
                        downlink_codec=args.downlink_codec, seed=args.seed)
+    # one engine for the whole run: the launcher owns it (instead of
+    # make_train_step's internal default) so the obs traffic ledger can
+    # meter the exact transport the steps trace. float32 compute → the
+    # raw wire is 32 bits/element, matching comm_bytes_per_round's
+    # bytes_per_elem=4 below.
+    from repro.core.protocol import ProtocolEngine
+
+    rec = obs.get_recorder()
+    engine = ProtocolEngine(args.scheme, args.uplink_codec,
+                            args.downlink_codec, base_seed=args.seed)
+    if rec.enabled:
+        engine.attach_ledger(rec.ledger, raw_bits_per_elem=32.0,
+                             label_bits_per_epoch=b * S * 32)
     plans = {cut0: lm.build_plan(cfg, cut0)}
     cut = cut0
     # the BANK holds all N per-client stacks; the jitted step only ever
@@ -101,7 +145,12 @@ def train_lm(args) -> dict:
         lm.init_lm(jax.random.key(args.seed), plans[cut0], jnp.float32), n)
     opt = make_optimizer(args.optimizer, args.lr)
     opt_state = opt.init(params)
-    steps_by_cut = {cut0: jax.jit(alg.make_train_step(plans[cut0], tcfg, opt, K))}
+    steps_by_cut = {cut0: jax.jit(alg.make_train_step(plans[cut0], tcfg, opt,
+                                                      K, engine=engine))}
+
+    def per_client_numel(p):
+        leaves = jax.tree.leaves(p["client"])
+        return sum(int(np.prod(l.shape)) for l in leaves) // n
 
     it = synthetic_token_batches(cfg.vocab_size, K * b * tau, S, seed=args.seed)
     shape = (K, b, S) if tau == 1 else (K, tau, b, S)
@@ -110,6 +159,8 @@ def train_lm(args) -> dict:
     n_migrations = 0
     t0 = time.time()
     for i in range(args.steps):
+        if rec.enabled:
+            rec.set_round(i)
         if schedule is not None:
             v = schedule(i)
             if v != cut:
@@ -119,9 +170,11 @@ def train_lm(args) -> dict:
                 if v not in plans:
                     plans[v] = lm.build_plan(cfg, v)
                     steps_by_cut[v] = jax.jit(
-                        alg.make_train_step(plans[v], tcfg, opt, K))
+                        alg.make_train_step(plans[v], tcfg, opt, K,
+                                            engine=engine))
                 # the whole BANK migrates (resplit is N-agnostic); wire
                 # cost is paid by the K participants of the step
+                per_old = per_client_numel(params)
                 params = alg.resplit_lm_params(params, plans[cut], plans[v])
                 opt_state = alg.resplit_opt_state(opt_state, plans[cut],
                                                   plans[v])
@@ -130,36 +183,64 @@ def train_lm(args) -> dict:
                                     n_clients=K, raw_bits_per_elem=32)
                 mig_total_bits += mb["total_bits"]
                 n_migrations += 1
-                print(f"step {i}: cut {cut} -> {v} "
-                      f"(migrated {mb['total_bits']/8e6:.2f} MB)")
+                if rec.enabled:
+                    # measured from the bank tensors that actually moved
+                    # sides, vs the plan-φ-delta pricing
+                    per_new = per_client_numel(params)
+                    payload = abs(per_new - per_old) * 32 * K
+                    rec.event(
+                        "migration", name="resplit", scheme=args.scheme,
+                        cut=v, cut_from=cut, participants=K,
+                        measured={
+                            "up_bits": payload if per_new < per_old else 0,
+                            "down_bits": payload if per_new > per_old else 0,
+                            "total_bits": payload},
+                        modeled=mb)
+                obs.log(f"step {i}: cut {cut} -> {v} "
+                        f"(migrated {mb['total_bits']/8e6:.2f} MB)")
                 cut = v
         toks, labels = next(it)
         batch = {"tokens": jnp.asarray(toks.reshape(shape)),
                  "labels": jnp.asarray(labels.reshape(shape)),
                  "seed": round_seed(args.seed, i)}
-        if sampler is None:
-            params, opt_state, m = steps_by_cut[cut](params, opt_state, batch)
-        else:
-            # partial participation: gather the step-i cohort (params +
-            # optimizer moments), train with unbiased cohort weights,
-            # scatter back (sfl broadcasts its new global client model)
-            idx, w = sampler.cohort(i)
-            cp = alg.gather_cohort(params, idx)
-            cop = alg.gather_cohort_opt(opt_state, idx)
-            cp, cop, m = steps_by_cut[cut](
-                cp, cop, dict(batch, rho=jnp.asarray(w)))
-            params = alg.scatter_cohort(params, cp, idx,
-                                        broadcast_client=spec.client_aggregate)
-            opt_state = alg.scatter_cohort_opt(opt_state, cop, idx)
-        losses.append(float(m["loss"]))
+        with _maybe_profile(args, i), rec.span("step", cut=cut):
+            if sampler is None:
+                params, opt_state, m = steps_by_cut[cut](params, opt_state,
+                                                         batch)
+            else:
+                # partial participation: gather the step-i cohort (params +
+                # optimizer moments), train with unbiased cohort weights,
+                # scatter back (sfl broadcasts its new global client model)
+                idx, w = sampler.cohort(i)
+                cp = alg.gather_cohort(params, idx)
+                cop = alg.gather_cohort_opt(opt_state, idx)
+                cp, cop, m = steps_by_cut[cut](
+                    cp, cop, dict(batch, rho=jnp.asarray(w)))
+                params = alg.scatter_cohort(
+                    params, cp, idx, broadcast_client=spec.client_aggregate)
+                opt_state = alg.scatter_cohort_opt(opt_state, cop, idx)
+            losses.append(float(m["loss"]))  # sync point inside the span
+        if rec.enabled:
+            jax.effects_barrier()  # drain the step's ledger callbacks
+            rec.event(
+                "traffic", name="step_traffic", scheme=args.scheme, cut=cut,
+                tau=tau, participants=K, uplink_codec=args.uplink_codec,
+                downlink_codec=args.downlink_codec,
+                measured=rec.ledger.snapshot_and_reset(),
+                modeled=alg.comm_breakdown_per_round(
+                    cfg, plans[cut], args.scheme, K, b, S, tau=tau,
+                    bytes_per_elem=4, uplink_codec=args.uplink_codec,
+                    downlink_codec=args.downlink_codec))
+            rec.event("round", name="lm_step", loss=losses[-1], cut=cut,
+                      participants=K)
         if (i + 1) % args.log_every == 0:
-            print(f"step {i+1}/{args.steps} loss {losses[-1]:.4f} "
-                  f"({(time.time()-t0)/(i+1):.2f} s/step)")
+            obs.log(f"step {i+1}/{args.steps} loss {losses[-1]:.4f} "
+                    f"({(time.time()-t0)/(i+1):.2f} s/step)")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, params,
                         {"arch": cfg.name, "algo": args.scheme, "cut": cut,
                          "steps": args.steps, "final_loss": losses[-1]})
-        print(f"checkpoint -> {args.checkpoint}")
+        obs.log(f"checkpoint -> {args.checkpoint}")
     # unified per-round traffic (sysmodel.traffic via the LLM adapter)
     # priced for the K participants of a step; this run computes in
     # float32, so the raw wire is 4 bytes/element
@@ -173,7 +254,7 @@ def train_lm(args) -> dict:
     if schedule is not None:
         msg += (f"; {n_migrations} cut migrations, "
                 f"{mig_total_bits/8e6:.2f} MB migrated")
-    print(msg)
+    obs.log(msg)
     return {"first_loss": losses[0], "final_loss": losses[-1], "comm": cb,
             "migration_bits": mig_total_bits, "n_migrations": n_migrations}
 
@@ -218,18 +299,18 @@ def train_cnn(args) -> dict:
                                  cohort_seed=args.seed),
                        rho=rho_weights(parts), seed=args.seed)
     if args.cohort:
-        print(f"cohort: {sim.n_participants}/{args.clients} clients per "
-              f"round ({sim.sampler.kind} sampler)")
+        obs.log(f"cohort: {sim.n_participants}/{args.clients} clients per "
+                f"round ({sim.sampler.kind} sampler)")
     rf = replacement_fraction(parts, args.batch)
     if rf:
-        print(f"note: {rf:.0%} of client partitions are smaller than the "
-              f"batch ({args.batch}); their draws sample with replacement")
+        obs.log(f"note: {rf:.0%} of client partitions are smaller than the "
+                f"batch ({args.batch}); their draws sample with replacement")
     done_rounds = 0
     if args.resume:
         meta = sim.restore(args.resume)
         done_rounds = sim._t
-        print(f"resumed from {args.resume} at round {sim._t} "
-              f"(cut {sim.cut}); --rounds {args.rounds} more to run")
+        obs.log(f"resumed from {args.resume} at round {sim._t} "
+                f"(cut {sim.cut}); --rounds {args.rounds} more to run")
     schedule = _parse_dynamic_cut(args, lm_mode=False)
     if schedule is not None:
         result = _train_cnn_closed_loop(args, sim, schedule, train, test,
@@ -249,20 +330,21 @@ def train_cnn(args) -> dict:
             idx, _ = sim.cohort_for_round(sim._t)
             xs, ys = round_batches(train, parts, args.batch, args.tau, rng,
                                    idx=idx)
-            m = sim.run_round(xs, ys)
+            with _maybe_profile(args, r):
+                m = sim.run_round(xs, ys)
             if (r + 1) % args.log_every == 0:
                 acc = sim.evaluate(test.x, test.y)
-                print(f"round {r+1}/{args.rounds} loss {m['loss']:.4f} "
-                      f"acc {acc:.3f} drift {m['client_drift']:.2e}")
+                obs.log(f"round {r+1}/{args.rounds} loss {m['loss']:.4f} "
+                        f"acc {acc:.3f} drift {m['client_drift']:.2e}")
         acc = sim.evaluate(test.x, test.y)
         cb = sim.comm_bytes_per_round()
-        print(f"final acc {acc:.3f}; comm/round "
-              f"{cb['total_bytes']/1e6:.3f} MB ({args.scheme}, "
-              f"{sim.n_participants} participants)")
+        obs.log(f"final acc {acc:.3f}; comm/round "
+                f"{cb['total_bytes']/1e6:.3f} MB ({args.scheme}, "
+                f"{sim.n_participants} participants)")
         result = {"accuracy": acc, "replacement_fraction": rf, **cb}
     if args.checkpoint:
         sim.save(args.checkpoint, {"scheme_args": args.scheme})
-        print(f"checkpoint -> {args.checkpoint} (round {sim._t})")
+        obs.log(f"checkpoint -> {args.checkpoint} (round {sim._t})")
     return result
 
 
@@ -282,7 +364,7 @@ def _train_cnn_closed_loop(args, sim, schedule, train, test, parts,
         from repro.ccc.strategy import run_algorithm1
 
         episodes = int(schedule.split(":")[1]) if ":" in schedule else 60
-        print(f"training Algorithm 1 policy ({episodes} episodes)...")
+        obs.log(f"training Algorithm 1 policy ({episodes} episodes)...")
         res = run_algorithm1(CuttingPointEnv(cnn_env_config(
             n_clients=args.clients, batch=args.batch, seed=args.seed,
             cohort=args.cohort)),
@@ -292,9 +374,9 @@ def _train_cnn_closed_loop(args, sim, schedule, train, test, parts,
                         rounds=args.rounds, eval_every=args.log_every,
                         batch_seed=args.seed, skip_batches=skip_batches,
                         log_every=args.log_every)
-    print(f"final acc {r.final_acc:.3f}; wall-clock {r.total_latency_s:.2f}s "
-          f"({r.n_migrations} migrations, "
-          f"{r.migration_bits_total/8e6:.2f} MB migrated); cuts {r.cuts}")
+    obs.log(f"final acc {r.final_acc:.3f}; wall-clock {r.total_latency_s:.2f}s "
+            f"({r.n_migrations} migrations, "
+            f"{r.migration_bits_total/8e6:.2f} MB migrated); cuts {r.cuts}")
     return {"accuracy": r.final_acc, "wall_clock_s": r.total_latency_s,
             "cuts": r.cuts, "n_migrations": r.n_migrations,
             "migration_bits": r.migration_bits_total,
@@ -344,11 +426,35 @@ def main(argv=None):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--checkpoint", default=None)
+    p.add_argument("--metrics-dir", default=None,
+                   help="enable the obs recorder: JSONL events + manifest "
+                        "into this directory (repro.obs; render with "
+                        "python -m repro.obs.report DIR)")
+    p.add_argument("--profile", type=int, default=None, metavar="N",
+                   help="capture a jax.profiler trace of round/step N "
+                        "(written under --metrics-dir, or ./profile)")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress the stderr progress log (events still "
+                        "recorded when --metrics-dir is set)")
     args = p.parse_args(argv)
-    if args.arch.startswith("paper-cnn"):
-        train_cnn(args)
-    else:
-        train_lm(args)
+    # recorder BEFORE any simulator/engine construction: instrumented
+    # objects capture the active recorder when they are built
+    rec = None
+    if args.metrics_dir:
+        rec = obs.Recorder(args.metrics_dir, quiet=args.quiet,
+                           append=bool(args.resume), config=vars(args))
+        obs.set_recorder(rec)
+    obs.set_quiet(args.quiet)
+    try:
+        if args.arch.startswith("paper-cnn"):
+            train_cnn(args)
+        else:
+            train_lm(args)
+    finally:
+        if rec is not None:
+            rec.close()
+            obs.set_recorder(None)
+        obs.set_quiet(False)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,289 @@
+"""``python -m repro.obs.report RUN_DIR`` — render a run's JSONL.
+
+Sections (each skipped when the run produced no matching events):
+
+* manifest summary (schema, git SHA, backend, config hash)
+* round timeline — per-round wall-clock broken into top-level spans,
+  with loss and cut when the run recorded them
+* traffic reconciliation — measured ledger vs ``sysmodel/traffic``
+  prediction per round (and migration events), per-category deltas for
+  any mismatch. **Exit code 1 on any mismatch** — this is the CI
+  contract: a red report means a pricing bug, not a style issue.
+* cohort summary (participation counts, HT-weight stats, replacement)
+* DDQN summary (per-episode reward/ε/loss + reward decomposition)
+* serve per-token latency (p50/p99)
+
+Pure stdlib: reads the JSONL produced by :mod:`repro.obs.recorder`
+without importing jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional
+
+from repro.obs.ledger import reconcile_events, totals
+
+
+def _fmt_bits(bits) -> str:
+    try:
+        bits = float(bits)
+    except (TypeError, ValueError):
+        return str(bits)
+    for unit, scale in (("Gb", 1e9), ("Mb", 1e6), ("kb", 1e3)):
+        if abs(bits) >= scale:
+            return f"{bits / scale:.3f} {unit}"
+    return f"{int(bits)} b"
+
+
+def _fmt_s(sec) -> str:
+    try:
+        sec = float(sec)
+    except (TypeError, ValueError):
+        return str(sec)
+    if sec >= 1.0:
+        return f"{sec:.2f} s"
+    return f"{sec * 1e3:.1f} ms"
+
+
+def _table(headers: List[str], rows: List[List[str]]) -> str:
+    widths = [len(h) for h in headers]
+    for r in rows:
+        for i, cell in enumerate(r):
+            widths[i] = max(widths[i], len(str(cell)))
+    def line(cells):
+        return "  ".join(str(c).rjust(w) for c, w in zip(cells, widths))
+    out = [line(headers), line("-" * w for w in widths)]
+    out.extend(line(r) for r in rows)
+    return "\n".join(out)
+
+
+def _pct(values: List[float], q: float) -> float:
+    if not values:
+        return float("nan")
+    s = sorted(values)
+    idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+    return s[idx]
+
+
+# ----------------------------------------------------------------------
+def render_manifest(manifest: Optional[Dict]) -> str:
+    if not manifest:
+        return "manifest: (none)"
+    keys = ("schema", "started", "git_sha", "backend", "jax_version",
+            "platform", "config_hash")
+    lines = ["== manifest =="]
+    for k in keys:
+        if manifest.get(k) is not None:
+            lines.append(f"  {k:12s} {manifest[k]}")
+    cfg = manifest.get("config")
+    if isinstance(cfg, dict):
+        brief = {k: cfg[k] for k in sorted(cfg) if not isinstance(
+            cfg[k], (dict, list))}
+        lines.append("  config       " + json.dumps(brief, sort_keys=True))
+    return "\n".join(lines)
+
+
+def render_timeline(events: List[dict], max_rows: int = 40) -> Optional[str]:
+    """Per-round wall-clock: the ``round`` span plus its direct children,
+    joined with per-round loss/cut gauges when present."""
+    rounds: Dict[int, Dict] = defaultdict(lambda: {"spans": {}, "info": {}})
+    for ev in events:
+        t = ev.get("round")
+        if t is None:
+            continue
+        if ev.get("kind") == "span":
+            name, dur = ev.get("name"), ev.get("dur_s", 0.0)
+            cur = rounds[t]["spans"]
+            cur[name] = cur.get(name, 0.0) + float(dur)
+        elif ev.get("kind") == "round":
+            rounds[t]["info"].update(
+                {k: v for k, v in ev.items()
+                 if k in ("loss", "cut", "latency_modeled",
+                          "latency_measured", "participants")})
+    if not rounds:
+        return None
+    span_names: List[str] = []
+    for r in rounds.values():
+        for n in r["spans"]:
+            if n not in span_names:
+                span_names.append(n)
+    span_names.sort(key=lambda n: (n != "round", n))
+    info_keys = sorted({k for r in rounds.values() for k in r["info"]})
+    headers = ["round"] + span_names + info_keys
+    keys = sorted(rounds)
+    shown = keys if len(keys) <= max_rows else keys[:max_rows // 2] + \
+        keys[-max_rows // 2:]
+    rows, prev = [], None
+    for t in shown:
+        if prev is not None and t != prev + 1:
+            rows.append(["..."] * len(headers))
+        prev = t
+        r = rounds[t]
+        row = [t]
+        for n in span_names:
+            row.append(_fmt_s(r["spans"][n]) if n in r["spans"] else "-")
+        for k in info_keys:
+            v = r["info"].get(k, "-")
+            if isinstance(v, float):
+                v = f"{v:.4g}"
+            row.append(v)
+        rows.append(row)
+    return "== round timeline ==\n" + _table(headers, rows)
+
+
+def render_reconciliation(events: List[dict]) -> (Optional[str], int):
+    rows, bad = reconcile_events(events)
+    if not rows:
+        return None, 0
+    headers = ["kind", "round", "scheme", "cut", "measured", "modeled", "ok"]
+    tab = []
+    for r in rows:
+        tab.append([
+            r["kind"], r.get("round", "-"), r.get("scheme") or "-",
+            r.get("cut") if r.get("cut") is not None else "-",
+            _fmt_bits(r["measured"].get("total_bits")),
+            _fmt_bits(r["modeled"].get("total_bits")),
+            "MISMATCH" if r["mismatches"] else "ok",
+        ])
+    lines = ["== traffic reconciliation (measured ledger vs "
+             "sysmodel/traffic) ==", _table(headers, tab)]
+    for r in rows:
+        for m in r["mismatches"]:
+            lines.append(
+                f"  !! round {r.get('round')} {r['kind']} "
+                f"[{m['category']}]: measured {m['measured_bits']} b != "
+                f"modeled {m['modeled_bits']} b "
+                f"(delta {m['delta_bits']:+d} b)")
+    n_ok = len(rows) - bad
+    lines.append(f"  {n_ok}/{len(rows)} events reconcile exactly"
+                 + ("" if not bad else f"; {bad} MISMATCHED — pricing bug"))
+    return "\n".join(lines), bad
+
+
+def render_cohort(events: List[dict]) -> Optional[str]:
+    evs = [e for e in events if e.get("kind") == "cohort"]
+    if not evs:
+        return None
+    counts: Dict[int, int] = defaultdict(int)
+    w_sums, repl = [], []
+    for e in evs:
+        for i in e.get("participants", []):
+            counts[int(i)] += 1
+        if e.get("w_sum") is not None:
+            w_sums.append(float(e["w_sum"]))
+        if e.get("replacement_fraction") is not None:
+            repl.append(float(e["replacement_fraction"]))
+    lines = ["== cohort =="]
+    n_rounds = sum(1 for e in evs if e.get("participants")) or len(evs)
+    lines.append(f"  rounds observed      {n_rounds}")
+    if counts:
+        per = sorted(counts.values())
+        lines.append(f"  distinct clients     {len(counts)}")
+        lines.append(f"  participation/client min {per[0]}  "
+                     f"median {per[len(per) // 2]}  max {per[-1]}")
+    if w_sums:
+        lines.append(f"  HT weight sum        mean {sum(w_sums) / len(w_sums):.4f}"
+                     f"  min {min(w_sums):.4f}  max {max(w_sums):.4f}")
+    if repl:
+        lines.append(f"  replacement fraction mean {sum(repl) / len(repl):.4f}")
+    return "\n".join(lines)
+
+
+def render_ddqn(events: List[dict], max_rows: int = 12) -> Optional[str]:
+    eps = [e for e in events if e.get("kind") == "ddqn_episode"]
+    if not eps:
+        return None
+    headers = ["episode", "reward", "latency", "eps", "td_loss",
+               "gamma_conv", "gamma_dist", "chi", "psi", "penalties"]
+    shown = eps if len(eps) <= max_rows else eps[:max_rows // 2] + \
+        eps[-max_rows // 2:]
+    rows, skipped = [], len(eps) - len(shown)
+    for e in shown:
+        rows.append([
+            e.get("episode", "-"),
+            f"{e['reward']:.4f}" if e.get("reward") is not None else "-",
+            f"{e['latency']:.4f}" if e.get("latency") is not None else "-",
+            f"{e['eps']:.3f}" if e.get("eps") is not None else "-",
+            f"{e['td_loss']:.3e}" if e.get("td_loss") is not None else "-",
+            f"{e['gamma_conv']:.4f}" if e.get("gamma_conv") is not None else "-",
+            f"{e['gamma_dist']:.4f}" if e.get("gamma_dist") is not None else "-",
+            f"{e['chi']:.4f}" if e.get("chi") is not None else "-",
+            f"{e['psi']:.4f}" if e.get("psi") is not None else "-",
+            e.get("penalties", "-"),
+        ])
+    title = "== DDQN episodes =="
+    if skipped:
+        title += f" (showing {len(shown)}/{len(eps)})"
+    return title + "\n" + _table(headers, rows)
+
+
+def render_serve(events: List[dict]) -> Optional[str]:
+    toks = [e for e in events if e.get("kind") == "serve_token"]
+    if not toks:
+        return None
+    lines = ["== serving (per-token latency) =="]
+    by_model: Dict[str, List[float]] = defaultdict(list)
+    for e in toks:
+        by_model[e.get("model") or "?"].append(float(e.get("latency_s", 0.0)))
+    for model, lat in sorted(by_model.items()):
+        lines.append(
+            f"  {model}: {len(lat)} tokens  "
+            f"p50 {_fmt_s(_pct(lat, 0.50))}  p99 {_fmt_s(_pct(lat, 0.99))}  "
+            f"mean {_fmt_s(sum(lat) / len(lat))}")
+    return "\n".join(lines)
+
+
+def render_report(events: List[dict],
+                  manifest: Optional[Dict] = None) -> (str, int):
+    """Full report text + number of reconciliation mismatches."""
+    sections = [render_manifest(manifest)]
+    sections.append(render_timeline(events))
+    recon, bad = render_reconciliation(events)
+    sections.append(recon)
+    sections.append(render_cohort(events))
+    sections.append(render_ddqn(events))
+    sections.append(render_serve(events))
+    n = sum(1 for _ in events)
+    sections.append(f"{n} events total")
+    return "\n\n".join(s for s in sections if s), bad
+
+
+def main(argv: Optional[Iterable[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Render a metrics run directory (exit 1 on any "
+                    "traffic-reconciliation mismatch).")
+    ap.add_argument("run_dir", help="directory with events.jsonl/manifest.json")
+    ap.add_argument("--strict", action="store_true",
+                    help="also exit non-zero when the run has no traffic "
+                         "events at all")
+    args = ap.parse_args(list(argv) if argv is not None else None)
+
+    from repro.obs.recorder import read_events, read_manifest
+
+    events_path = os.path.join(args.run_dir, "events.jsonl")
+    if not os.path.exists(events_path):
+        print(f"error: {events_path} not found", file=sys.stderr)
+        return 2
+    events = read_events(args.run_dir)
+    manifest = read_manifest(args.run_dir)
+    text, bad = render_report(events, manifest)
+    print(text)
+    if bad:
+        print(f"\nRECONCILIATION FAILED: {bad} mismatched events",
+              file=sys.stderr)
+        return 1
+    if args.strict and not any(
+            e.get("kind") in ("traffic", "migration") for e in events):
+        print("\nerror: --strict and no traffic/migration events",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -58,12 +58,48 @@ def wire_bits(codec: str, numel: int, raw_bits_per_elem: float = 32.0) -> int:
     return spec_for(codec).payload_bits(numel)
 
 
-def round_traffic_bits(scheme: str, *, n_clients: int, tau: int = 1,
-                       smashed_elems: int = 0, label_bits: int = 0,
-                       client_model_bits: int = 0, full_model_bits: int = 0,
-                       uplink_codec: str = "fp32",
-                       downlink_codec: str = "fp32",
-                       raw_bits_per_elem: float = 32.0) -> Dict[str, int]:
+def round_traffic_breakdown(scheme: str, *, n_clients: int, tau: int = 1,
+                            smashed_elems: int = 0, label_bits: int = 0,
+                            client_model_bits: int = 0,
+                            full_model_bits: int = 0,
+                            uplink_codec: str = "fp32",
+                            downlink_codec: str = "fp32",
+                            raw_bits_per_elem: float = 32.0
+                            ) -> Dict[str, int]:
+    """Per-round traffic split into the obs ledger's categories.
+
+    Same inputs as ``round_traffic_bits``; the result maps each of
+    ``repro.obs.ledger.LEDGER_CATEGORIES`` to its modeled bits, so the
+    traffic ledger's measured counts can be reconciled flow by flow
+    (not just as up/down totals). The ``fl`` full-model exchange lands
+    in the model-sync rows (``up_model``/``down_model``): it IS model
+    sync, with q in place of φ.
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; known: {SCHEMES}")
+    N = n_clients
+    bd = {"up_smashed": 0, "up_labels": 0, "up_model": 0,
+          "down_grad": 0, "down_model": 0}
+    if scheme == "fl":
+        bd["up_model"] = N * full_model_bits
+        bd["down_model"] = N * full_model_bits
+    else:
+        X_up = wire_bits(uplink_codec, smashed_elems, raw_bits_per_elem)
+        X_dn = wire_bits(downlink_codec, smashed_elems, raw_bits_per_elem)
+        bd["up_smashed"] = N * tau * X_up
+        bd["up_labels"] = N * tau * label_bits
+        if scheme == "sfl_ga":
+            bd["down_grad"] = tau * X_dn  # aggregated gradient, ONE broadcast
+        elif scheme == "psl":
+            bd["down_grad"] = N * tau * X_dn
+        else:  # sfl: per-client unicast + client-model sync round-trip
+            bd["up_model"] = N * client_model_bits
+            bd["down_grad"] = N * tau * X_dn
+            bd["down_model"] = N * client_model_bits
+    return {k: int(v) for k, v in bd.items()}
+
+
+def round_traffic_bits(scheme: str, **kw) -> Dict[str, int]:
     """Per-round traffic of one scheme, in bits.
 
     * ``smashed_elems`` — elements in ONE cut-layer payload (per client,
@@ -71,23 +107,13 @@ def round_traffic_bits(scheme: str, *, n_clients: int, tau: int = 1,
     * ``label_bits`` — label bits per client per local epoch (uplink).
     * ``client_model_bits`` — φ(v) on the wire (``sfl`` model sync).
     * ``full_model_bits`` — q on the wire (``fl`` full-model exchange).
+
+    Sums ``round_traffic_breakdown`` — totals and the per-category view
+    cannot drift apart.
     """
-    if scheme not in SCHEMES:
-        raise ValueError(f"unknown scheme {scheme!r}; known: {SCHEMES}")
-    N = n_clients
-    if scheme == "fl":
-        up = down = N * full_model_bits
-    else:
-        X_up = wire_bits(uplink_codec, smashed_elems, raw_bits_per_elem)
-        X_dn = wire_bits(downlink_codec, smashed_elems, raw_bits_per_elem)
-        up = N * tau * (X_up + label_bits)
-        if scheme == "sfl_ga":
-            down = tau * X_dn  # the aggregated gradient, broadcast ONCE
-        elif scheme == "psl":
-            down = N * tau * X_dn
-        else:  # sfl: per-client unicast + client-model aggregation round-trip
-            up += N * client_model_bits
-            down = N * tau * X_dn + N * client_model_bits
+    bd = round_traffic_breakdown(scheme, **kw)
+    up = bd["up_smashed"] + bd["up_labels"] + bd["up_model"]
+    down = bd["down_grad"] + bd["down_model"]
     return {"up_bits": int(up), "down_bits": int(down),
             "total_bits": int(up + down)}
 
