@@ -3,28 +3,43 @@
 The cohort engine (DESIGN.md §13) keeps ONE aggregated server model
 between rounds and trains a sampled cohort of K participants per round,
 so both server memory and round wall-clock should be INDEPENDENT of how
-many clients are registered in the bank. This benchmark sweeps
-N ∈ {10, 100, 1k, 10k} at fixed K and measures:
+many clients are registered in the bank. The bank backends (DESIGN.md
+§15) take the last O(N) state off the device: ``--bank host`` keeps the
+client bank in host memory and double-buffers the per-round K-slice
+copies behind training, so DEVICE memory for client state is O(K) — the
+wall between N=10k and N=1M. This benchmark sweeps N at fixed K and
+measures:
 
 * per-round wall-clock (post-jit; gather → vmapped round → scatter),
   compared against the N=K full-participation baseline — the acceptance
   bar is within 2× of it at N=10k on a 2-core CPU;
-* server-side state bytes — ONE copy, flat across the sweep (the
-  pre-cohort layout held N replicas, O(N));
-* client-bank bytes — the only O(N) state left, client-side params only;
-* the ``replacement_fraction`` stat surfaced by ``data.federated``:
-  at N=10k a 2k-sample dataset leaves every client < batch samples, the
-  exact silent-data-repetition condition the stat exists to expose.
+* server-side state bytes — ONE copy, flat across the sweep;
+* client-bank bytes — the only O(N) state left — plus, from
+  ``repro.obs``/``ClientBank.stats()``, the PEAK device-resident
+  client-state bytes (``--bank host`` bar: ≤ 2× the K-slice — the
+  staged next-round slice plus the in-flight one) and the prefetch
+  hit rate / gather-wait that show the overlap working;
+* the ``replacement_fraction`` stat surfaced by ``data.federated``.
+
+N ≥ 100k rows use ``data.federated.CyclicPartition`` (O(1)-memory
+partition view) — ``iid_partition`` would build a million index arrays
+before the first round.
 
 Run:  PYTHONPATH=src:. python benchmarks/fig11_scale.py [--fast]
+          [--bank device|host|sharded] [--no-prefetch]
 Fast mode (CI) sweeps {10, 256} at K=8 with 2 timed rounds.
+``--bank host`` adds N=100k and N=1M rows to the full sweep.
+``--smoke`` is the CI scale gate: N=100k, K=16, host bank, exits
+non-zero if the obs-reported peak device client-state bytes exceed the
+2× K-slice budget.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 import warnings
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -33,6 +48,8 @@ from repro import obs
 
 CUT = 1  # keep the O(N) bank small (conv1 only) — the sweep is about N
 BATCH = 16
+# CyclicPartition threshold: above this, skip materialized partitions
+HUGE_N = 100_000
 
 
 def _bytes(tree) -> int:
@@ -42,22 +59,31 @@ def _bytes(tree) -> int:
 
 
 def run_one(n_clients: int, cohort: int, rounds: int, n_samples: int,
-            seed: int = 0) -> Dict:
+            seed: int = 0, bank: str = "device",
+            prefetch: bool = True) -> Dict:
     from repro.configs.paper_cnn import LIGHT_CONFIG
     from repro.core.simulator import FedSimulator, SimConfig
     from repro.data import iid_partition, make_image_dataset
-    from repro.data.federated import (replacement_fraction, rho_weights,
-                                      round_batches)
+    from repro.data.federated import (CyclicPartition, replacement_fraction,
+                                      rho_weights, round_batches)
 
-    ds = make_image_dataset("mnist", n=n_samples, seed=seed)
-    parts = iid_partition(len(ds.x), n_clients, seed=seed)
+    huge = n_clients >= HUGE_N
+    ds = make_image_dataset("mnist", n=min(n_samples, 4096) if huge
+                            else n_samples, seed=seed)
+    if huge:  # lazy partition view + uniform ρ: no O(N) host lists
+        parts = CyclicPartition(len(ds.x), n_clients)
+        rho = None
+    else:
+        parts = iid_partition(len(ds.x), n_clients, seed=seed)
+        rho = rho_weights(parts)
     full = cohort >= n_clients
     sim = FedSimulator(
         LIGHT_CONFIG,
         SimConfig(scheme="sfl_ga", cut=CUT, n_clients=n_clients, batch=BATCH,
                   cohort=None if full else cohort,
-                  sampler="full" if full else "uniform", cohort_seed=seed),
-        rho=rho_weights(parts), seed=seed)
+                  sampler="full" if full else "uniform", cohort_seed=seed,
+                  bank=bank, bank_prefetch=prefetch),
+        rho=rho, seed=seed)
     rng = np.random.RandomState(seed)
 
     def one_round():
@@ -75,31 +101,45 @@ def run_one(n_clients: int, cohort: int, rounds: int, n_samples: int,
         m = one_round()
         times.append(time.perf_counter() - t0)
         loss = m["loss"]
+    sim.bank.flush()  # drain the async pipeline before reading stats
+    st = sim.bank.stats()
     return {
         "n_clients": n_clients,
         "cohort": sim.n_participants,
         "round_ms": 1e3 * float(np.median(times)),
         "server_bytes": _bytes(sim.state["server"]),
-        "bank_bytes": _bytes(sim.state["client"]),
+        "bank_bytes": st["bank_bytes"],
+        "bank": st["backend"],
+        "device_bytes_peak": st["device_bytes_peak"],
+        "prefetch_hits": st["prefetch_hits"],
+        "prefetch_misses": st["prefetch_misses"],
+        "gather_wait_ms": 1e3 * st["gather_wait_s"],
         "replacement_fraction": replacement_fraction(parts, BATCH),
         "loss": loss,
     }
 
 
-def run(fast: bool = None) -> List[Dict]:
+def run(fast: bool = None, bank: str = "device",
+        prefetch: bool = True) -> List[Dict]:
     fast = (not FULL) if fast is None else fast
     if fast:
         ns, k, rounds = [10, 256], 8, 2
     else:
         ns, k, rounds = [10, 100, 1000, 10000], 16, 3
+        if bank != "device":
+            # the rows the off-device bank exists for: past the ~830 MB
+            # device wall a stacked N=1M bank would hit
+            ns = ns + [100_000, 1_000_000]
 
     def samples_for(n):  # every client needs >= 1 sample; 2/client at 10k
         return max(2000, 2 * n)
 
-    rows = [run_one(k, k, rounds, samples_for(k))]  # N=K baseline
+    rows = [run_one(k, k, rounds, samples_for(k), bank=bank,
+                    prefetch=prefetch)]  # N=K baseline
     rows[0]["name"] = "baseline_N=K"
     for n in ns:
-        r = run_one(n, k, rounds, samples_for(n))
+        r = run_one(n, k, rounds, samples_for(n), bank=bank,
+                    prefetch=prefetch)
         r["name"] = f"N={n}"
         rows.append(r)
     base = rows[0]
@@ -109,24 +149,68 @@ def run(fast: bool = None) -> List[Dict]:
     return rows
 
 
+def run_smoke(n_clients: int = 100_000, cohort: int = 16,
+              rounds: int = 4) -> Dict:
+    """CI scale gate: a host-bank run at N=100k whose obs-reported peak
+    device client-state bytes must stay within the O(K) budget (2× the
+    K-slice: one in-flight slice + one staged prefetch)."""
+    rec = obs.Recorder()  # in-memory events; the gate reads the stream
+    with obs.use_recorder(rec):
+        row = run_one(n_clients, cohort, rounds, 4096, bank="host")
+    peaks = [e["bank"]["device_bytes_peak"] for e in rec.events
+             if e.get("kind") == "round" and e.get("name") == "round"]
+    assert peaks, "no round events recorded — obs wiring broken"
+    peak = max(peaks)
+    slice_bytes = row["bank_bytes"] // n_clients * cohort
+    budget = 2 * slice_bytes
+    stacked_mb = row["bank_bytes"] / 1e6
+    row.update(device_bytes_peak=peak, slice_bytes=slice_bytes,
+               budget_bytes=budget, ok=peak <= budget)
+    obs.log(f"# scale smoke: N={n_clients} K={cohort} bank=host — peak "
+            f"device client-state {peak} B vs budget {budget} B "
+            f"(2x K-slice; stacked bank would be {stacked_mb:.0f} MB "
+            f"device-resident); prefetch {row['prefetch_hits']} hits / "
+            f"{row['prefetch_misses']} misses -> "
+            f"{'OK' if row['ok'] else 'OVER BUDGET'}")
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
                     help="CI sweep: N in {10, 256}, K=8, 2 timed rounds")
+    ap.add_argument("--bank", default="device",
+                    choices=["device", "host", "sharded"],
+                    help="client-bank backend (core.bank); 'host' adds "
+                         "N=100k and N=1M rows to the full sweep")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the host bank's double-buffered "
+                         "prefetch (measures the overlap win)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale gate: N=100k host-bank run; exit "
+                         "non-zero if peak device client-state bytes "
+                         "exceed 2x the K-slice budget")
     args = ap.parse_args(argv)
-    rows = run(fast=args.fast or None)
+    if args.smoke:
+        row = run_smoke()
+        sys.exit(0 if row["ok"] else 1)
+    rows = run(fast=args.fast or None, bank=args.bank,
+               prefetch=not args.no_prefetch)
     print("name,n_clients,cohort,round_ms,server_bytes,bank_bytes,"
-          "ratio_vs_baseline,replacement_fraction")
+          "device_peak_bytes,prefetch_hit_miss,ratio_vs_baseline,"
+          "replacement_fraction")
     for r in rows:
         print(f"{r['name']},{r['n_clients']},{r['cohort']},"
               f"{r['round_ms']:.1f},{r['server_bytes']},{r['bank_bytes']},"
+              f"{r['device_bytes_peak']},"
+              f"{r['prefetch_hits']}/{r['prefetch_misses']},"
               f"{r['round_ms_vs_baseline']:.2f},"
               f"{r['replacement_fraction']:.2f}")
     worst = max(r["round_ms_vs_baseline"] for r in rows[1:])
     flat = all(r["server_bytes_flat"] for r in rows)
     obs.log(f"# server state one copy across the sweep: {flat}; "
             f"worst round-time ratio vs N=K baseline: {worst:.2f}x "
-            f"(bar: <= 2x)")
+            f"(bar: <= 2x); bank={args.bank}")
     return rows
 
 

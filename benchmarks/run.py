@@ -147,6 +147,23 @@ def bench_fig11():
                               big["round_ms"], big["server_bytes"] // 1024))
 
 
+def bench_fig11_bank_host():
+    """Host-resident bank scale gate (DESIGN.md §15): N=100k, K=16 —
+    peak device client-state bytes must stay within 2× the K-slice."""
+    from benchmarks import fig11_scale as f
+
+    r = f.run_smoke()
+    if not r["ok"]:
+        raise AssertionError(
+            f"peak device client-state {r['device_bytes_peak']} B over the "
+            f"{r['budget_bytes']} B budget (2x K-slice)")
+    return ("N=%d K=%d peak_device_b=%d budget_b=%d bank_mb=%.0f "
+            "prefetch_hit=%d miss=%d round_ms=%.0f"
+            % (r["n_clients"], r["cohort"], r["device_bytes_peak"],
+               r["budget_bytes"], r["bank_bytes"] / 1e6,
+               r["prefetch_hits"], r["prefetch_misses"], r["round_ms"]))
+
+
 def bench_kernels():
     from benchmarks import kernels_bench as f
 
@@ -166,6 +183,7 @@ BENCHES = [
     ("fig9_accuracy_vs_bits", bench_fig9),
     ("fig10_closed_loop", bench_fig10),
     ("fig11_scale", bench_fig11),
+    ("fig11_scale_bank_host", bench_fig11_bank_host),
 ]
 
 

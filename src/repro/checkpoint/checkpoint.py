@@ -25,13 +25,41 @@ def _flatten(tree):
     return leaves, treedef
 
 
+# writer streams each leaf in slices of at most this many bytes, so a
+# save never materializes a full (N,)-stacked bank copy on host at once
+SAVE_CHUNK_BYTES = 64 << 20
+
+
+def _leaf_info(leaf) -> Tuple[Tuple[int, ...], np.dtype]:
+    """Shape/dtype from leaf metadata — no host materialization."""
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return tuple(int(d) for d in leaf.shape), np.dtype(leaf.dtype)
+    a = np.asarray(leaf)
+    return a.shape, a.dtype
+
+
+def _leaf_chunks(leaf, shape: Tuple[int, ...], itemsize: int):
+    """Yield a leaf's payload as C-order byte chunks, slicing the leading
+    axis so at most ~SAVE_CHUNK_BYTES are staged per step. numpy leaves
+    slice as views (zero device traffic — the host bank's save path);
+    jax leaves copy device→host one slice at a time."""
+    nbytes = int(np.prod(shape)) * itemsize if shape else itemsize
+    if not shape or nbytes <= SAVE_CHUNK_BYTES:
+        yield np.asarray(leaf).tobytes(order="C")
+        return
+    row = max(1, nbytes // max(shape[0], 1))
+    step = max(1, SAVE_CHUNK_BYTES // row)
+    for s in range(0, shape[0], step):
+        yield np.asarray(leaf[s:s + step]).tobytes(order="C")
+
+
 def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
     leaves, treedef = _flatten(tree)
-    arrs = [np.asarray(l) for l in leaves]
+    infos = [_leaf_info(l) for l in leaves]
     header = {
         "treedef": str(treedef),
-        "shapes": [list(a.shape) for a in arrs],
-        "dtypes": [str(a.dtype) for a in arrs],  # e.g. "float32", "bfloat16"
+        "shapes": [list(shape) for shape, _ in infos],
+        "dtypes": [str(dt) for _, dt in infos],  # e.g. "float32", "bfloat16"
         "meta": meta or {},
         "version": 1,
     }
@@ -39,8 +67,9 @@ def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(header, use_bin_type=True))
-        for a in arrs:
-            f.write(a.tobytes(order="C"))
+        for leaf, (shape, dt) in zip(leaves, infos):
+            for buf in _leaf_chunks(leaf, shape, dt.itemsize):
+                f.write(buf)
     os.replace(tmp, path)
 
 

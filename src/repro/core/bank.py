@@ -1,0 +1,465 @@
+"""Client bank: where the O(N) per-client state lives (DESIGN.md §15).
+
+After the cohort engine (DESIGN.md §13) the server model is O(1), but
+the client-side stacks — one model (and, LM-side, optimizer moments)
+per registered client — are still O(N), and a single device-resident
+``(N,)``-stacked pytree is the wall between fig11 and "millions of
+users": ~8.3 MB at N=10k, ~830 MB at N=1M. Each round only ever touches
+a K-client cohort (K ≪ N), and the :class:`repro.core.cohort.
+CohortSampler` is pure in ``(seed, t)``, so next round's K-slice is
+knowable in advance. :class:`ClientBank` exploits exactly that, behind
+three interchangeable backends:
+
+``device``
+    Today's layout: the stacked pytree lives on device, gathers and
+    scatters are device-side indexing. The default, and the bit-parity
+    baseline — every operation is the exact pre-bank expression.
+``host``
+    The bank lives in host (numpy) memory. A round gathers only the
+    K-slice onto device and scatters it back; device memory for client
+    state is O(K) regardless of N. A single background worker
+    double-buffers the pipeline: while round t trains, round t+1's
+    slice is staged host→device (``prefetch``) and round t's updates
+    drain device→host (``scatter``) — both off the hot path, so
+    steady-state rounds hide the copies entirely. The worker serializes
+    its tasks in submission order, which is the correctness argument:
+    a prefetch enqueued after a scatter observes that scatter's writes,
+    and the caller only enqueues a prefetch BEFORE the pending scatter
+    when the two cohorts are disjoint (see ``FedSimulator``).
+``sharded``
+    The bank is one jax.Array per leaf, sharded over the client axes of
+    a ``launch.mesh`` mesh (``launch.shardings.bank_sharding``) — the
+    multi-host answer, finally reusing the mesh/sharding layer beyond
+    the LLM path. Gathers/scatters are cross-shard device indexing;
+    per-device client-state memory is O(N / shards).
+
+The bank is structure-agnostic: it owns any pytree whose leaves carry a
+leading ``(N,)`` axis when ``stacked`` (the simulator's list of layer
+blocks, the LM path's ``params["client"]`` subtree, an optimizer-moment
+tree), or a single-copy pytree when not (the collapsed sfl/fl banks,
+which are O(1) anyway and always effectively device-resident).
+
+Whole-bank reductions (the evaluation-time ρ-mean, the ``set_cut``
+anchored merge, the Γ drift metric) stream the bank through device in
+``chunk_rows`` slices; with one chunk (every N ≤ chunk_rows, and always
+on the ``device`` backend) the computation is literally the pre-bank
+expression, bit for bit. Multi-chunk reductions accumulate partial f32
+sums in chunk order — last-ulp divergence from the single-chunk result
+is possible at N > chunk_rows and documented in DESIGN.md §15.
+
+Instrumentation (``repro.obs``): the recorder active at construction is
+captured for the bank's lifetime. Gauges ``bank_gather_wait_s`` (how
+long the round blocked on the staged slice — ~0 when prefetch hid the
+copy), ``bank_prefetch_s`` / ``bank_scatter_s`` (worker-side copy
+times), counters ``bank_prefetch_hit`` / ``bank_prefetch_miss``, and
+``stats()`` for benchmarks: resident bytes, peak device bytes, hit
+rates. The fig11 acceptance bar reads ``device_bytes_peak``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+
+BANK_BACKENDS = ("device", "host", "sharded")
+
+# whole-bank reductions stream through device this many rows at a time;
+# one chunk (N <= chunk_rows) reproduces the unchunked expression exactly
+DEFAULT_CHUNK_ROWS = 65536
+
+
+def tree_nbytes(tree) -> int:
+    """Total payload bytes of a pytree of arrays (np or jax)."""
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def _reshape_w(w, p):
+    return jnp.asarray(w).reshape((-1,) + (1,) * (p.ndim - 1))
+
+
+def make_bank(tree, *, n_clients: int, stacked: bool, backend: str = "device",
+              mesh=None, chunk_rows: int = DEFAULT_CHUNK_ROWS,
+              prefetch: bool = True) -> "ClientBank":
+    return ClientBank(tree, n_clients=n_clients, stacked=stacked,
+                      backend=backend, mesh=mesh, chunk_rows=chunk_rows,
+                      prefetch=prefetch)
+
+
+class ClientBank:
+    """Owns a per-client state pytree behind a residency backend."""
+
+    def __init__(self, tree, *, n_clients: int, stacked: bool,
+                 backend: str = "device", mesh=None,
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS, prefetch: bool = True):
+        if backend not in BANK_BACKENDS:
+            raise ValueError(
+                f"unknown bank backend {backend!r}; known: {BANK_BACKENDS}")
+        self.n_clients = int(n_clients)
+        self.stacked = bool(stacked)
+        # collapsed (single-copy) banks are O(1): residency is moot, the
+        # device layout is always correct — requested backend is kept in
+        # checkpoint meta by the caller, storage stays device-side
+        self.backend = backend if self.stacked else "device"
+        self.chunk_rows = int(chunk_rows)
+        self.prefetch_enabled = bool(prefetch) and self.backend == "host"
+        self._rec = obs.get_recorder()
+        self._mesh = None
+        self._shardings = None
+        if self.backend == "sharded":
+            from repro.launch.mesh import make_bank_mesh, n_client_shards
+
+            self._mesh = mesh if mesh is not None else make_bank_mesh()
+            shards = n_client_shards(self._mesh)
+            if self.n_clients % shards:
+                raise ValueError(
+                    f"sharded bank: N={self.n_clients} not divisible by "
+                    f"{shards} client shards (mesh {dict(self._mesh.shape)})")
+        # host-backend async pipeline state
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pending: list = []
+        self._staged: Optional[tuple] = None  # (t, idx, Future, bytes)
+        self._lock = threading.Lock()
+        # accounting
+        self._gathered_bytes = 0
+        self._staged_bytes = 0
+        self._peak_device_bytes = 0
+        self._slice_bytes = 0
+        self._hits = 0
+        self._misses = 0
+        self._gather_wait_s = 0.0
+        self._tree = self._ingest(tree)
+        self._note_device_bytes()
+
+    # -- storage ---------------------------------------------------------
+    @property
+    def tree(self):
+        """The bank as stored: jax arrays (``device``/``sharded``) or
+        numpy (``host``). Callers reading the host tree directly must
+        ``flush()`` first if a round is in flight (``FedSimulator`` does
+        this through ``state``)."""
+        return self._tree
+
+    def _ingest(self, tree):
+        if self.backend == "host":
+            # np.asarray of a jax array is a READ-ONLY device-buffer
+            # view — the in-place scatter needs writable storage. Plain
+            # writable numpy leaves (checkpoint restore, broadcast) pass
+            # through zero-copy.
+            def to_host(l):
+                a = l if isinstance(l, np.ndarray) else np.asarray(l)
+                return a if a.flags.writeable else a.copy()
+
+            return jax.tree.map(to_host, tree)
+        if self.backend == "sharded":
+            return jax.tree.map(self._shard_put, tree)
+        return jax.tree.map(jnp.asarray, tree)
+
+    def _shard_put(self, leaf):
+        from repro.launch.shardings import bank_sharding
+
+        leaf = jnp.asarray(leaf)
+        return jax.device_put(leaf, bank_sharding(self._mesh, leaf.ndim))
+
+    def replace(self, tree) -> None:
+        """Swap the bank's contents (set_cut re-partitions, collapsed
+        per-round updates, checkpoint restore). Drains the pipeline
+        first: a replace must observe every pending scatter."""
+        self.flush()
+        self._staged = None
+        self._tree = self._ingest(tree)
+        self._note_device_bytes()
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return tree_nbytes(self._tree)
+
+    @property
+    def device_bytes(self) -> int:
+        """Device-resident client-state bytes the bank holds NOW: the
+        full tree (``device``), the per-process shards (``sharded``), or
+        the staged + gathered K-slices (``host`` — the O(K) claim)."""
+        if self.backend == "device":
+            return self.nbytes
+        if self.backend == "sharded":
+            from repro.launch.mesh import n_client_shards
+
+            return self.nbytes // n_client_shards(self._mesh)
+        return self._gathered_bytes + self._staged_bytes
+
+    def _note_device_bytes(self) -> None:
+        self._peak_device_bytes = max(self._peak_device_bytes,
+                                      self.device_bytes)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "backend": self.backend,
+            "bank_bytes": self.nbytes,
+            "slice_bytes": self._slice_bytes,
+            "device_bytes": self.device_bytes,
+            "device_bytes_peak": max(self._peak_device_bytes,
+                                     self.device_bytes),
+            "prefetch_hits": self._hits,
+            "prefetch_misses": self._misses,
+            "gather_wait_s": self._gather_wait_s,
+        }
+
+    # -- worker (host backend) -------------------------------------------
+    def _submit(self, fn, *args) -> Future:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="bank")
+        fut = self._pool.submit(fn, *args)
+        with self._lock:
+            self._pending.append(fut)
+            # keep failed futures so flush() re-raises their exception
+            self._pending = [f for f in self._pending
+                             if not f.done() or f.exception() is not None]
+        return fut
+
+    def flush(self) -> None:
+        """Block until every enqueued scatter/prefetch has completed
+        (re-raising any worker exception). Whole-bank reads, ``replace``
+        and ``save`` go through here."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for f in pending:
+            f.result()
+
+    def close(self) -> None:
+        self.flush()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    # -- round path ------------------------------------------------------
+    def gather(self, idx, *, t: Optional[int] = None):
+        """Device-resident cohort slice (leading axis K). ``idx=None`` is
+        the identity cohort: the full bank (free on ``device``). On the
+        ``host`` backend a staged prefetch for ``(t, idx)`` is consumed
+        when present (gauge ``bank_gather_wait_s`` records how long the
+        round still had to wait — ~0 when the overlap worked); otherwise
+        the slice is copied synchronously after a pipeline flush."""
+        if self.backend == "device":
+            if idx is None:
+                return self._tree
+            jidx = jnp.asarray(idx)
+            return jax.tree.map(lambda b: b[jidx], self._tree)
+        if self.backend == "sharded":
+            if idx is None:
+                return self._tree
+            jidx = jnp.asarray(idx)
+            # cross-shard gather; the K-slice lands unsharded (replicated)
+            return jax.tree.map(lambda b: b[jidx], self._tree)
+        # host
+        staged = self._staged
+        if staged is not None and t is not None and staged[0] == t \
+                and staged[1] is not None and idx is not None \
+                and np.array_equal(staged[1], np.asarray(idx)):
+            self._staged = None
+            t0 = time.perf_counter()
+            out = staged[2].result()
+            wait = time.perf_counter() - t0
+            self._hits += 1
+            self._gather_wait_s += wait
+            self._rec.gauge("bank_gather_wait_s", wait)
+            self._rec.counter("bank_prefetch_hit")
+            self._gathered_bytes = staged[3]
+            self._staged_bytes = 0
+            self._note_device_bytes()
+            return out
+        self._misses += 1
+        self._rec.counter("bank_prefetch_miss")
+        self.flush()  # order after any pending scatter
+        self._staged = None
+        self._staged_bytes = 0
+        out = self._slice_to_device(idx)
+        self._gathered_bytes = tree_nbytes(out)
+        self._slice_bytes = self._gathered_bytes
+        self._note_device_bytes()
+        return out
+
+    def _slice_to_device(self, idx):
+        if idx is None:
+            return jax.tree.map(jnp.asarray, self._tree)
+        idx = np.asarray(idx)
+        return jax.tree.map(lambda b: jnp.asarray(b[idx]), self._tree)
+
+    def prefetch(self, t: int, idx) -> None:
+        """Stage round-``t``'s cohort slice host→device off the hot path
+        (host backend only; no-op otherwise). The caller guarantees
+        ordering vs in-flight scatters: enqueue BEFORE a pending scatter
+        only when the two cohorts are disjoint."""
+        if not self.prefetch_enabled or idx is None:
+            return
+        idx = np.asarray(idx)
+
+        def stage():
+            t0 = time.perf_counter()
+            out = self._slice_to_device(idx)
+            self._rec.gauge("bank_prefetch_s", time.perf_counter() - t0)
+            return out
+
+        fut = self._submit(stage)
+        nbytes = sum(
+            int(np.prod((len(idx),) + l.shape[1:])) * np.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(self._tree))
+        self._slice_bytes = max(self._slice_bytes, nbytes)
+        self._staged = (int(t), idx, fut, nbytes)
+        self._staged_bytes = nbytes
+        self._note_device_bytes()
+
+    def scatter(self, idx, updated, *, broadcast: bool = False) -> None:
+        """Fold a trained cohort back into the bank. ``idx=None`` is the
+        identity cohort (wholesale replace). ``broadcast=True`` writes
+        cohort row 0 to every bank row (the client-aggregating schemes'
+        model sync — inherently O(N)). Host-backend partial scatters are
+        ASYNC: the device→host drain runs on the worker, ordered before
+        any later prefetch/flush; duplicate cohort indices (the ρ
+        sampler's with-replacement draws) resolve to the last occurrence
+        on every backend."""
+        if self.backend in ("device", "sharded"):
+            if broadcast:
+                new = jax.tree.map(
+                    lambda b, u: jnp.broadcast_to(
+                        u[0][None], b.shape).astype(b.dtype) + 0.0,
+                    self._tree, updated)
+            elif idx is None:
+                new = updated
+            else:
+                jidx = jnp.asarray(idx)
+                new = jax.tree.map(lambda b, u: b.at[jidx].set(u),
+                                   self._tree, updated)
+            if self.backend == "sharded" and (broadcast or idx is not None):
+                # pin the result back to the bank sharding (`.at[].set`
+                # may leave the output replicated after a cross-shard
+                # scatter); a no-op when already laid out right
+                new = jax.tree.map(
+                    lambda b, old: jax.device_put(b, old.sharding),
+                    new, self._tree)
+            self._tree = new
+            self._note_device_bytes()
+            return
+        # host
+        if broadcast or idx is None:
+            self.flush()
+            if broadcast:
+                host = jax.tree.map(
+                    lambda b, u: np.broadcast_to(
+                        np.asarray(u[0])[None], b.shape).astype(
+                            b.dtype, copy=True),
+                    self._tree, updated)
+            else:
+                host = jax.tree.map(np.asarray, updated)
+            self._tree = host
+            return
+        idx = np.asarray(idx)
+        bank_leaves = jax.tree.leaves(self._tree)
+        upd_leaves, _treedef = jax.tree.flatten(updated)
+
+        def drain():
+            t0 = time.perf_counter()
+            for b, u in zip(bank_leaves, upd_leaves):
+                b[idx] = np.asarray(u)  # blocks until the round computed u
+            self._rec.gauge("bank_scatter_s", time.perf_counter() - t0)
+
+        self._submit(drain)
+
+    # -- whole-bank reductions (chunked through device) ------------------
+    def full_device(self):
+        """The whole bank on device — O(N) on purpose (drift metric when
+        explicitly enabled, small-N debugging). Flushes first."""
+        self.flush()
+        return jax.tree.map(jnp.asarray, self._tree)
+
+    def _chunks(self):
+        n = self.n_clients
+        step = max(1, self.chunk_rows)
+        for s in range(0, n, step):
+            yield s, min(n, s + step)
+
+    def rho_mean(self, rho):
+        """ρ-weighted mean over the bank axis → single-copy tree (the
+        evaluation-time global model). One chunk ⇒ exactly
+        ``jnp.sum(p * w, axis=0)`` on the full leaf — the pre-bank
+        expression, bit for bit (always true on ``device``)."""
+        if not self.stacked:
+            return self._tree
+        self.flush()
+        rho = np.asarray(rho)
+        if self.backend != "host" or self.n_clients <= self.chunk_rows:
+            tree = self._tree if self.backend != "host" \
+                else jax.tree.map(jnp.asarray, self._tree)
+            return jax.tree.map(
+                lambda p: jnp.sum(p * _reshape_w(rho, p), axis=0), tree)
+        acc = None
+        for s, e in self._chunks():
+            part = jax.tree.map(
+                lambda p: jnp.sum(jnp.asarray(p[s:e])
+                                  * _reshape_w(rho[s:e], p), axis=0),
+                self._tree)
+            acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
+        return acc
+
+    def merge_anchored(self, block, w):
+        """Anchored-delta ρ-average of one bank block → single copy:
+        ``anchor + Σ w (x − anchor)`` with row 0 as anchor — the same
+        estimator as ``protocol.aggregate_cohort`` (bit-exact pass-
+        through when all rows agree). One chunk ⇒ exactly
+        ``aggregate_cohort(block, w, anchor=block[0])``."""
+        from repro.core.protocol import aggregate_cohort
+
+        self.flush()
+        w = np.asarray(w)
+        if self.backend != "host" or self.n_clients <= self.chunk_rows:
+            blk = block if self.backend != "host" \
+                else jax.tree.map(jnp.asarray, block)
+            anchor = jax.tree.map(lambda p: p[0], blk)
+            return aggregate_cohort(blk, jnp.asarray(w), anchor=anchor)
+        anchor = jax.tree.map(lambda p: jnp.asarray(p[0]), block)
+        upd = None
+        for s, e in self._chunks():
+            part = jax.tree.map(
+                lambda p, a: jnp.sum(
+                    (jnp.asarray(p[s:e]).astype(jnp.float32)
+                     - a.astype(jnp.float32)[None])
+                    * _reshape_w(w[s:e], p), axis=0),
+                block, anchor)
+            upd = part if upd is None else jax.tree.map(jnp.add, upd, part)
+        return jax.tree.map(
+            lambda a, u: (a.astype(jnp.float32) + u).astype(a.dtype),
+            anchor, upd)
+
+    def broadcast_single(self, single):
+        """A single-copy block stacked to ``(N, ...)`` in this backend's
+        storage (``set_cut`` moving boundary layers client-ward)."""
+        n = self.n_clients
+        if self.backend == "host":
+            return jax.tree.map(
+                lambda x: np.broadcast_to(
+                    np.asarray(x)[None], (n,) + x.shape).astype(
+                        x.dtype, copy=True), single)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape) + 0.0, single)
+        if self.backend == "sharded":
+            stacked = jax.tree.map(self._shard_put, stacked)
+        return stacked
+
+    def drift(self, drift_fn) -> float:
+        """Γ drift proxy over the FULL bank via ``drift_fn`` (the jitted
+        ``ProtocolEngine.client_drift``). Device/sharded banks evaluate
+        in place; the host bank pays one O(N) host→device copy — which
+        is why ``SimConfig.drift_metric`` defaults off for it."""
+        if not self.stacked:
+            return 0.0
+        if self.backend == "host":
+            return float(drift_fn(self.full_device()))
+        return float(drift_fn(self._tree))

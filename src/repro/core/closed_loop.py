@@ -243,6 +243,12 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
             if log_every and (t + 1) % log_every == 0:
                 obslib.log(f"  round {t+1}/{rounds} cut={v} acc={acc:.3f} "
                            f"wall={t_wall:.2f}s")
+    if rec.enabled:
+        # bank residency summary for the run: which backend held the
+        # O(N) client state, its peak device footprint, prefetch hit
+        # rate (set_cut migrations flush the pipeline, so a dynamic-cut
+        # run's misses show up here)
+        rec.event("bank", name="bank", **sim.bank.stats())
     return ClosedLoopResult(
         name=name or schedule.name, cuts=cuts, records=records, curve=curve,
         final_acc=curve[-1][1], total_latency_s=t_wall, total_bits=total_bits,

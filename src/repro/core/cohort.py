@@ -160,6 +160,15 @@ class CohortSampler:
         w = self.rho[idx] / max(float(self.rho[idx].sum()), 1e-12)
         return idx.astype(np.int64), w.astype(np.float32)
 
+    def peek(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Pure lookahead: exactly what ``cohort(t)`` will return, with
+        no schedule state consumed — ``cohort`` is already pure in ``t``
+        (a fresh RNG per call), so peeking any number of times, in any
+        order, before or after a checkpoint/restore, cannot perturb the
+        cohorts a run replays. The bank prefetcher (``core.bank``) leans
+        on this to stage round t+1's K-slice while round t trains."""
+        return self.cohort(t)
+
     def _p(self) -> np.ndarray:
         p = self.rho.astype(np.float64)
         return p / p.sum()  # exact simplex for np.random.choice

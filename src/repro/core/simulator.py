@@ -57,6 +57,7 @@ import numpy as np
 
 from repro import obs
 from repro.configs.paper_cnn import CNNConfig
+from repro.core.bank import ClientBank
 from repro.core.cohort import cohort_stats, make_sampler
 from repro.core.protocol import SCHEMES, ProtocolEngine
 from repro.models import cnn
@@ -85,6 +86,18 @@ class SimConfig:
     cohort: Optional[int] = None
     sampler: str = "full"  # full | uniform | rho | latency
     cohort_seed: int = 0
+    # client-bank residency (core.bank): 'device' — today's stacked
+    # pytree, the bit-parity baseline; 'host' — bank in host memory,
+    # O(K) device bytes, double-buffered prefetch; 'sharded' — bank
+    # distributed over a launch.mesh. Collapsed banks (sfl/fl) are O(1)
+    # and stay device-resident whatever is requested.
+    bank: str = "device"
+    bank_prefetch: bool = True
+    # Γ drift metric needs the FULL bank on device every round — free
+    # for 'device'/'sharded', an O(N) copy that defeats the 'host'
+    # backend's overlap. None resolves to bank != 'host'; rounds report
+    # NaN when disabled.
+    drift_metric: Optional[bool] = None
 
 
 def _stack(tree, n):
@@ -129,22 +142,42 @@ class FedSimulator:
         # collapse it to one copy (every entry is identical anyway)
         spec = self.proto.spec
         self._bank_stacked = spec.split and not spec.client_aggregate
+        self._drift_enabled = (sim.drift_metric if sim.drift_metric is not None
+                               else sim.bank != "host")
         params = cnn.init_cnn(jax.random.key(seed), cnn_cfg)
         self.cut = sim.cut  # current cut; SimConfig.cut stays the initial one
         v = sim.cut
         if sim.scheme == "fl":
-            self.state = {"client": list(params), "server": []}
-        elif self._bank_stacked:
-            self.state = {"client": _stack(params[:v], sim.n_clients),
-                          "server": list(params[v:])}
-        else:  # sfl: single client copy + single server copy
-            self.state = {"client": list(params[:v]),
-                          "server": list(params[v:])}
+            client0, server = list(params), []
+        else:
+            client0, server = list(params[:v]), list(params[v:])
+        self.server = server  # the ONE aggregated server copy
+        # the bank owns the O(N) side behind the configured residency
+        # backend (core.bank); built empty so the initial broadcast lands
+        # directly in backend storage instead of stacking on device first
+        self.bank = ClientBank([], n_clients=sim.n_clients,
+                               stacked=self._bank_stacked, backend=sim.bank,
+                               prefetch=sim.bank_prefetch)
+        if self._bank_stacked:
+            self.bank.replace([self.bank.broadcast_single(b) for b in client0])
+        else:  # single client copy (sfl collapse / fl full model)
+            self.bank.replace(client0)
         # per-cut jit cache: dynamic splitting re-enters here with a new
         # static v; a constant schedule only ever compiles one entry
         self._round_fns: Dict[int, callable] = {}
         self._drift_fn = jax.jit(ProtocolEngine.client_drift)
         self._eval_fn = None  # built lazily (jitted forward + argmax count)
+
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> Dict:
+        """Read view of the federated state: ``{"client": bank tree,
+        "server": list of blocks}``. Drains the bank's async pipeline
+        first, so what you read reflects every completed round. Client
+        leaves are in the bank backend's storage — jax arrays for
+        ``device``/``sharded``, numpy for ``host``."""
+        self.bank.flush()
+        return {"client": self.bank.tree, "server": self.server}
 
     # ------------------------------------------------------------------
     def cohort_for_round(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -188,8 +221,9 @@ class FedSimulator:
             n_clients=self.n_participants,
             raw_bits_per_elem=self.sim.bytes_per_elem * 8)
         if v != old:
-            client = list(self.state["client"])
-            server = list(self.state["server"])
+            self.bank.flush()  # a migration must see every pending scatter
+            client = list(self.bank.tree)
+            server = list(self.server)
 
             def numel(blocks):  # total elements across a list of blocks
                 return sum(int(np.prod(l.shape))
@@ -200,10 +234,11 @@ class FedSimulator:
                 moved = numel(server[:v - old]) if v > old \
                     else numel(client[v:]) // n
                 if v > old:  # boundary layers move client-ward: broadcast
-                    client = client + [_stack(b, n) for b in server[:v - old]]
+                    client = client + [self.bank.broadcast_single(b)
+                                       for b in server[:v - old]]
                     server = server[v - old:]
                 else:        # client-ward layers merge into the ONE server copy
-                    server = [self._merge_bank_block(b)
+                    server = [self.bank.merge_anchored(b, self.rho)
                               for b in client[v:]] + server
                     client = client[:v]
             else:            # single-copy bank: pure list re-partition
@@ -213,7 +248,8 @@ class FedSimulator:
                 else:
                     moved = numel(client[v:])
                     client, server = client[:v], client[v:] + server
-            self.state = {"client": client, "server": server}
+            self.server = server
+            self.bank.replace(client)
             self.cut = v
             if self._rec.enabled:
                 # measured from the tensors that actually changed sides
@@ -233,16 +269,6 @@ class FedSimulator:
                     cut=v, cut_from=old, participants=self.n_participants,
                     measured=measured, modeled=bits)
         return bits
-
-    def _merge_bank_block(self, block):
-        """Anchored-delta ρ-average of one bank block (N, ...) → (...):
-        bit-exact pass-through when the N entries agree (so migration
-        round-trips are lossless from any aggregated state). The same
-        ``aggregate_cohort`` estimator the round finalization uses."""
-        from repro.core.protocol import aggregate_cohort
-
-        anchor = jax.tree.map(lambda p: p[0], block)
-        return aggregate_cohort(block, self.rho, anchor=anchor)
 
     def _round_fn(self, v: int):
         fn = self._round_fns.get(v)
@@ -363,7 +389,8 @@ class FedSimulator:
                   **cohort_stats(idx, w, self.sim.n_clients))
         rec.event("round", name="round", loss=out["loss"],
                   client_drift=out["client_drift"], cut=self.cut,
-                  participants=self.n_participants)
+                  participants=self.n_participants,
+                  bank=self.bank.stats())
         return out
 
     def _run_round_impl(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
@@ -373,32 +400,40 @@ class FedSimulator:
             raise ValueError(
                 f"run_round: got data for {x.shape[0]} clients, round "
                 f"cohort has {K} participants (see cohort_for_round)")
-        seed = self.proto.round_seed(self._t)
+        t = self._t
+        seed = self.proto.round_seed(t)
         self._t += 1
-        bank = self.state["client"]
         identity = self.sampler.identity
-        if self._bank_stacked and not identity:
-            jidx = jnp.asarray(idx)
-            client_in = jax.tree.map(lambda b: b[jidx], bank)
-        else:
-            client_in = bank
+        stacked = self._bank_stacked
+        gidx = None if (identity or not stacked) else idx
+        client_in = self.bank.gather(gidx, t=t) if stacked else self.bank.tree
+        # double-buffer: when round t+1's cohort is disjoint from this
+        # one, its slice can stage host→device WHILE this round trains
+        # (the bank's worker queue already orders it after round t-1's
+        # scatter); overlapping cohorts must wait until this round's
+        # scatter is enqueued, or the prefetch would read stale rows
+        pre_idx = None
+        if stacked and not identity and self.bank.prefetch_enabled:
+            pre_idx, _ = self.sampler.peek(t + 1)
+            if np.intersect1d(idx, pre_idx).size == 0:
+                self.bank.prefetch(t + 1, pre_idx)
+                pre_idx = None
         out, loss = self._round_fn(self.cut)(
-            {"client": client_in, "server": self.state["server"]},
+            {"client": client_in, "server": self.server},
             x, y, seed, jnp.asarray(w))
-        if self._bank_stacked:
-            if identity:
-                new_bank = out["client"]
-            else:
-                # duplicate indices (rho sampler) resolve arbitrarily —
-                # each is an independent local update of the same client
-                jidx = jnp.asarray(idx)
-                new_bank = jax.tree.map(lambda b, u: b.at[jidx].set(u),
-                                        bank, out["client"])
-            self.state = {"client": new_bank, "server": out["server"]}
-            drift = float(self._drift_fn(new_bank))
+        self.server = out["server"]
+        if stacked:
+            # duplicate indices (rho sampler) resolve to the LAST
+            # occurrence on every backend — each is an independent local
+            # update of the same client
+            self.bank.scatter(gidx, out["client"])
+            if pre_idx is not None:
+                self.bank.prefetch(t + 1, pre_idx)
+            drift = self.bank.drift(self._drift_fn) if self._drift_enabled \
+                else float("nan")
         else:
             # collapsed bank: one copy — drift is zero by construction
-            self.state = out
+            self.bank.replace(out["client"])
             drift = 0.0
         bits = self.comm_bits_per_round()
         return {"loss": float(loss), "client_drift": drift,
@@ -406,17 +441,11 @@ class FedSimulator:
 
     def global_params(self):
         """Global evaluation model: ρ-weighted mean over the full client
-        bank + the single aggregated server copy."""
-        client = self.state["client"]
-        if self._bank_stacked:
-            w = self.rho
-
-            def mean(p):
-                ww = w.reshape((-1,) + (1,) * (p.ndim - 1))
-                return jnp.sum(p * ww, axis=0)
-
-            client = [jax.tree.map(mean, b) for b in client]
-        return list(client) + list(self.state["server"])
+        bank + the single aggregated server copy. The bank streams the
+        mean in chunks (``core.bank.rho_mean``) — on the ``device``
+        backend it is the single-chunk expression, bit-identical to the
+        pre-bank layout."""
+        return list(self.bank.rho_mean(self.rho)) + list(self.server)
 
     def evaluate(self, x: np.ndarray, y: np.ndarray, batch: int = 512) -> float:
         """Accuracy of the global model. The forward pass + argmax count
@@ -489,9 +518,13 @@ class FedSimulator:
                 "n_clients": self.sim.n_clients,
                 "cohort": self.n_participants,
                 "sampler": self.sim.sampler,
-                "cohort_seed": self.sim.cohort_seed}
+                "cohort_seed": self.sim.cohort_seed,
+                "bank_backend": self.sim.bank}
         if extra_meta:
             meta.update(extra_meta)
+        # `state` flushes the bank pipeline; save_checkpoint streams the
+        # leaves chunk-wise — a host bank saves with ZERO device traffic
+        # and no backend ever materializes a second full bank copy
         save_checkpoint(path, self.state, meta)
 
     def restore(self, path: str) -> Dict:
@@ -504,6 +537,18 @@ class FedSimulator:
         if meta.get("scheme") != self.sim.scheme:
             raise ValueError(f"checkpoint scheme {meta.get('scheme')!r} != "
                              f"simulator scheme {self.sim.scheme!r}")
+        # pre-bank checkpoints carry no backend field: they were device-
+        # resident by construction. A mismatch must fail loudly — a
+        # 'host' run silently promoted to 'device' on resume would put
+        # the O(N) bank right back on the device this backend exists to
+        # protect (and vice versa would quietly change residency).
+        saved_bank = meta.get("bank_backend", "device")
+        if saved_bank != self.sim.bank:
+            raise ValueError(
+                f"checkpoint bank backend {saved_bank!r} != simulator "
+                f"{self.sim.bank!r}: restoring would silently move the "
+                f"client bank; rebuild with SimConfig(bank={saved_bank!r}) "
+                f"or re-save from a matching run")
         for key, got in (("cohort", self.n_participants),
                          ("sampler", self.sim.sampler),
                          ("cohort_seed", self.sim.cohort_seed)):
@@ -513,11 +558,12 @@ class FedSimulator:
                     f"resuming would replay a different cohort schedule")
         if self.proto.spec.split and meta.get("cut") != self.cut:
             self.set_cut(int(meta["cut"]))
-        self.state, meta = load_checkpoint(path, self.state)
-        # back onto the device: the bank scatter (`.at[idx].set`) and the
-        # jitted round functions want jax arrays, not the host copies
-        # load_checkpoint restores
-        self.state = jax.tree.map(jnp.asarray, self.state)
+        state, meta = load_checkpoint(path, self.state)
+        # load_checkpoint restores host copies; the bank re-ingests them
+        # into its own storage (a 'host' bank keeps the numpy leaves —
+        # zero device traffic on restore), the server goes back on device
+        self.bank.replace(state["client"])
+        self.server = jax.tree.map(jnp.asarray, state["server"])
         self._t = int(meta["t"])
         return meta
 

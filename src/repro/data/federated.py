@@ -66,6 +66,43 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
     return [np.asarray(sorted(v), dtype=np.int64) for v in out]
 
 
+class CyclicPartition:
+    """O(1)-memory partition view for huge client counts (fig11 at
+    N=1M): client ``i`` owns ``part_size`` consecutive sample indices
+    starting at ``(i * part_size) % n_samples``, wrapping cyclically.
+    ``iid_partition`` would materialize a million index arrays before
+    the first round ever runs; this computes each client's indices on
+    access and supports the same len/indexing/iteration surface, so
+    ``client_batches``/``round_batches`` (which only ever touch the
+    round's K participants) work unchanged. Sample coverage matches the
+    IID split when ``n_clients * part_size >= n_samples``; samples are
+    shared across clients when the wrap overlaps — the deliberate
+    trade for never holding O(N) partition state."""
+
+    def __init__(self, n_samples: int, n_clients: int,
+                 part_size: Optional[int] = None):
+        if n_samples <= 0 or n_clients <= 0:
+            raise ValueError("CyclicPartition needs n_samples, n_clients > 0")
+        self.n_samples = int(n_samples)
+        self.n_clients = int(n_clients)
+        self.part_size = int(part_size) if part_size \
+            else max(1, self.n_samples // self.n_clients)
+
+    def __len__(self) -> int:
+        return self.n_clients
+
+    def __getitem__(self, i: int) -> np.ndarray:
+        i = int(i)
+        if not -self.n_clients <= i < self.n_clients:
+            raise IndexError(f"client {i} outside bank of {self.n_clients}")
+        start = (i % self.n_clients) * self.part_size % self.n_samples
+        return (start + np.arange(self.part_size)) % self.n_samples
+
+    def __iter__(self):
+        for i in range(self.n_clients):
+            yield self[i]
+
+
 def rho_weights(parts: List[np.ndarray]) -> np.ndarray:
     """ρ^n = D^n / D (eq. 5)."""
     d = np.asarray([len(p) for p in parts], np.float64)
@@ -77,6 +114,10 @@ def replacement_fraction(parts: List[np.ndarray], batch: int,
     """Fraction of (participating) clients whose partition is smaller
     than ``batch`` — i.e. whose draws sample WITH replacement and repeat
     data within a mini-batch. 0.0 means every draw is replacement-free."""
+    if isinstance(parts, CyclicPartition):
+        # every client owns exactly part_size samples — answer without
+        # iterating the (possibly million-entry) partition
+        return float(parts.part_size < batch)
     sel = parts if idx is None else [parts[i] for i in idx]
     if not sel:
         return 0.0

@@ -25,6 +25,15 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_bank_mesh():
+    """Mesh for the sharded client bank (``core.bank``): every local
+    device on the client ("data") axis — bank leaves are per-client CNN
+    blocks with no tensor-parallel dim to feed "model". Standard axis
+    names, so ``client_axes``/``bank_sharding`` work on this mesh and on
+    the production meshes alike."""
+    return jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+
+
 def client_axes(mesh) -> Tuple[str, ...]:
     """Mesh axes that jointly form the federated-client axis."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -182,6 +182,16 @@ def split_param_shardings(split_tree, *, mesh, fsdp: bool = False,
     }
 
 
+def bank_sharding(mesh, ndim: int) -> NamedSharding:
+    """(N, ...) client-bank leaves (``core.bank`` sharded backend): the
+    leading client axis over the mesh's client axes, everything else
+    replicated — bank entries are whole per-client copies, so the only
+    parallelism that helps is across clients."""
+    caxes = client_axes(mesh)
+    spec = [caxes if len(caxes) > 1 else caxes[0]] + [None] * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
 def _client_size(mesh) -> int:
     return int(np.prod([mesh.shape[a] for a in client_axes(mesh)]))
 

@@ -145,6 +145,37 @@ def train_lm(args) -> dict:
         lm.init_lm(jax.random.key(args.seed), plans[cut0], jnp.float32), n)
     opt = make_optimizer(args.optimizer, args.lr)
     opt_state = opt.init(params)
+    # --bank host: the O(N) client-side stacks (params + any optimizer
+    # moments) move into host-resident ClientBanks; each step gathers
+    # only the K-cohort slice onto device and the banks double-buffer
+    # the copies behind the jitted step (core.bank)
+    pbank, obanks = None, {}
+    if args.bank != "device":
+        if args.bank != "host":
+            raise SystemExit("--bank sharded is CNN-mode only; LM runs "
+                             "shard the client bank via launch.shardings "
+                             "on real meshes")
+        if schedule is not None:
+            raise SystemExit("--bank host cannot run --dynamic-cut in LM "
+                             "mode: resplit_lm_params needs the full bank "
+                             "device-resident")
+        if sampler is None:
+            raise SystemExit("--bank host needs --cohort in LM mode (the "
+                             "identity cohort re-gathers the whole bank "
+                             "every step)")
+        from repro.core.bank import ClientBank
+
+        pbank = ClientBank(params["client"], n_clients=n, stacked=True,
+                           backend="host")
+        params = dict(params, client=None)  # the bank owns the client side
+        for mk in ("m", "v", "mu"):
+            if mk in opt_state:
+                obanks[mk] = ClientBank(opt_state[mk]["client"], n_clients=n,
+                                        stacked=True, backend="host")
+                opt_state[mk] = dict(opt_state[mk], client=None)
+        off = pbank.nbytes + sum(b.nbytes for b in obanks.values())
+        obs.log(f"client bank: host backend ({off / 1e6:.2f} MB params"
+                f"{' + moments' if obanks else ''} off-device)")
     steps_by_cut = {cut0: jax.jit(alg.make_train_step(plans[cut0], tcfg, opt,
                                                       K, engine=engine))}
 
@@ -212,13 +243,45 @@ def train_lm(args) -> dict:
                 # optimizer moments), train with unbiased cohort weights,
                 # scatter back (sfl broadcasts its new global client model)
                 idx, w = sampler.cohort(i)
-                cp = alg.gather_cohort(params, idx)
-                cop = alg.gather_cohort_opt(opt_state, idx)
+                nxt = None
+                if pbank is None:
+                    cp = alg.gather_cohort(params, idx)
+                    cop = alg.gather_cohort_opt(opt_state, idx)
+                else:
+                    cp = dict(params, client=pbank.gather(idx, t=i))
+                    cop = dict(opt_state)
+                    for mk, bk in obanks.items():
+                        cop[mk] = dict(opt_state[mk],
+                                       client=bk.gather(idx, t=i))
+                    # disjoint next cohort: stage its slice while this
+                    # step trains (else wait until the scatter enqueues)
+                    nxt, _ = sampler.peek(i + 1)
+                    if np.intersect1d(idx, nxt).size == 0:
+                        pbank.prefetch(i + 1, nxt)
+                        for bk in obanks.values():
+                            bk.prefetch(i + 1, nxt)
+                        nxt = None
                 cp, cop, m = steps_by_cut[cut](
                     cp, cop, dict(batch, rho=jnp.asarray(w)))
-                params = alg.scatter_cohort(
-                    params, cp, idx, broadcast_client=spec.client_aggregate)
-                opt_state = alg.scatter_cohort_opt(opt_state, cop, idx)
+                if pbank is None:
+                    params = alg.scatter_cohort(
+                        params, cp, idx,
+                        broadcast_client=spec.client_aggregate)
+                    opt_state = alg.scatter_cohort_opt(opt_state, cop, idx)
+                else:
+                    pbank.scatter(idx, cp["client"],
+                                  broadcast=spec.client_aggregate)
+                    params = dict(params, server=cp["server"])
+                    opt_state = dict(cop)
+                    for mk, bk in obanks.items():
+                        # moments scatter per-row even under sfl: each
+                        # client keeps its OWN moment history
+                        bk.scatter(idx, cop[mk]["client"])
+                        opt_state[mk] = dict(cop[mk], client=None)
+                    if nxt is not None:
+                        pbank.prefetch(i + 1, nxt)
+                        for bk in obanks.values():
+                            bk.prefetch(i + 1, nxt)
             losses.append(float(m["loss"]))  # sync point inside the span
         if rec.enabled:
             jax.effects_barrier()  # drain the step's ledger callbacks
@@ -236,10 +299,24 @@ def train_lm(args) -> dict:
         if (i + 1) % args.log_every == 0:
             obs.log(f"step {i+1}/{args.steps} loss {losses[-1]:.4f} "
                     f"({(time.time()-t0)/(i+1):.2f} s/step)")
+    if pbank is not None:
+        pbank.flush()
+        for bk in obanks.values():
+            bk.flush()
+        st = pbank.stats()
+        obs.log(f"bank[host]: peak device client-state "
+                f"{st['device_bytes_peak'] / 1e6:.2f} MB of "
+                f"{st['bank_bytes'] / 1e6:.2f} MB bank; prefetch "
+                f"{st['prefetch_hits']} hits / {st['prefetch_misses']} "
+                f"misses")
+        if rec.enabled:
+            rec.event("bank", name="bank", **st)
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, params,
+        ckpt = params if pbank is None else dict(params, client=pbank.tree)
+        save_checkpoint(args.checkpoint, ckpt,
                         {"arch": cfg.name, "algo": args.scheme, "cut": cut,
-                         "steps": args.steps, "final_loss": losses[-1]})
+                         "steps": args.steps, "final_loss": losses[-1],
+                         "bank_backend": args.bank})
         obs.log(f"checkpoint -> {args.checkpoint}")
     # unified per-round traffic (sysmodel.traffic via the LLM adapter)
     # priced for the K participants of a step; this run computes in
@@ -286,7 +363,20 @@ def train_cnn(args) -> dict:
 
     ds = make_image_dataset(args.dataset, n=args.n_samples, seed=args.seed)
     train, test = ds.split(0.9)
-    parts = iid_partition(len(train.x), args.clients, seed=args.seed)
+    if args.clients > len(train.x):
+        # more clients than samples: iid_partition would hand out EMPTY
+        # partitions (and materialize O(N) index arrays at bank scale);
+        # the cyclic view shares samples across clients instead — the
+        # million-client regime only ever touches the round's K slices
+        from repro.data.federated import CyclicPartition
+
+        parts = CyclicPartition(len(train.x), args.clients)
+        rho = None  # equal part sizes -> uniform ρ without an O(N) list
+        obs.log(f"data: cyclic partition view ({args.clients} clients over "
+                f"{len(train.x)} samples, {parts.part_size}/client)")
+    else:
+        parts = iid_partition(len(train.x), args.clients, seed=args.seed)
+        rho = rho_weights(parts)
     sim = FedSimulator(LIGHT_CONFIG,
                        SimConfig(scheme=args.scheme, cut=args.cut,
                                  n_clients=args.clients, batch=args.batch,
@@ -296,8 +386,12 @@ def train_cnn(args) -> dict:
                                  cohort=args.cohort,
                                  sampler=args.sampler if args.cohort
                                  else "full",
-                                 cohort_seed=args.seed),
-                       rho=rho_weights(parts), seed=args.seed)
+                                 cohort_seed=args.seed,
+                                 bank=args.bank),
+                       rho=rho, seed=args.seed)
+    if args.bank != "device":
+        obs.log(f"client bank: {args.bank} backend "
+                f"({sim.bank.nbytes / 1e6:.2f} MB off-device)")
     if args.cohort:
         obs.log(f"cohort: {sim.n_participants}/{args.clients} clients per "
                 f"round ({sim.sampler.kind} sampler)")
@@ -342,6 +436,14 @@ def train_cnn(args) -> dict:
                 f"{cb['total_bytes']/1e6:.3f} MB ({args.scheme}, "
                 f"{sim.n_participants} participants)")
         result = {"accuracy": acc, "replacement_fraction": rf, **cb}
+    if args.bank != "device":
+        st = sim.bank.stats()
+        obs.log(f"bank[{st['backend']}]: peak device client-state "
+                f"{st['device_bytes_peak'] / 1e6:.2f} MB of "
+                f"{st['bank_bytes'] / 1e6:.2f} MB bank; prefetch "
+                f"{st['prefetch_hits']} hits / {st['prefetch_misses']} "
+                f"misses")
+        result["bank"] = st
     if args.checkpoint:
         sim.save(args.checkpoint, {"scheme_args": args.scheme})
         obs.log(f"checkpoint -> {args.checkpoint} (round {sim._t})")
@@ -415,6 +517,13 @@ def main(argv=None):
     p.add_argument("--resume", default=None,
                    help="CNN mode: resume a FedSimulator checkpoint (restores "
                         "params, round counter and cut)")
+    p.add_argument("--bank", default="device",
+                   choices=["device", "host", "sharded"],
+                   help="client-bank residency (core.bank): device (stacked "
+                        "pytree, the default), host (bank in host memory, "
+                        "O(K) device bytes + prefetch; LM mode needs "
+                        "--cohort and a static cut), sharded (bank over a "
+                        "device mesh; CNN mode)")
     p.add_argument("--uplink-codec", default="fp32",
                    help="cut-layer uplink codec: fp32|bf16|fp8|int8|int4|topkP")
     p.add_argument("--downlink-codec", default="fp32",

@@ -39,6 +39,17 @@ def _fmt_bits(bits) -> str:
     return f"{int(bits)} b"
 
 
+def _fmt_bytes(b) -> str:
+    try:
+        b = float(b)
+    except (TypeError, ValueError):
+        return str(b)
+    for unit, scale in (("GB", 1e9), ("MB", 1e6), ("kB", 1e3)):
+        if abs(b) >= scale:
+            return f"{b / scale:.3f} {unit}"
+    return f"{int(b)} B"
+
+
 def _fmt_s(sec) -> str:
     try:
         sec = float(sec)
@@ -221,6 +232,36 @@ def render_ddqn(events: List[dict], max_rows: int = 12) -> Optional[str]:
     return title + "\n" + _table(headers, rows)
 
 
+def render_bank(events: List[dict]) -> Optional[str]:
+    """Client-bank residency: backend, O(N) bank vs peak device bytes,
+    prefetch hit rate (DESIGN.md §15). Reads the end-of-run ``bank``
+    event; falls back to per-round ``bank`` snapshots for the peak."""
+    banks = [e for e in events if e.get("kind") == "bank"]
+    snaps = [e["bank"] for e in events
+             if e.get("kind") == "round" and isinstance(e.get("bank"), dict)]
+    if not banks and not snaps:
+        return None
+    st = dict(banks[-1]) if banks else dict(snaps[-1])
+    if snaps:  # the true high-water mark across rounds
+        st["device_bytes_peak"] = max(
+            [s.get("device_bytes_peak", 0) for s in snaps]
+            + [st.get("device_bytes_peak", 0)])
+    lines = ["== client bank =="]
+    lines.append(f"  backend              {st.get('backend', '?')}")
+    bank_b = st.get("bank_bytes")
+    if bank_b is not None:
+        lines.append(f"  bank bytes (O(N))    {_fmt_bytes(bank_b)}")
+    peak = st.get("device_bytes_peak")
+    if peak is not None:
+        lines.append(f"  peak device bytes    {_fmt_bytes(peak)}")
+    hits = int(st.get("prefetch_hits", 0))
+    miss = int(st.get("prefetch_misses", 0))
+    if hits or miss:
+        lines.append(f"  prefetch             {hits} hits / {miss} misses"
+                     f"  gather wait {_fmt_s(st.get('gather_wait_s', 0.0))}")
+    return "\n".join(lines)
+
+
 def render_serve(events: List[dict]) -> Optional[str]:
     toks = [e for e in events if e.get("kind") == "serve_token"]
     if not toks:
@@ -245,6 +286,7 @@ def render_report(events: List[dict],
     recon, bad = render_reconciliation(events)
     sections.append(recon)
     sections.append(render_cohort(events))
+    sections.append(render_bank(events))
     sections.append(render_ddqn(events))
     sections.append(render_serve(events))
     n = sum(1 for _ in events)

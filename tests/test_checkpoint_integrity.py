@@ -148,3 +148,117 @@ class TestSimulatorResume:
                                        batch=4), seed=0)
         with pytest.raises(ValueError, match="scheme"):
             other.restore(path)
+
+
+class TestBankCheckpoint:
+    """Bank residency through the checkpoint boundary (DESIGN.md §15):
+    the backend is recorded in the meta, validated on load, and
+    interrupt+resume is bit-identical whichever backend held the bank."""
+
+    def _sim(self, bank="device", cut=2):
+        from repro.configs.paper_cnn import LIGHT_CONFIG
+        from repro.core.simulator import FedSimulator, SimConfig
+
+        return FedSimulator(
+            LIGHT_CONFIG,
+            SimConfig(scheme="sfl_ga", cut=cut, n_clients=3, batch=4,
+                      bank=bank, drift_metric=True), seed=0)
+
+    def _data(self, seed):
+        rng = np.random.RandomState(seed)
+        return (rng.rand(3, 1, 4, 28, 28, 1).astype(np.float32),
+                rng.randint(0, 10, (3, 1, 4)))
+
+    def test_backend_mismatch_rejected(self, tmp_path):
+        """A 'host' checkpoint restored into a 'device' simulator would
+        silently promote the O(N) bank back onto the device — fail
+        loudly instead (and vice versa)."""
+        path = os.path.join(tmp_path, "host.ckpt")
+        self._sim(bank="host").save(path)
+        assert load_checkpoint_meta(path)["bank_backend"] == "host"
+        with pytest.raises(ValueError, match="bank backend"):
+            self._sim(bank="device").restore(path)
+        path2 = os.path.join(tmp_path, "dev.ckpt")
+        self._sim(bank="device").save(path2)
+        with pytest.raises(ValueError, match="bank backend"):
+            self._sim(bank="host").restore(path2)
+
+    def test_prebank_checkpoint_restores_as_device(self, tmp_path):
+        """Checkpoints written before the bank existed carry no backend
+        field — they were device-resident by construction."""
+        path = os.path.join(tmp_path, "old.ckpt")
+        src = self._sim()
+        src.run_round(*self._data(0))
+        from repro.checkpoint import save_checkpoint
+
+        meta = {"t": src._t, "cut": src.cut, "scheme": "sfl_ga",
+                "n_clients": 3, "cohort": 3, "sampler": "full",
+                "cohort_seed": 0}  # no bank_backend key
+        save_checkpoint(path, src.state, meta)
+        dst = self._sim(bank="device")
+        dst.restore(path)
+        assert dst._t == 1
+        with pytest.raises(ValueError, match="bank backend"):
+            self._sim(bank="host").restore(path)
+
+    @pytest.mark.parametrize("bank", ["device", "host", "sharded"])
+    def test_resume_bit_identical_per_backend(self, tmp_path, bank):
+        """Interrupt + resume on each backend equals the uninterrupted
+        device run — residency never leaks into the results."""
+        path = os.path.join(tmp_path, f"{bank}.ckpt")
+        ref = self._sim()  # uninterrupted device reference
+        half = self._sim(bank=bank)
+        for i in range(4):
+            data = self._data(i)
+            ref.run_round(*data)
+            if i < 2:
+                half.run_round(*data)
+        half.save(path)
+        resumed = self._sim(bank=bank)
+        meta = resumed.restore(path)
+        assert resumed._t == 2 and meta["bank_backend"] == bank
+        for i in range(2, 4):
+            resumed.run_round(*self._data(i))
+        for a, b in zip(jax.tree.leaves(ref.state),
+                        jax.tree.leaves(resumed.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_host_and_device_checkpoints_carry_identical_state(self, tmp_path):
+        """Same rounds on either backend → identical leaves in the file
+        (the payload is residency-agnostic; only the meta differs)."""
+        pd = os.path.join(tmp_path, "d.ckpt")
+        ph = os.path.join(tmp_path, "h.ckpt")
+        for bank, path in (("device", pd), ("host", ph)):
+            sim = self._sim(bank=bank)
+            for i in range(2):
+                sim.run_round(*self._data(i))
+            sim.save(path)
+        like = self._sim().state
+        dev, md = load_checkpoint(pd, like)
+        hst, mh = load_checkpoint(ph, like)
+        assert md["bank_backend"] == "device" and mh["bank_backend"] == "host"
+        for a, b in zip(jax.tree.leaves(dev), jax.tree.leaves(hst)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_streamed_save_bytes_identical(self, tmp_path, monkeypatch):
+        """The chunked writer's output is byte-for-byte the single-shot
+        format — chunk size is an implementation detail, not a format."""
+        import jax.numpy as jnp
+
+        from repro.checkpoint import checkpoint as ckmod
+
+        tree = {"a": jnp.arange(900, dtype=jnp.float32).reshape(30, 30),
+                "h": np.arange(64, dtype=np.int8).reshape(8, 8),
+                "s": jnp.float32(3.5)}
+        p1 = os.path.join(tmp_path, "whole.ckpt")
+        save_checkpoint(p1, tree, {"m": 1})
+        monkeypatch.setattr(ckmod, "SAVE_CHUNK_BYTES", 64)
+        p2 = os.path.join(tmp_path, "chunked.ckpt")
+        save_checkpoint(p2, tree, {"m": 1})
+        with open(p1, "rb") as f1, open(p2, "rb") as f2:
+            assert f1.read() == f2.read()
+        loaded, meta = load_checkpoint(
+            p2, jax.tree.map(lambda x: np.zeros_like(np.asarray(x)), tree))
+        assert meta == {"m": 1}
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+            np.testing.assert_array_equal(np.asarray(a), b)

@@ -115,6 +115,21 @@ class TestSampler:
         assert i0.shape == (K,)  # block fading varies the pick over rounds
         assert all(s.cohort(0)[0].tolist() == i0.tolist() for _ in range(2))
 
+    def test_peek_is_pure_lookahead(self):
+        """peek(t) == cohort(t), and peeking — any number of times, in
+        any order — perturbs no later cohort (the bank prefetcher's
+        correctness precondition)."""
+        for kind in ("uniform", "rho", "latency"):
+            s = make_sampler(kind, N, K, rho=_rho(N), seed=7)
+            pi, pw = s.peek(5)
+            s.peek(0)
+            s.peek(9)  # interleaved peeks consume no schedule state
+            ci, cw = s.cohort(5)
+            np.testing.assert_array_equal(pi, ci)
+            np.testing.assert_array_equal(pw, cw)
+            ref = make_sampler(kind, N, K, rho=_rho(N), seed=7)
+            np.testing.assert_array_equal(s.cohort(6)[0], ref.cohort(6)[0])
+
     def test_rho_cohort_ht_weights(self):
         rho = _rho(8)
         idx = np.asarray([1, 4, 6])
@@ -295,6 +310,19 @@ class TestCohortResume:
         for a, b in zip(jax.tree.leaves(ref.state),
                         jax.tree.leaves(resumed.state)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_peek_matches_cohort_across_restore(self, tmp_path):
+        """peek(t+1) then cohort_for_round(t+1) agree — including when a
+        checkpoint/restore sits between the peek and the round."""
+        kw = dict(cohort=K, sampler="uniform", cohort_seed=5)
+        path = str(tmp_path / "peek.ckpt")
+        sim = _sim(**kw)
+        peeked, _ = sim.sampler.peek(3)
+        sim.save(path)
+        resumed = _sim(**kw)
+        resumed.restore(path)
+        np.testing.assert_array_equal(peeked, resumed.sampler.peek(3)[0])
+        np.testing.assert_array_equal(peeked, resumed.cohort_for_round(3)[0])
 
     def test_restore_rejects_cohort_mismatch(self, tmp_path):
         path = str(tmp_path / "c.ckpt")
