@@ -101,7 +101,7 @@ def run_one(n_clients: int, cohort: int, rounds: int, n_samples: int,
         m = one_round()
         times.append(time.perf_counter() - t0)
         loss = m["loss"]
-    sim.bank.flush()  # drain the async pipeline before reading stats
+    sim.close()  # drain the async pipeline + release the bank worker
     st = sim.bank.stats()
     return {
         "n_clients": n_clients,

@@ -174,6 +174,7 @@ class ClientBank:
         first: a replace must observe every pending scatter."""
         self.flush()
         self._staged = None
+        self._staged_bytes = 0
         self._tree = self._ingest(tree)
         self._note_device_bytes()
 
@@ -235,10 +236,21 @@ class ClientBank:
             f.result()
 
     def close(self) -> None:
+        """Drain the pipeline and release the worker thread. Safe to
+        call repeatedly; the bank stays readable afterwards, and a later
+        scatter/prefetch lazily recreates the pool. Every run-owning
+        caller (``FedSimulator.close``, ``train_lm``, fig11) closes its
+        banks so worker threads don't accumulate across a sweep."""
         self.flush()
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+
+    def __enter__(self) -> "ClientBank":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- round path ------------------------------------------------------
     def gather(self, idx, *, t: Optional[int] = None):
@@ -325,7 +337,9 @@ class ClientBank:
         ASYNC: the device→host drain runs on the worker, ordered before
         any later prefetch/flush; duplicate cohort indices (the ρ
         sampler's with-replacement draws) resolve to the last occurrence
-        on every backend."""
+        on every backend. Wholesale and broadcast scatters invalidate
+        any staged prefetch — they rewrite every row, so the staged
+        slice is stale regardless of cohort disjointness."""
         if self.backend in ("device", "sharded"):
             if broadcast:
                 new = jax.tree.map(
@@ -351,6 +365,12 @@ class ClientBank:
         # host
         if broadcast or idx is None:
             self.flush()
+            # wholesale/broadcast writes rewrite EVERY row, so a staged
+            # prefetch — even for a disjoint cohort — is stale now.
+            # Drop it: the next gather degrades to a miss and re-slices
+            # the post-broadcast bank instead of serving old rows.
+            self._staged = None
+            self._staged_bytes = 0
             if broadcast:
                 host = jax.tree.map(
                     lambda b, u: np.broadcast_to(

@@ -249,6 +249,9 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
         # rate (set_cut migrations flush the pipeline, so a dynamic-cut
         # run's misses show up here)
         rec.event("bank", name="bank", **sim.bank.stats())
+    # the run owns the bank's worker thread: release it (the sim stays
+    # usable — a later round lazily restarts the worker)
+    sim.close()
     return ClosedLoopResult(
         name=name or schedule.name, cuts=cuts, records=records, curve=curve,
         final_acc=curve[-1][1], total_latency_s=t_wall, total_bits=total_bits,

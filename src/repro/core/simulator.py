@@ -158,6 +158,17 @@ class FedSimulator:
         self.bank = ClientBank([], n_clients=sim.n_clients,
                                stacked=self._bank_stacked, backend=sim.bank,
                                prefetch=sim.bank_prefetch)
+        if sim.bank == "host" and self._bank_stacked and self.sampler.identity:
+            # train_lm rejects this combination outright; the simulator
+            # keeps it legal (the backend-parity tests lean on it) but
+            # says so — every round pays a full O(N) host→device gather
+            # (a guaranteed prefetch miss) plus an O(N) wholesale
+            # scatter, defeating the O(K) residency the backend buys
+            obs.log(
+                f"bank[host]: identity cohort (sampler={sim.sampler!r}, "
+                f"cohort=None) degrades every round to a full O(N) "
+                f"host<->device round-trip; set SimConfig.cohort < "
+                f"n_clients={sim.n_clients} to get the O(K) residency")
         if self._bank_stacked:
             self.bank.replace([self.bank.broadcast_single(b) for b in client0])
         else:  # single client copy (sfl collapse / fl full model)
@@ -178,6 +189,19 @@ class FedSimulator:
         ``device``/``sharded``, numpy for ``host``."""
         self.bank.flush()
         return {"client": self.bank.tree, "server": self.server}
+
+    def close(self) -> None:
+        """Release the bank's worker thread (host backend). The
+        simulator stays usable — state/evaluate read as before, and a
+        later round lazily restarts the worker — but sweeps that build
+        many simulators must close each one or threads accumulate."""
+        self.bank.close()
+
+    def __enter__(self) -> "FedSimulator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------
     def cohort_for_round(self, t: int) -> Tuple[np.ndarray, np.ndarray]:

@@ -254,9 +254,14 @@ def train_lm(args) -> dict:
                         cop[mk] = dict(opt_state[mk],
                                        client=bk.gather(idx, t=i))
                     # disjoint next cohort: stage its slice while this
-                    # step trains (else wait until the scatter enqueues)
+                    # step trains (else wait until the scatter enqueues).
+                    # Aggregating schemes (sfl) BROADCAST-scatter — every
+                    # row rewrites, so disjointness proves nothing and
+                    # any early stage would be invalidated anyway; always
+                    # prefetch after the scatter there.
                     nxt, _ = sampler.peek(i + 1)
-                    if np.intersect1d(idx, nxt).size == 0:
+                    if not spec.client_aggregate \
+                            and np.intersect1d(idx, nxt).size == 0:
                         pbank.prefetch(i + 1, nxt)
                         for bk in obanks.values():
                             bk.prefetch(i + 1, nxt)
@@ -300,9 +305,11 @@ def train_lm(args) -> dict:
             obs.log(f"step {i+1}/{args.steps} loss {losses[-1]:.4f} "
                     f"({(time.time()-t0)/(i+1):.2f} s/step)")
     if pbank is not None:
-        pbank.flush()
+        # close() drains the pipeline AND releases the worker threads;
+        # the banks stay readable for the stats/checkpoint reads below
+        pbank.close()
         for bk in obanks.values():
-            bk.flush()
+            bk.close()
         st = pbank.stats()
         obs.log(f"bank[host]: peak device client-state "
                 f"{st['device_bytes_peak'] / 1e6:.2f} MB of "

@@ -211,6 +211,50 @@ class TestClientBankUnit:
         np.testing.assert_array_equal(bank.tree["w"],
                                       np.full((5, 4), 9, np.float32))
 
+    def test_broadcast_scatter_invalidates_staged_prefetch(self):
+        """A broadcast scatter rewrites EVERY bank row — a prefetch
+        staged earlier (even for a disjoint cohort) is stale and must
+        not be served: the next gather has to return broadcast rows."""
+        bank = ClientBank(self._tree(), n_clients=5, stacked=True,
+                          backend="host")
+        bank.prefetch(1, [2, 3])  # disjoint from the scattering cohort
+        upd = {"w": jnp.full((2, 4), 100.0), "b": jnp.full((2,), 100.0)}
+        bank.scatter([0, 1], upd, broadcast=True)
+        got = bank.gather([2, 3], t=1)  # must miss, not consume stale rows
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.full((2, 4), 100, np.float32))
+        st = bank.stats()
+        assert (st["prefetch_hits"], st["prefetch_misses"]) == (0, 1)
+
+    def test_wholesale_scatter_invalidates_staged_prefetch(self):
+        """Same contract for the idx=None (identity cohort) scatter."""
+        bank = ClientBank(self._tree(), n_clients=5, stacked=True,
+                          backend="host")
+        bank.prefetch(1, [2, 3])
+        new = {"w": np.full((5, 4), 7, np.float32),
+               "b": np.full((5,), 7, np.float32)}
+        bank.scatter(None, new)
+        got = bank.gather([2, 3], t=1)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.full((2, 4), 7, np.float32))
+        assert bank.stats()["prefetch_misses"] == 1
+
+    def test_close_releases_worker_and_stays_usable(self):
+        """close() (and the context-manager form) drains + shuts down
+        the worker pool; the bank stays readable, and a later scatter
+        lazily restarts the worker so close is safe to call mid-sweep."""
+        with ClientBank(self._tree(), n_clients=5, stacked=True,
+                        backend="host") as bank:
+            idx = [0, 2]
+            upd = jax.tree.map(lambda x: x + 1.0, bank.gather(idx, t=0))
+            bank.scatter(idx, upd)
+        assert bank._pool is None  # exited the with: worker released
+        before = np.copy(bank.tree["w"])
+        bank.scatter([1], jax.tree.map(lambda x: x[:1] * 0, bank.gather([1])))
+        bank.close()
+        assert bank._pool is None and bank.tree["w"][1, 0] == 0.0
+        np.testing.assert_array_equal(bank.tree["w"][0], before[0])
+
     def test_chunked_rho_mean_matches_unchunked(self):
         t = self._tree(n=7)
         rho = _rho(7, seed=3)
