@@ -1,0 +1,203 @@
+"""Fig. 12 (extension) — buffered-async vs the global barrier:
+accuracy per unit of virtual wall-clock under stragglers.
+
+The paper's latency model (§IV eq. 29) prices per-client completion
+times χ+ψ, but both its stacks still run every round as a global
+barrier: the round costs the SLOWEST client's completion. The
+event-driven engine (DESIGN.md §16, ``core.async_engine``) merges the
+B earliest completions instead, staleness-discounting late deltas —
+so under a heterogeneous fleet the model keeps moving while stragglers
+finish. This benchmark runs both loops per scheme (sfl_ga / psl / sfl)
+over the SAME heterogeneous completion draw
+(``sysmodel.latency.completion_time_fn``, slowest/fastest ≥ 4×) and
+reports:
+
+* the (virtual wall-clock, accuracy) curve of each loop — the sync
+  barrier charges max over the cohort per round, the async engine's
+  clock advances event by event;
+* accuracy at the matched wall-clock budget (the shorter run's final
+  clock) — the headline: async ≥ sync at equal virtual time under
+  stragglers;
+* exact traffic reconciliation for BOTH loops: every obs ``traffic``
+  event's measured ledger must equal the ``sysmodel/traffic`` model
+  bit for bit (the async split prices compute legs at dispatch size
+  and the model-sync uplink at merge size).
+
+Run:  PYTHONPATH=src:. python benchmarks/fig12_async.py [--fast]
+          [--buffer B] [--straggler X]
+Fast mode (CI): N=24, K=6, B=2, 6 sync rounds per scheme.
+"""
+from __future__ import annotations
+
+import argparse
+import warnings
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import FULL
+from repro import obs
+
+CUT = 1
+BATCH = 8
+SCHEMES = ("sfl_ga", "psl", "sfl")
+
+
+def _acc_at(curve, budget_s: float) -> float:
+    """Step interpolation: last accuracy reached within the budget."""
+    acc = 0.0
+    for t, a in curve:
+        if t <= budget_s:
+            acc = a
+    return acc
+
+
+def _check_traffic(events) -> Dict[str, int]:
+    ok = bad = 0
+    for e in events:
+        if e.get("kind") != "traffic":
+            continue
+        meas, mod = e["measured"], e["modeled"]
+        cats = [c for c in meas if c in mod]
+        if cats and all(int(meas[c]) == int(mod[c]) for c in cats):
+            ok += 1
+        else:
+            bad += 1
+    return {"ok": ok, "bad": bad}
+
+
+def run_one(scheme: str, *, n_clients: int, cohort: int, buffer: int,
+            rounds: int, n_samples: int, straggler: float = 8.0,
+            eval_every: int = 2, seed: int = 0) -> Dict:
+    from repro.configs.paper_cnn import LIGHT_CONFIG
+    from repro.core.protocol import round_seed
+    from repro.core.simulator import FedSimulator, SimConfig
+    from repro.data import iid_partition, make_image_dataset
+    from repro.data.federated import round_batches
+    from repro.sysmodel.latency import completion_time_fn
+
+    ds = make_image_dataset("mnist", n=n_samples, seed=seed)
+    train, test = ds.split(0.9)
+    parts = iid_partition(len(train.x), n_clients, seed=seed)
+    completion = completion_time_fn(n_clients, seed=seed,
+                                    straggler_factor=straggler, batch=BATCH)
+
+    def make_sim(rec):
+        with obs.use_recorder(rec):
+            return FedSimulator(
+                LIGHT_CONFIG,
+                SimConfig(scheme=scheme, cut=CUT, n_clients=n_clients,
+                          batch=BATCH, cohort=cohort, sampler="uniform",
+                          cohort_seed=seed),
+                seed=seed)
+
+    # -- sync barrier: each round waits for its slowest participant ----
+    rec_s = obs.Recorder()
+    sim = make_sim(rec_s)
+    rng = np.random.RandomState(seed)
+    clock, sync_curve = 0.0, []
+    with obs.use_recorder(rec_s), warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for t in range(rounds):
+            rec_s.set_round(t)
+            idx, _ = sim.cohort_for_round(sim._t)
+            xs, ys = round_batches(train, parts, BATCH, 1, rng, idx=idx)
+            sim.run_round(xs, ys)
+            clock += float(np.asarray(completion(t))[idx].max())
+            if (t + 1) % eval_every == 0 or t == rounds - 1:
+                sync_curve.append((clock, sim.evaluate(test.x, test.y)))
+    sim.close()
+    sync_recon = _check_traffic(rec_s.events)
+
+    # -- buffered async: same completion draw, merge B earliest -------
+    rec_a = obs.Recorder()
+    sim = make_sim(rec_a)
+
+    def data_fn(d, idx):
+        rng_d = np.random.RandomState(int(round_seed(seed, d)) % (2**31 - 1))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            return round_batches(train, parts, BATCH, 1, rng_d,
+                                 idx=np.asarray(idx))
+
+    with obs.use_recorder(rec_a):
+        eng = sim.async_engine(data_fn, buffer=buffer,
+                               completion_fn=completion)
+        async_curve, merges = [], 0
+        # equal virtual-time budget: run merges until the sync clock
+        while eng.clock < clock:
+            eng.step()
+            merges += 1
+            if merges % eval_every == 0:
+                async_curve.append((eng.clock,
+                                    sim.evaluate(test.x, test.y)))
+        for _ in eng.drain():
+            pass
+        async_curve.append((eng.clock, sim.evaluate(test.x, test.y)))
+    st = eng.stats()
+    sim.close()
+    async_recon = _check_traffic(rec_a.events)
+    stale = [float(e["staleness_mean"]) for e in rec_a.events
+             if e.get("kind") == "async" and e.get("name") == "merge"]
+
+    budget = min(clock, async_curve[-1][0])
+    return {
+        "scheme": scheme,
+        "sync_clock_s": clock,
+        "async_clock_s": async_curve[-1][0],
+        "sync_rounds": rounds,
+        "async_merges": st["merges"],
+        "sync_acc_at_budget": _acc_at(sync_curve, budget),
+        "async_acc_at_budget": _acc_at(async_curve, budget),
+        "mean_staleness": float(np.mean(stale)) if stale else 0.0,
+        "sync_curve": sync_curve,
+        "async_curve": async_curve,
+        "traffic_ok": (sync_recon["bad"] == 0 and async_recon["bad"] == 0
+                       and sync_recon["ok"] > 0 and async_recon["ok"] > 0),
+        "traffic_events": {"sync": sync_recon, "async": async_recon},
+    }
+
+
+def run(fast: bool = None, buffer: int = None,
+        straggler: float = 8.0) -> List[Dict]:
+    fast = (not FULL) if fast is None else fast
+    if fast:
+        n, k, rounds, n_samples = 24, 6, 6, 600
+    else:
+        n, k, rounds, n_samples = 64, 8, 30, 2000
+    b = buffer or max(1, k // 3)
+    return [run_one(s, n_clients=n, cohort=k, buffer=b, rounds=rounds,
+                    n_samples=n_samples, straggler=straggler)
+            for s in SCHEMES]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI scale: N=24, K=6, 6 sync rounds")
+    ap.add_argument("--buffer", type=int, default=None,
+                    help="async merge buffer B (default K//3)")
+    ap.add_argument("--straggler", type=float, default=8.0,
+                    help="slowest/fastest completion ratio")
+    args = ap.parse_args(argv)
+    rows = run(fast=args.fast or None, buffer=args.buffer,
+               straggler=args.straggler)
+    print("scheme,sync_rounds,async_merges,sync_clock_s,async_acc@budget,"
+          "sync_acc@budget,mean_staleness,traffic_ok")
+    for r in rows:
+        print(f"{r['scheme']},{r['sync_rounds']},{r['async_merges']},"
+              f"{r['sync_clock_s']:.1f},{r['async_acc_at_budget']:.3f},"
+              f"{r['sync_acc_at_budget']:.3f},{r['mean_staleness']:.2f},"
+              f"{r['traffic_ok']}")
+    n_bad = sum(not r["traffic_ok"] for r in rows)
+    obs.log(f"# async engine merged {sum(r['async_merges'] for r in rows)} "
+            f"buffers across {len(rows)} schemes within the sync budget; "
+            f"traffic reconciliation "
+            f"{'EXACT on both loops' if not n_bad else f'{n_bad} FAILURES'}")
+    if n_bad:
+        raise SystemExit(1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -164,6 +164,24 @@ def bench_fig11_bank_host():
                r["prefetch_hits"], r["prefetch_misses"], r["round_ms"]))
 
 
+def bench_fig12():
+    """Buffered-async vs barrier (DESIGN.md §16): accuracy at the
+    matched virtual-clock budget, exact traffic reconciliation on both
+    loops (the async split of the sysmodel rows must price to the
+    measured ledger bit for bit)."""
+    from benchmarks import fig12_async as f
+
+    rows = {r["scheme"]: r for r in f.run()}
+    if any(not r["traffic_ok"] for r in rows.values()):
+        raise AssertionError("async/sync traffic reconciliation mismatch")
+    ga = rows["sfl_ga"]
+    return ("acc@budget async=%.3f sync=%.3f merges=%d sync_clock=%.1fs "
+            "staleness=%.2f traffic_exact=True"
+            % (ga["async_acc_at_budget"], ga["sync_acc_at_budget"],
+               ga["async_merges"], ga["sync_clock_s"],
+               ga["mean_staleness"]))
+
+
 def bench_kernels():
     from benchmarks import kernels_bench as f
 
@@ -184,6 +202,7 @@ BENCHES = [
     ("fig10_closed_loop", bench_fig10),
     ("fig11_scale", bench_fig11),
     ("fig11_scale_bank_host", bench_fig11_bank_host),
+    ("fig12_async", bench_fig12),
 ]
 
 

@@ -52,6 +52,11 @@ class CuttingEnvConfig:
     # K-ways and the DDQN observes the K participants' gains (state_dim
     # = K+1). None = everyone (the paper's setting).
     cohort: Optional[int] = None
+    # buffered-async congestion observations (DESIGN.md §16): append the
+    # event engine's queue depth and mean staleness (normalized) to the
+    # state so the policy sees merge-pipeline pressure alongside the
+    # channel. Default off — state_dim (and trained policies) unchanged.
+    async_obs: bool = False
 
 
 class CuttingPointEnv:
@@ -77,12 +82,21 @@ class CuttingPointEnv:
         self.n_actions = len(cfg.phis) * self.n_codecs
         self.n_participants = cfg.cohort or cfg.n_clients
         assert 1 <= self.n_participants <= cfg.n_clients
-        self.state_dim = self.n_participants + 1
+        self.state_dim = self.n_participants + 1 + (2 if cfg.async_obs else 0)
         self._dists = None
         self._cohort_idx = None  # external override (closed loop)
+        self._async_stats = (0.0, 0.0)  # (queue depth, mean staleness)
         self.reset()
 
     # --------------------------------------------------------------
+    def set_async_stats(self, queue_depth: float,
+                        mean_staleness: float) -> None:
+        """Feed the event engine's congestion state into the next
+        observation (``cfg.async_obs`` runs; ``core.closed_loop`` calls
+        this before each policy query). No-op state-wise when
+        ``async_obs`` is off."""
+        self._async_stats = (float(queue_depth), float(mean_staleness))
+
     def set_cohort(self, idx) -> None:
         """Pin the participant set used for every subsequent gain draw
         (``None`` reverts to the env's own uniform per-round sampling).
@@ -114,7 +128,13 @@ class CuttingPointEnv:
         # log-gain normalized to ~[-1,1]; cumulative cost normalized by horizon
         g = np.log10(self.gains) / 10.0 + 1.0
         cum = self.cum_cost / (self.cfg.horizon * 10.0)
-        return np.concatenate([g, [cum]]).astype(np.float32)
+        tail = [cum]
+        if self.cfg.async_obs:
+            # queue depth normalized by the in-flight target K, staleness
+            # by a ~10-merge scale (both O(1) for healthy pipelines)
+            q, s = self._async_stats
+            tail = [cum, q / self.n_participants, s / 10.0]
+        return np.concatenate([g, tail]).astype(np.float32)
 
     def reset(self) -> np.ndarray:
         self.t = 0
@@ -218,7 +238,8 @@ class BatchedCuttingPointEnv:
         self.n_actions = len(cfg.phis) * self.n_codecs
         self.n_participants = cfg.cohort or cfg.n_clients
         assert 1 <= self.n_participants <= cfg.n_clients
-        self.state_dim = self.n_participants + 1
+        self.state_dim = self.n_participants + 1 + (2 if cfg.async_obs else 0)
+        self._async_stats = (0.0, 0.0)
 
         # per-action lookup tables (action = (v-1) * n_codecs + c)
         xbits, g_conv, g_dist, fracs, priv = [], [], [], [], []
@@ -266,12 +287,26 @@ class BatchedCuttingPointEnv:
         ray = jax.random.exponential(key, det.shape)  # |h|^2~Exp(1)
         return det * ray
 
+    def set_async_stats(self, queue_depth: float,
+                        mean_staleness: float) -> None:
+        """Scalar congestion state broadcast to every env in the batch
+        (``cfg.async_obs``). NOTE: baked into the NEXT ``_obs`` via a
+        host-side constant — set it between jitted step calls, not
+        inside a scan."""
+        self._async_stats = (float(queue_depth), float(mean_staleness))
+
     def _obs(self, state: BatchedEnvState):
         import jax.numpy as jnp
 
         g = jnp.log10(state.gains) / 10.0 + 1.0
         cum = state.cum_cost / (self.cfg.horizon * 10.0)
-        return jnp.concatenate([g, cum[:, None]], axis=1).astype(jnp.float32)
+        cols = [g, cum[:, None]]
+        if self.cfg.async_obs:
+            q, s = self._async_stats
+            cols.append(jnp.broadcast_to(
+                jnp.asarray([q / self.n_participants, s / 10.0],
+                            jnp.float32), (g.shape[0], 2)))
+        return jnp.concatenate(cols, axis=1).astype(jnp.float32)
 
     def reset(self, key=None) -> Tuple[BatchedEnvState, Any]:
         """Fresh lockstep episodes. Without an explicit key the env's own

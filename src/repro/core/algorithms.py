@@ -361,6 +361,68 @@ def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
     return train_step
 
 
+def make_gen_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
+                  k: int, rho: Optional[jnp.ndarray] = None,
+                  engine: Optional[ProtocolEngine] = None) -> Callable:
+    """Dispatch-time compute for the buffered-async LM path (DESIGN.md
+    §16): the exact τ-step local training of ``make_train_step``, minus
+    the round-end aggregation — the engine staleness-weights the merges
+    instead. Returns ``(loss, server_delta, client)``: the server-side
+    DELTA against the dispatch-time model (``protocol.merge_async``
+    folds it into the live server at merge time) and the absolute
+    client rows (sfl_ga / psl personalize client sides; they scatter
+    back into the bank as-is).
+
+    Scope: schemes WITHOUT client aggregation (sfl_ga / psl) and
+    stateless-per-client optimizers (sgd) — staleness-discounting
+    per-client optimizer moments is not defined here."""
+    assert tcfg.algo in ALGOS, tcfg.algo
+    engine = _engine_for(tcfg) if engine is None else engine
+    if engine.spec.client_aggregate:
+        raise ValueError(
+            f"async LM path covers sfl_ga/psl (personalized client "
+            f"sides); {tcfg.algo!r} aggregates client models every round")
+    rho = uniform_rho(k) if rho is None else rho
+    loss_fn = make_loss_fn(plan, tcfg, rho, engine=engine)
+    tau = tcfg.resolved_tau
+
+    def local_step(params, opt_state, batch, seed, w):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, seed, w)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, dict(metrics, loss=loss)
+
+    def gen_step(params, opt_state, batch):
+        seed = batch.get("seed", 0)
+        w = batch.get("rho")
+        server0 = params["server"]
+        if tau == 1:
+            params, opt_state, metrics = local_step(params, opt_state,
+                                                    batch, seed, w)
+        else:
+            xs = jnp.moveaxis(batch["tokens"], 1, 0)
+            ys = jnp.moveaxis(batch["labels"], 1, 0)
+            seeds = engine.epoch_seeds(seed, xs.shape[0])
+
+            def body(carry, sl):
+                p, s = carry
+                t, l, sd = sl
+                p, s, m = local_step(p, s, {"tokens": t, "labels": l}, sd, w)
+                return (p, s), m
+
+            (params, opt_state), ms = jax.lax.scan(
+                body, (params, opt_state), (xs, ys, seeds))
+            metrics = jax.tree.map(jnp.mean, ms)
+        delta = jax.tree.map(
+            lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
+            params["server"], server0)
+        return {"loss": metrics["loss"], "server_delta": delta,
+                "client": params["client"]}, opt_state
+
+    return gen_step
+
+
 # ---------------------------------------------------------------------------
 # Serving steps (used by the decode/prefill dry-run shapes)
 # ---------------------------------------------------------------------------

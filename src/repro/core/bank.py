@@ -410,7 +410,10 @@ class ClientBank:
         """ρ-weighted mean over the bank axis → single-copy tree (the
         evaluation-time global model). One chunk ⇒ exactly
         ``jnp.sum(p * w, axis=0)`` on the full leaf — the pre-bank
-        expression, bit for bit (always true on ``device``)."""
+        expression, bit for bit (always true on ``device``). Multiple
+        chunks accumulate in float64 on the host and round ONCE, so the
+        result stays within 1 ulp of the single-chunk expression (not
+        bit-exact — DESIGN.md §15)."""
         if not self.stacked:
             return self._tree
         self.flush()
@@ -420,21 +423,29 @@ class ClientBank:
                 else jax.tree.map(jnp.asarray, self._tree)
             return jax.tree.map(
                 lambda p: jnp.sum(p * _reshape_w(rho, p), axis=0), tree)
+        rho64 = rho.astype(np.float64)
+
+        def part(p, s, e):
+            w = rho64[s:e].reshape((-1,) + (1,) * (p.ndim - 1))
+            return (np.asarray(p[s:e], np.float64) * w).sum(axis=0)
+
         acc = None
         for s, e in self._chunks():
-            part = jax.tree.map(
-                lambda p: jnp.sum(jnp.asarray(p[s:e])
-                                  * _reshape_w(rho[s:e], p), axis=0),
-                self._tree)
-            acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
-        return acc
+            ps = jax.tree.map(lambda p: part(p, s, e), self._tree)
+            acc = ps if acc is None else jax.tree.map(np.add, acc, ps)
+        return jax.tree.map(
+            lambda a, p: jnp.asarray(a.astype(np.asarray(p).dtype)),
+            acc, self._tree)
 
     def merge_anchored(self, block, w):
         """Anchored-delta ρ-average of one bank block → single copy:
         ``anchor + Σ w (x − anchor)`` with row 0 as anchor — the same
         estimator as ``protocol.aggregate_cohort`` (bit-exact pass-
         through when all rows agree). One chunk ⇒ exactly
-        ``aggregate_cohort(block, w, anchor=block[0])``."""
+        ``aggregate_cohort(block, w, anchor=block[0])``. Multiple chunks
+        accumulate the anchored deltas in float64 on the host and round
+        ONCE — within 1 ulp of single-chunk, not bit-exact (DESIGN.md
+        §15)."""
         from repro.core.protocol import aggregate_cohort
 
         self.flush()
@@ -444,19 +455,21 @@ class ClientBank:
                 else jax.tree.map(jnp.asarray, block)
             anchor = jax.tree.map(lambda p: p[0], blk)
             return aggregate_cohort(blk, jnp.asarray(w), anchor=anchor)
-        anchor = jax.tree.map(lambda p: jnp.asarray(p[0]), block)
+        anchor = jax.tree.map(lambda p: np.asarray(p[0], np.float64), block)
+        w64 = w.astype(np.float64)
+
+        def part(p, a, s, e):
+            wb = w64[s:e].reshape((-1,) + (1,) * (p.ndim - 1))
+            return ((np.asarray(p[s:e], np.float64) - a[None]) * wb).sum(0)
+
         upd = None
         for s, e in self._chunks():
-            part = jax.tree.map(
-                lambda p, a: jnp.sum(
-                    (jnp.asarray(p[s:e]).astype(jnp.float32)
-                     - a.astype(jnp.float32)[None])
-                    * _reshape_w(w[s:e], p), axis=0),
-                block, anchor)
-            upd = part if upd is None else jax.tree.map(jnp.add, upd, part)
+            ps = jax.tree.map(lambda p, a: part(p, a, s, e), block, anchor)
+            upd = ps if upd is None else jax.tree.map(np.add, upd, ps)
         return jax.tree.map(
-            lambda a, u: (a.astype(jnp.float32) + u).astype(a.dtype),
-            anchor, upd)
+            lambda p, a, u: jnp.asarray(
+                (a + u).astype(np.asarray(p).dtype)),
+            block, anchor, upd)
 
     def broadcast_single(self, single):
         """A single-copy block stacked to ``(N, ...)`` in this backend's
@@ -476,10 +489,35 @@ class ClientBank:
     def drift(self, drift_fn) -> float:
         """Γ drift proxy over the FULL bank via ``drift_fn`` (the jitted
         ``ProtocolEngine.client_drift``). Device/sharded banks evaluate
-        in place; the host bank pays one O(N) host→device copy — which
-        is why ``SimConfig.drift_metric`` defaults off for it."""
+        in place; the host bank pays one O(N) host→device copy — the
+        bit-parity form ``SimConfig.drift_metric=True`` selects. The
+        auto default streams instead (``drift_streamed``)."""
         if not self.stacked:
             return 0.0
         if self.backend == "host":
             return float(drift_fn(self.full_device()))
         return float(drift_fn(self._tree))
+
+    def drift_streamed(self) -> float:
+        """Γ chunk-streamed through the bank surface: per leaf,
+        Σ_n‖p_n − mean‖² = Σ_n‖p_n‖² − ‖Σ_n p_n‖²/N, accumulated in
+        float64 over ``chunk_rows`` slices — the host bank never
+        materializes on device, so Γ costs no device memory at all.
+        Algebraically equal to ``drift``; the two-pass-free form trades
+        bit-exactness for streaming (catastrophic cancellation is
+        bounded by clamping at 0), which is why the bit-parity tests pin
+        ``drift`` and the host default reports this one (DESIGN.md
+        §15)."""
+        if not self.stacked:
+            return 0.0
+        self.flush()
+        n = self.n_clients
+        total = 0.0
+        for p in jax.tree.leaves(self._tree):
+            s1, s2 = 0.0, 0.0
+            for s, e in self._chunks():
+                c = np.asarray(p[s:e], np.float64)
+                s1 = s1 + c.sum(axis=0)
+                s2 = s2 + float(np.square(c).sum())
+            total += s2 - float(np.square(s1).sum()) / n
+        return max(total, 0.0)

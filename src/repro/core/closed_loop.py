@@ -130,8 +130,8 @@ def _fixed_alloc_latency(env, v: int) -> float:
 def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
                     rounds: int, *, alloc: str = "opt", eval_every: int = 10,
                     batch_seed: int = 0, skip_batches: int = 0,
-                    name: Optional[str] = None,
-                    log_every: int = 0) -> ClosedLoopResult:
+                    name: Optional[str] = None, log_every: int = 0,
+                    async_engine=None) -> ClosedLoopResult:
     """Run ``rounds`` of live training under a per-round cut schedule.
 
     ``sim`` is a :class:`repro.core.simulator.FedSimulator`; ``env`` a
@@ -151,6 +151,18 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
     observation and the P2.1 bandwidth split cover exactly the clients
     that train), and the migration pricing. Full participation (the
     default identity cohort) reproduces pre-cohort runs bit for bit.
+
+    ``async_engine`` (an :class:`repro.core.async_engine.AsyncRoundEngine`
+    built over ``sim`` with its own pure data stream) swaps the barrier
+    round for one buffered-async merge per iteration: wall-clock comes
+    from the engine's virtual clock (the per-client completion draws)
+    instead of the P2.1 barrier latency, the engine's queue depth and
+    mean staleness feed the policy observation (``env.set_async_stats``
+    — visible when the env was built with ``async_obs=True``), and a cut
+    migration drains the in-flight queue first (payload shapes are
+    cut-static). The env still advances each round so the policy sees
+    live fading. Cohorts follow the engine's admission stream, so the
+    env keeps its own per-round cohort draw for the channel state.
     """
     assert env.n_codecs == 1, "closed loop prices the cut-only action space"
     assert env.n_participants == sim.n_participants, \
@@ -162,7 +174,10 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
     for i in range(skip_batches):
         idx, _ = sim.cohort_for_round(t0 + i)
         round_batches(train, parts, sim.sim.batch, sim.sim.tau, rng, idx=idx)
-    threaded = sim.n_participants < sim.sim.n_clients
+    # async mode: cohorts follow the engine's admission stream (refills
+    # are not round-aligned), so the env keeps its own channel cohort
+    threaded = (sim.n_participants < sim.sim.n_clients
+                and async_engine is None)
     idx, _w = sim.cohort_for_round(sim._t)
     if threaded:
         env.set_cohort(idx)
@@ -179,8 +194,18 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
     for t in range(rounds):
         if rec.enabled:
             rec.set_round(sim._t)
+        if async_engine is not None:
+            # congestion view for the policy: merge-queue depth + mean
+            # staleness of the in-flight set (async_obs envs append them
+            # to the state; others ignore the call)
+            env.set_async_stats(async_engine.queue_depth,
+                                async_engine.mean_staleness())
         v = schedule(t, obs)
         with rec.span("migration", cut=v):
+            if async_engine is not None and v != sim.cut:
+                # in-flight payload shapes are cut-static: merge the
+                # queue down before the boundary layers move
+                async_engine.drain()
             mig = sim.set_cut(v)  # zero-traffic no-op when v is unchanged
             mig_lat = 0.0
             if mig["total_bits"]:
@@ -211,8 +236,15 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
         if done:
             obs = env.reset()  # episode boundary: fresh fading, policy continues
         t_round = time.perf_counter()
-        m = sim.run_round(*round_batches(train, parts, sim.sim.batch,
-                                         sim.sim.tau, rng, idx=idx))
+        if async_engine is not None:
+            clock0 = async_engine.clock
+            m = async_engine.step()
+            # the event schedule's own wall-clock (per-client completion
+            # draws) replaces the P2.1 barrier latency
+            lat = async_engine.clock - clock0
+        else:
+            m = sim.run_round(*round_batches(train, parts, sim.sim.batch,
+                                             sim.sim.tau, rng, idx=idx))
         t_round = time.perf_counter() - t_round
         if rec.enabled:
             # modeled latency is the sysmodel wall-clock the paper prices
@@ -243,6 +275,14 @@ def run_closed_loop(sim, env, schedule: CutSchedule, train, test, parts,
             if log_every and (t + 1) % log_every == 0:
                 obslib.log(f"  round {t+1}/{rounds} cut={v} acc={acc:.3f} "
                            f"wall={t_wall:.2f}s")
+    if async_engine is not None and async_engine.queue_depth:
+        # merge the leftover in-flight queue and account its clock; the
+        # curve gets one final post-drain point
+        clock0 = async_engine.clock
+        async_engine.drain()
+        t_wall += async_engine.clock - clock0
+        with rec.span("eval"):
+            curve.append((t_wall, sim.evaluate(test.x, test.y)))
     if rec.enabled:
         # bank residency summary for the run: which backend held the
         # O(N) client state, its peak device footprint, prefetch hit

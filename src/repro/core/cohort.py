@@ -178,6 +178,60 @@ class CohortSampler:
         return [self.cohort(t) for t in range(start, start + rounds)]
 
 
+class AdmissionSampler:
+    """Admission schedule for the buffered-async engine (DESIGN.md §16).
+
+    The event-driven round loop (``core.async_engine``) never samples a
+    barrier cohort: it keeps an IN-FLIGHT set topped up as clients
+    complete. This wrapper turns a :class:`CohortSampler` into that
+    admission stream — ``admit(d)`` returns the d-th admitted
+    generation ``(idx, weights)``:
+
+    * ``d = 0`` — the initial in-flight set: the base sampler's round-0
+      cohort (size K), so the engine starts from exactly the clients a
+      synchronous round 0 would have trained;
+    * ``d ≥ 1`` — a refill generation of size ``refill`` (the engine's
+      buffer B), drawn by a sampler of the same kind/seed/ρ.
+
+    Pure in ``(seed, d)`` — a fresh RNG per call, nothing consumed — so
+    checkpoint/resume replays the identical admission (and therefore
+    completion/merge) schedule. When ``refill == base.k`` the base
+    sampler itself serves every generation: ``admit(d)`` is then
+    ``base.cohort(d)``, the exact per-round schedule of the synchronous
+    loop — the degenerate case the sync-parity tests pin. A ``full``
+    base with ``refill < N`` falls back to ``uniform`` refills (the
+    identity cohort has no size-B form); weights stay the base kind's
+    Horvitz-Thompson re-weighting, so in-flight cohorts aggregate
+    unbiased exactly as partial sync cohorts do.
+    """
+
+    def __init__(self, base: CohortSampler, refill: Optional[int] = None):
+        self.base = base
+        self.refill = base.k if refill is None else int(refill)
+        if not 1 <= self.refill <= base.n_clients:
+            raise ValueError(
+                f"refill size {self.refill} outside [1, {base.n_clients}]")
+        kind = "uniform" if (base.kind == "full"
+                             and self.refill < base.n_clients) else base.kind
+        if self.refill == base.k and kind == base.kind:
+            self._refiller = base
+        else:
+            self._refiller = CohortSampler(
+                kind, base.n_clients, self.refill, rho=base.rho,
+                seed=base.seed,
+                latency_fn=getattr(base, "_latency_fn", None))
+
+    def admit(self, d: int) -> Tuple[np.ndarray, np.ndarray]:
+        if d == 0:
+            return self.base.cohort(0)
+        return self._refiller.cohort(d)
+
+    @property
+    def initial_size(self) -> int:
+        """Size of the d=0 in-flight set (the sync cohort's K)."""
+        return self.base.k
+
+
 def make_sampler(kind: str, n_clients: int, k: Optional[int] = None,
                  rho: Optional[np.ndarray] = None, seed: int = 0,
                  latency_fn=None) -> CohortSampler:

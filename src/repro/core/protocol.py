@@ -89,6 +89,40 @@ def aggregate_cohort(tree, w, anchor=None):
     return jax.tree.map(delta, tree, anchor)
 
 
+def staleness_discount(tau, lam: float = 0.5):
+    """λ(τ) = (1 + τ)^(−lam) — the polynomial staleness discount of
+    buffered-async FL (FedBuff, Nguyen et al. 2022). τ counts MERGES
+    elapsed since the contributing client was dispatched, so λ(0) = 1:
+    a fresh delta is applied at full weight and the zero-staleness
+    schedule reduces to the synchronous update."""
+    tau = jnp.asarray(tau, jnp.float32)
+    return (1.0 + tau) ** jnp.float32(-float(lam))
+
+
+def merge_async(current, deltas, w, tau, lam: float = 0.5):
+    """Staleness-weighted buffered-async merge (the anchored-delta form
+    of ``aggregate_cohort``, with per-entry anchors):
+
+        current + Σ_i λ(τ_i) · w_i · Δ_i
+
+    ``deltas`` carry a leading buffer axis (B, ...): each Δ_i is client
+    i's round delta **against the model it was dispatched with** — the
+    per-entry anchor that keeps partial merges unbiased exactly as the
+    anchored cohort form does (weights never rescale the model, only
+    the deltas). ``w`` are the admission cohort's Horvitz-Thompson
+    weights; ``λ(τ_i)`` discounts stale contributions
+    (``staleness_discount``). With τ = 0 and a full cohort this is the
+    synchronous anchored update."""
+    ww = staleness_discount(tau, lam) * jnp.asarray(w, jnp.float32)
+
+    def f(c, d):
+        wb = ww.reshape((-1,) + (1,) * (d.ndim - 1))
+        upd = jnp.sum(d.astype(jnp.float32) * wb, axis=0)
+        return (c.astype(jnp.float32) + upd).astype(c.dtype)
+
+    return jax.tree.map(f, current, deltas)
+
+
 @dataclass(frozen=True)
 class SchemeSpec:
     """Who aggregates what, per round (the paper's §II + §V baselines)."""
@@ -195,11 +229,14 @@ class ProtocolEngine:
 
         return wire_bits(codec.name, int(numel), self._raw_bits)
 
-    def _tap_model_sync(self, tree) -> None:
-        """Client-model sync round-trip (sfl φ / fl q): the aggregated
-        tree's leading axis is the cohort, so per-participant numel is
-        size/K — priced raw (model payloads are never codec-compressed,
-        matching ``sysmodel.traffic``'s model-sync rows)."""
+    def _tap_model_sync(self, tree,
+                        directions=("up_model", "down_model")) -> None:
+        """Client-model sync (sfl φ / fl q): the aggregated tree's
+        leading axis is the cohort, so per-participant numel is size/K —
+        priced raw (model payloads are never codec-compressed, matching
+        ``sysmodel.traffic``'s model-sync rows). The synchronous round
+        taps both directions at once; the async engine splits them
+        (downlink at dispatch, uplink at merge) via ``directions``."""
         import math as _math
 
         leaves = jax.tree.leaves(tree)
@@ -208,8 +245,8 @@ class ProtocolEngine:
         k = int(leaves[0].shape[0])
         per = sum(int(np.prod(l.shape)) for l in leaves) // k
         bits = k * int(_math.ceil(per * self._raw_bits))
-        self._tap("up_model", bits)
-        self._tap("down_model", bits)
+        for cat in directions:
+            self._tap(cat, bits)
 
     # -- seed schedule --------------------------------------------------
     def round_seed(self, t: int) -> np.uint32:
@@ -275,13 +312,16 @@ class ProtocolEngine:
             return x
         return self._boundary_op(x, rho, seed)
 
-    def tap_model_sync(self, tree) -> None:
+    def tap_model_sync(self, tree, directions=None) -> None:
         """Meter the client-model sync round-trip for aggregations done
         OUTSIDE ``finalize_cohort`` (the LLM train steps call
         ``aggregate`` directly). No-op without a ledger or for schemes
-        that don't sync client models."""
+        that don't sync client models. ``directions`` restricts the tap
+        to one leg (the async engine meters down_model at dispatch and
+        up_model at merge); None taps the full round-trip."""
         if self._ledger is not None and self.spec.client_aggregate:
-            self._tap_model_sync(tree)
+            self._tap_model_sync(
+                tree, directions or ("up_model", "down_model"))
 
     # -- per-round model aggregation (eq. 7 + baselines) -----------------
     @staticmethod

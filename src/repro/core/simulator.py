@@ -93,10 +93,14 @@ class SimConfig:
     # and stay device-resident whatever is requested.
     bank: str = "device"
     bank_prefetch: bool = True
-    # Γ drift metric needs the FULL bank on device every round — free
-    # for 'device'/'sharded', an O(N) copy that defeats the 'host'
-    # backend's overlap. None resolves to bank != 'host'; rounds report
-    # NaN when disabled.
+    # Γ drift metric. True — the exact full-bank form (drift_fn over
+    # the whole bank on device; an O(N) copy for 'host', but bit-
+    # identical across backends — what the parity tests pin). False —
+    # off (rounds report NaN). None (default) — exact on
+    # 'device'/'sharded' (free there), CHUNK-STREAMED on 'host'
+    # (core.bank.drift_streamed: same metric, O(chunk) device memory,
+    # last-ulps from the exact form), so no backend reports NaN by
+    # default anymore.
     drift_metric: Optional[bool] = None
 
 
@@ -142,8 +146,10 @@ class FedSimulator:
         # collapse it to one copy (every entry is identical anyway)
         spec = self.proto.spec
         self._bank_stacked = spec.split and not spec.client_aggregate
-        self._drift_enabled = (sim.drift_metric if sim.drift_metric is not None
-                               else sim.bank != "host")
+        if sim.drift_metric is None:
+            self._drift_mode = "stream" if sim.bank == "host" else "exact"
+        else:
+            self._drift_mode = "exact" if sim.drift_metric else "off"
         params = cnn.init_cnn(jax.random.key(seed), cnn_cfg)
         self.cut = sim.cut  # current cut; SimConfig.cut stays the initial one
         v = sim.cut
@@ -176,6 +182,7 @@ class FedSimulator:
         # per-cut jit cache: dynamic splitting re-enters here with a new
         # static v; a constant schedule only ever compiles one entry
         self._round_fns: Dict[int, callable] = {}
+        self._gen_fns: Dict[int, callable] = {}  # async dispatch compute
         self._drift_fn = jax.jit(ProtocolEngine.client_drift)
         self._eval_fn = None  # built lazily (jitted forward + argmax count)
 
@@ -382,6 +389,94 @@ class FedSimulator:
             self._rec.emit_from_jit("epoch_loss", losses)
         return {"client": cp, "server": sp}, losses.mean()
 
+    def _gen_fn(self, v: int):
+        fn = self._gen_fns.get(v)
+        if fn is None:
+            fn = self._gen_fns[v] = jax.jit(partial(self._gen, v))
+        return fn
+
+    def _gen(self, v, state, x, y, seed, w):
+        """Dispatch-time compute for one async generation (DESIGN.md
+        §16): the exact τ-scan epoch body of ``_round`` against the
+        dispatch-time models, but NO finalize — per-participant deltas
+        against the dispatch anchors come out instead, so the engine can
+        staleness-weight them at merge time (``protocol.merge_async``,
+        the per-entry-anchor form). Non-aggregating client sides return
+        their ABSOLUTE updated rows (personalized models scatter back
+        into the bank as-is)."""
+        spec = self.proto.spec
+        K = x.shape[0]
+        if not spec.split:
+            cp0, sp0 = state["client"], []
+            cp, sp = _stack(cp0, K), []
+            epoch = partial(self._epoch_fl, w)
+        else:
+            cp0, sp0 = state["client"], state["server"]
+            sp = _stack(sp0, K)
+            cp = _stack(cp0, K) if spec.client_aggregate else cp0
+            epoch = partial(self._epoch_split, v, w)
+        xs = jnp.moveaxis(x, 1, 0)
+        ys = jnp.moveaxis(y, 1, 0)
+        seeds = self.proto.epoch_seeds(seed, xs.shape[0])
+        (cp, sp), losses = jax.lax.scan(
+            lambda c, b: epoch(c, b), (cp, sp), (xs, ys, seeds))
+
+        def delta(p, a):
+            return p.astype(jnp.float32) - a[None].astype(jnp.float32)
+
+        out = {"loss": losses.mean()}
+        if spec.split:
+            out["server_delta"] = jax.tree.map(delta, sp, sp0)
+        if spec.client_aggregate:
+            out["client_out"] = jax.tree.map(delta, cp, cp0)
+        else:
+            out["client_out"] = cp
+        if self._rec.enabled:
+            self._rec.emit_from_jit("epoch_loss", losses)
+        return out
+
+    def _drift_value(self) -> float:
+        """Γ under the configured mode: exact full-bank, chunk-streamed
+        through the bank surface, or off (NaN)."""
+        if self._drift_mode == "off":
+            return float("nan")
+        if self._drift_mode == "stream":
+            return self.bank.drift_streamed()
+        return self.bank.drift(self._drift_fn)
+
+    def async_engine(self, data_fn, *, buffer: Optional[int] = None,
+                     lam: float = 0.5, completion_fn=None,
+                     straggler_factor: float = 4.0,
+                     refill: Optional[int] = None):
+        """Build the event-driven buffered-async round engine over this
+        simulator (``core.async_engine``; DESIGN.md §16).
+
+        ``data_fn(d, idx) -> (x, y)`` supplies the admitted generation's
+        batches — shape ``(len(idx), τ, B, ...)`` in ``idx`` order, pure
+        in ``d`` so resume replays the stream. ``buffer`` is the merge
+        size B ≤ K (default K: with a zero-spread ``completion_fn`` the
+        engine degenerates to the synchronous loop, bit for bit);
+        ``completion_fn`` defaults to the heterogeneous
+        ``sysmodel.latency.completion_time_fn`` draw at
+        ``straggler_factor``. The engine's ``step()`` replaces
+        ``run_round``; call ``drain()`` before ``set_cut`` or reading
+        final state."""
+        from repro.core.async_engine import AsyncRoundEngine
+        from repro.core.cohort import AdmissionSampler
+
+        buffer = self.n_participants if buffer is None else int(buffer)
+        admission = AdmissionSampler(
+            self.sampler, buffer if refill is None else int(refill))
+        if completion_fn is None:
+            from repro.sysmodel.latency import completion_time_fn
+
+            completion_fn = completion_time_fn(
+                self.sim.n_clients, seed=self.sim.cohort_seed,
+                straggler_factor=straggler_factor, batch=self.sim.batch)
+        ex = _SimAsyncExecutor(self, data_fn, admission)
+        return AsyncRoundEngine(ex, admission, completion_fn,
+                                buffer=buffer, lam=lam)
+
     # ------------------------------------------------------------------
     def run_round(self, x: np.ndarray, y: np.ndarray) -> Dict[str, float]:
         """One federated round over the round-``t`` cohort. ``x``/``y``
@@ -453,8 +548,7 @@ class FedSimulator:
             self.bank.scatter(gidx, out["client"])
             if pre_idx is not None:
                 self.bank.prefetch(t + 1, pre_idx)
-            drift = self.bank.drift(self._drift_fn) if self._drift_enabled \
-                else float("nan")
+            drift = self._drift_value()
         else:
             # collapsed bank: one copy — drift is zero by construction
             self.bank.replace(out["client"])
@@ -598,3 +692,261 @@ class FedSimulator:
         return {"up_bytes": bits["up_bits"] // 8,
                 "down_bytes": bits["down_bits"] // 8,
                 "total_bytes": bits["total_bits"] // 8}
+
+
+def _stack_rows(pairs):
+    """Stack per-entry payload rows ``[(tree, pos), ...]`` into a tree
+    with a leading (B,) buffer axis — the merge batch."""
+    trees = [jax.tree.map(lambda x: x[p], tree) for tree, p in pairs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class _SimAsyncExecutor:
+    """``FedSimulator`` face of :class:`core.async_engine.
+    AsyncRoundEngine` (DESIGN.md §16).
+
+    Dispatch (``run_generation``) gathers the admitted clients' bank
+    rows, runs the jitted τ-scan against the CURRENT server model and
+    returns per-participant deltas (server side, and the collapsed
+    client copy for aggregating schemes) plus the personalized rows
+    (non-aggregating schemes). Merge (``apply_merge``) folds the B
+    completed entries' deltas into the live model with
+    ``protocol.merge_async`` and scatters personalized rows back. The
+    degenerate path (``run_sync``) IS ``FedSimulator.run_round`` —
+    untouched, so B=K zero-spread schedules stay bit-identical to the
+    barrier loop.
+
+    Traffic: the dispatch compute fires the same in-jit ledger taps as
+    a sync round (smashed/labels/grad over τ epochs); aggregating
+    schemes additionally meter the model-sync DOWNLINK at dispatch and
+    the UPLINK at merge. Per merge, the ledger snapshot reconciles
+    against ``round_traffic_breakdown`` evaluated at the step's actual
+    dispatch/merge sizes — the same exact per-category gate as sync.
+
+    The bank prefetch pipeline stages the PREDICTED NEXT ADMISSION
+    (pure in ``d``) instead of the next sync cohort: staged as soon as
+    its rows are disjoint from every in-flight client (only merges of
+    in-flight clients write the bank before that gather), retried after
+    each merge's scatter otherwise.
+    """
+
+    def __init__(self, sim: FedSimulator, data_fn, admission):
+        self.sim = sim
+        self.data_fn = data_fn
+        self.admission = admission
+        self._step_dispatch: list = []  # generation sizes since last merge
+        self._inflight: Dict[int, int] = {}  # client -> in-flight count
+        self._pre: Optional[Tuple[int, np.ndarray]] = None
+        self._merge_fns: Dict[float, callable] = {}
+
+    # -- merge kernel ----------------------------------------------------
+    def _merge(self, current, deltas, w, tau, lam):
+        from repro.core.protocol import merge_async
+
+        fn = self._merge_fns.get(lam)
+        if fn is None:
+            fn = self._merge_fns[lam] = jax.jit(partial(merge_async, lam=lam))
+        return fn(current, deltas, w, tau)
+
+    # -- engine contract -------------------------------------------------
+    def run_sync(self, d: int, idx, w):
+        sim = self.sim
+        if sim._t != d:
+            raise RuntimeError(
+                f"degenerate sync path needs lockstep counters "
+                f"(sim._t={sim._t}, generation d={d})")
+        x, y = self.data_fn(d, idx)
+        return sim.run_round(x, y)
+
+    def run_generation(self, d: int, idx, w):
+        sim = self.sim
+        idx = np.asarray(idx, np.int64)
+        x, y = self.data_fn(d, idx)
+        if x.shape[0] != idx.size:
+            raise ValueError(
+                f"data_fn returned {x.shape[0]} clients for a "
+                f"generation of {idx.size}")
+        seed = sim.proto.round_seed(d)
+        stacked = sim._bank_stacked
+        if self._pre is not None and self._pre[0] == d:
+            self._pre = None  # this gather settles it (hit or miss)
+        client_in = sim.bank.gather(idx, t=d) if stacked else sim.bank.tree
+        out = sim._gen_fn(sim.cut)(
+            {"client": client_in, "server": sim.server},
+            x, y, seed, jnp.asarray(w))
+        for n in idx.tolist():
+            self._inflight[n] = self._inflight.get(n, 0) + 1
+        if stacked and sim.bank.prefetch_enabled:
+            # predicted next completions: the next thing gathered from
+            # the bank is the d+1 admission's slice (pure in d)
+            nxt, _ = self.admission.admit(d + 1)
+            self._pre = (d + 1, np.asarray(nxt, np.int64))
+            self._try_prefetch()
+        if sim._rec.enabled and sim.proto.spec.client_aggregate:
+            # aggregating schemes ship the current aggregate client-ward
+            # at dispatch; the uplink leg is metered at merge (eager tap:
+            # outside jit the debug callback runs immediately)
+            sim.proto.tap_model_sync(out["client_out"],
+                                     directions=("down_model",))
+        self._step_dispatch.append(int(idx.size))
+        return {"idx": idx, "w": np.asarray(w, np.float32),
+                "loss": jnp.asarray(out["loss"], jnp.float32),
+                "server_delta": out.get("server_delta", []),
+                "client_out": out["client_out"]}
+
+    def apply_merge(self, items, taus, lam, merge_idx):
+        sim = self.sim
+        spec = sim.proto.spec
+        idx = np.asarray([it["client"] for it in items], np.int64)
+        w = jnp.asarray(np.asarray([it["w"] for it in items], np.float32))
+        tau = jnp.asarray(np.asarray(taus, np.float32))
+
+        def rows(key):
+            return _stack_rows([(it["payload"][key], it["pos"])
+                                for it in items])
+
+        if spec.split:
+            sim.server = self._merge(sim.server, rows("server_delta"),
+                                     w, tau, lam)
+        for it in items:
+            n = it["client"]
+            c = self._inflight.get(n, 0) - 1
+            if c <= 0:
+                self._inflight.pop(n, None)
+            else:
+                self._inflight[n] = c
+        if spec.client_aggregate:
+            cd = rows("client_out")
+            if sim._rec.enabled:
+                sim.proto.tap_model_sync(cd, directions=("up_model",))
+            sim.bank.replace(self._merge(list(sim.bank.tree), cd,
+                                         w, tau, lam))
+            drift = 0.0
+        else:
+            # personalized rows scatter back absolute (each row is that
+            # client's own model; duplicates resolve in merge order)
+            sim.bank.scatter(idx, rows("client_out"))
+            self._try_prefetch()
+            drift = sim._drift_value()
+        loss = float(np.mean([float(it["payload"]["loss"])
+                              for it in items]))
+        modeled = self._modeled_breakdown(self._step_dispatch, len(items))
+        from repro.obs.ledger import totals
+
+        tot = totals(modeled)
+        out = {"loss": loss, "client_drift": drift,
+               "bits_up": tot["up_bits"], "bits_down": tot["down_bits"]}
+        rec = sim._rec
+        if rec.enabled:
+            jax.effects_barrier()
+            measured = rec.ledger.snapshot_and_reset()
+            rec.event(
+                "traffic", name="async_traffic", scheme=sim.sim.scheme,
+                cut=sim.cut, tau=sim.sim.tau,
+                participants=len(items),
+                dispatched=list(self._step_dispatch),
+                uplink_codec=sim.up_codec.name,
+                downlink_codec=sim.down_codec.name,
+                measured=measured, modeled=modeled)
+            rec.event("round", name="async_merge", loss=loss,
+                      client_drift=drift, cut=sim.cut,
+                      participants=len(items), bank=sim.bank.stats())
+        self._step_dispatch = []
+        return out
+
+    def _try_prefetch(self):
+        if self._pre is None:
+            return
+        t, idx = self._pre
+        busy = np.asarray(sorted(self._inflight), np.int64)
+        if np.intersect1d(idx, busy).size == 0:
+            self.sim.bank.prefetch(t, idx)
+            self._pre = None
+
+    def _modeled_breakdown(self, dispatch_sizes, merge_size) -> Dict[str, int]:
+        """Per-category traffic model for one engine step: the compute
+        legs (smashed/labels/grad over τ epochs, plus the model-sync
+        downlink) price at each DISPATCHED generation's size, the
+        model-sync uplink at the MERGE size — the async split of the
+        same ``round_traffic_breakdown`` rows the sync gate uses."""
+        from repro.obs.ledger import LEDGER_CATEGORIES
+        from repro.sysmodel.traffic import round_traffic_breakdown
+
+        sim = self.sim
+        kw = sim._traffic_kwargs()
+        acc = {c: 0 for c in LEDGER_CATEGORIES}
+        for g in dispatch_sizes:
+            bd = round_traffic_breakdown(sim.sim.scheme,
+                                         **{**kw, "n_clients": int(g)})
+            for c in ("up_smashed", "up_labels", "down_grad", "down_model"):
+                acc[c] += bd[c]
+        bd = round_traffic_breakdown(sim.sim.scheme,
+                                     **{**kw, "n_clients": int(merge_size)})
+        acc["up_model"] += bd["up_model"]
+        return acc
+
+    # -- checkpoint surface ----------------------------------------------
+    def checkpoint_state(self):
+        sim = self.sim
+        meta = {"t": sim._t, "cut": sim.cut, "scheme": sim.sim.scheme,
+                "n_clients": sim.sim.n_clients,
+                "cohort": sim.n_participants,
+                "sampler": sim.sim.sampler,
+                "cohort_seed": sim.sim.cohort_seed,
+                "bank_backend": sim.sim.bank}
+        return sim.state, meta
+
+    def checkpoint_template(self):
+        return self.sim.state
+
+    def prepare_restore(self, meta) -> None:
+        sim = self.sim
+        if meta.get("scheme") != sim.sim.scheme:
+            raise ValueError(f"checkpoint scheme {meta.get('scheme')!r} != "
+                             f"simulator scheme {sim.sim.scheme!r}")
+        saved_bank = meta.get("bank_backend", "device")
+        if saved_bank != sim.sim.bank:
+            raise ValueError(
+                f"checkpoint bank backend {saved_bank!r} != simulator "
+                f"{sim.sim.bank!r}")
+        if sim.proto.spec.split and meta.get("cut") != sim.cut:
+            sim.set_cut(int(meta["cut"]))
+
+    def restore_state(self, tree, meta) -> None:
+        sim = self.sim
+        sim.bank.replace(tree["client"])
+        sim.server = jax.tree.map(jnp.asarray, tree["server"])
+        sim._t = int(meta["t"])
+
+    def sync_inflight(self, clients) -> None:
+        """Rebuild the in-flight refcounts from the engine's restored
+        pending queue (called by ``AsyncRoundEngine.restore``)."""
+        self._inflight = {}
+        for n in clients:
+            n = int(n)
+            self._inflight[n] = self._inflight.get(n, 0) + 1
+        self._pre = None
+        self._step_dispatch = []
+
+    def gen_template(self, size: int):
+        """Zero payload matching ``run_generation``'s treedef/shapes for
+        a generation of ``size`` — the checkpoint load template."""
+        sim = self.sim
+        spec = sim.proto.spec
+        state = sim.state
+
+        def zrows(tree, lead):
+            return jax.tree.map(
+                lambda x: np.zeros((size,) + np.asarray(x).shape[lead:],
+                                   np.float32), tree)
+
+        t = {"idx": np.zeros((size,), np.int64),
+             "w": np.zeros((size,), np.float32),
+             "loss": np.zeros((), np.float32),
+             "server_delta": zrows(list(state["server"]), 0)
+             if spec.split else []}
+        if spec.client_aggregate:
+            t["client_out"] = zrows(list(state["client"]), 0)
+        else:
+            t["client_out"] = zrows(list(state["client"]), 1)
+        return t

@@ -178,6 +178,24 @@ def train_lm(args) -> dict:
                 f"{' + moments' if obanks else ''} off-device)")
     steps_by_cut = {cut0: jax.jit(alg.make_train_step(plans[cut0], tcfg, opt,
                                                       K, engine=engine))}
+    if args.async_mode:
+        if schedule is not None:
+            raise SystemExit("--async cannot run --dynamic-cut in LM mode: "
+                             "in-flight payload shapes are cut-static")
+        if args.bank != "device":
+            raise SystemExit("--async LM mode needs --bank device")
+        if engine.spec.client_aggregate:
+            raise SystemExit("--async LM mode covers sfl_ga/psl (schemes "
+                             "without round-end client aggregation)")
+        if args.optimizer != "sgd":
+            raise SystemExit("--async LM mode needs --optimizer sgd: "
+                             "staleness-discounting per-client optimizer "
+                             "moments is not defined")
+        gen_fn = jax.jit(alg.make_gen_step(plans[cut0], tcfg, opt, K,
+                                           engine=engine))
+        return _run_lm_async(args, cfg, plans[cut0], tcfg, engine, params,
+                             opt_state, steps_by_cut[cut0], gen_fn, rec,
+                             n, K, b, S, tau)
 
     def per_client_numel(p):
         leaves = jax.tree.leaves(p["client"])
@@ -343,6 +361,201 @@ def train_lm(args) -> dict:
             "migration_bits": mig_total_bits, "n_migrations": n_migrations}
 
 
+class _LMAsyncExecutor:
+    """``core.async_engine`` executor over the LM train loop.
+
+    Dispatch runs ``algorithms.make_gen_step`` against the live models.
+    The LM step's joint loss yields ONE server gradient per generation
+    (per-client server deltas don't exist — the τ local steps compound
+    the joint update), so server merges are GENERATION-granular: a
+    generation's delta folds in, staleness-discounted, at the merge
+    where its last member lands. Client rows (sfl_ga / psl personalize
+    client sides) scatter back per job as they complete."""
+
+    def __init__(self, state, gen_fn, sync_step, data_fn, engine,
+                 modeled_fn, rec):
+        from functools import partial
+
+        import jax
+
+        from repro.core.protocol import merge_async
+
+        self.state = state  # {"params", "opt_state"} — launcher-shared
+        self.gen_fn = gen_fn
+        self.sync_step = sync_step
+        self.data_fn = data_fn
+        self.engine = engine
+        self.modeled_fn = modeled_fn
+        self.rec = rec
+        self._left = {}      # gen -> members not yet merged
+        self._dispatch = []  # generation sizes since last merge
+        self._merge_fns = {}
+        self._mk_merge = lambda lam: jax.jit(partial(merge_async, lam=lam))
+
+    def run_sync(self, d, idx, w):
+        import jax.numpy as jnp
+
+        from repro.core import algorithms as alg
+
+        batch = self.data_fn(d, idx)
+        cp = alg.gather_cohort(self.state["params"], idx)
+        cp, self.state["opt_state"], m = self.sync_step(
+            cp, self.state["opt_state"], dict(batch, rho=jnp.asarray(w)))
+        self.state["params"] = alg.scatter_cohort(
+            self.state["params"], cp, idx)
+        return {"loss": float(m["loss"])}
+
+    def run_generation(self, d, idx, w):
+        import jax.numpy as jnp
+
+        from repro.core import algorithms as alg
+
+        idx = np.asarray(idx, np.int64)
+        batch = self.data_fn(d, idx)
+        cp = alg.gather_cohort(self.state["params"], idx)
+        out, self.state["opt_state"] = self.gen_fn(
+            cp, self.state["opt_state"], dict(batch, rho=jnp.asarray(w)))
+        self._left[d] = int(idx.size)
+        self._dispatch.append(int(idx.size))
+        return {"idx": idx, "loss": out["loss"],
+                "server_delta": out["server_delta"],
+                "client": out["client"]}
+
+    def apply_merge(self, items, taus, lam, merge_idx):
+        import jax
+        import jax.numpy as jnp
+
+        params = self.state["params"]
+        idx = jnp.asarray(
+            np.asarray([it["client"] for it in items], np.int64))
+        rows = [jax.tree.map(lambda x, p=it["pos"]: x[p],
+                             it["payload"]["client"]) for it in items]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+        client = jax.tree.map(lambda b, u: b.at[idx].set(u),
+                              params["client"], stacked)
+        # generation-granular server merge: fold a generation's delta in
+        # when its LAST member completes, at that merge's staleness
+        done = []
+        for it, t in zip(items, taus):
+            g = it["gen"]
+            self._left[g] -= 1
+            if self._left[g] == 0:
+                done.append((it["payload"]["server_delta"], float(t)))
+                del self._left[g]
+        server = params["server"]
+        if done:
+            fn = self._merge_fns.get(lam)
+            if fn is None:
+                fn = self._merge_fns[lam] = self._mk_merge(lam)
+            deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[d for d, _ in done])
+            server = fn(server, deltas,
+                        jnp.ones((len(done),), jnp.float32),
+                        jnp.asarray([t for _, t in done], jnp.float32))
+        self.state["params"] = dict(params, client=client, server=server)
+        loss = float(np.mean([float(it["payload"]["loss"])
+                              for it in items]))
+        out = {"loss": loss, "merged_gens": len(done)}
+        if self.rec.enabled:
+            import jax as _jax
+
+            _jax.effects_barrier()
+            self.rec.event(
+                "traffic", name="async_traffic",
+                scheme=self.engine.spec.name, participants=len(items),
+                dispatched=list(self._dispatch),
+                measured=self.rec.ledger.snapshot_and_reset(),
+                modeled=self.modeled_fn(self._dispatch, len(items)))
+        self._dispatch = []
+        return out
+
+
+def _run_lm_async(args, cfg, plan, tcfg, engine, params, opt_state,
+                  sync_step, gen_fn, rec, n, K, b, S, tau) -> dict:
+    """LM mode under ``--async``: the event-driven engine replaces the
+    barrier step loop; ``--steps`` counts merges."""
+    import jax.numpy as jnp
+
+    from repro.core import algorithms as alg
+    from repro.core.async_engine import AsyncRoundEngine
+    from repro.core.cohort import AdmissionSampler, make_sampler
+    from repro.core.protocol import round_seed
+    from repro.data.synthetic import synthetic_token_batches
+    from repro.sysmodel.latency import completion_time_fn
+
+    buffer = args.buffer or K
+    base = make_sampler(args.sampler if args.cohort else "uniform", n, K,
+                        seed=args.seed)
+    admission = AdmissionSampler(base, buffer)
+    completion = completion_time_fn(
+        n, seed=args.seed, straggler_factor=args.straggler, batch=b)
+
+    def data_fn(d, idx):
+        g = len(idx)
+        seed = int(round_seed(args.seed, d))
+        it = synthetic_token_batches(cfg.vocab_size, g * b * tau, S,
+                                     seed=seed)
+        toks, labels = next(it)  # pure in d: fresh stream per generation
+        shape = (g, b, S) if tau == 1 else (g, tau, b, S)
+        return {"tokens": jnp.asarray(toks.reshape(shape)),
+                "labels": jnp.asarray(labels.reshape(shape)),
+                "seed": round_seed(args.seed, d)}
+
+    def modeled_fn(dispatch_sizes, merged):
+        from repro.obs.ledger import LEDGER_CATEGORIES
+
+        acc = {c: 0 for c in LEDGER_CATEGORIES}
+        for g in dispatch_sizes:
+            bd = alg.comm_breakdown_per_round(
+                cfg, plan, args.scheme, g, b, S, tau=tau, bytes_per_elem=4,
+                uplink_codec=args.uplink_codec,
+                downlink_codec=args.downlink_codec)
+            for c in acc:
+                acc[c] += bd[c]
+        return acc
+
+    state = {"params": params, "opt_state": opt_state}
+    ex = _LMAsyncExecutor(state, gen_fn, sync_step, data_fn, engine,
+                          modeled_fn, rec)
+    eng = AsyncRoundEngine(ex, admission, completion, buffer=buffer,
+                           lam=args.staleness_lam)
+    obs.log(f"async engine: buffer B={buffer} of K={K} in flight, "
+            f"straggler x{args.straggler:g}, lam={args.staleness_lam:g}")
+    losses, t0 = [], time.time()
+    for i in range(args.steps):
+        if rec.enabled:
+            rec.set_round(i)
+        with rec.span("step", cut=tcfg.cut_layer):
+            m = eng.step()
+        losses.append(float(m["loss"]))
+        if rec.enabled:
+            rec.event("round", name="lm_step", loss=losses[-1],
+                      cut=tcfg.cut_layer, participants=m["merged"])
+        if (i + 1) % args.log_every == 0:
+            obs.log(f"merge {i+1}/{args.steps} loss {losses[-1]:.4f} "
+                    f"clock {m['clock']:.1f}s stale "
+                    f"{m['staleness_mean']:.1f} "
+                    f"({(time.time()-t0)/(i+1):.2f} s/step)")
+    eng.drain()
+    st = eng.stats()
+    if args.checkpoint:
+        from repro.checkpoint import save_checkpoint
+
+        save_checkpoint(args.checkpoint, state["params"],
+                        {"arch": cfg.name, "algo": args.scheme,
+                         "cut": tcfg.cut_layer, "steps": args.steps,
+                         "final_loss": losses[-1], "bank_backend": "device"})
+        obs.log(f"checkpoint -> {args.checkpoint}")
+    cb = alg.comm_bytes_per_round(
+        cfg, plan, args.scheme, K, b, S, tau=tau, bytes_per_elem=4,
+        uplink_codec=args.uplink_codec, downlink_codec=args.downlink_codec)
+    obs.log(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
+            f"virtual clock {st['clock']:.1f}s over {st['merges']} merges "
+            f"({st['dispatches']} dispatches)")
+    return {"first_loss": losses[0], "final_loss": losses[-1], "comm": cb,
+            "async": st, "migration_bits": 0, "n_migrations": 0}
+
+
 def _parse_dynamic_cut(args, lm_mode: bool):
     """``--dynamic-cut`` → CutSchedule (or None). Comma list ("1,2,1") in
     both modes; ``ddqn[:EPISODES]`` (CNN mode) is resolved by the caller,
@@ -407,7 +620,7 @@ def train_cnn(args) -> dict:
         obs.log(f"note: {rf:.0%} of client partitions are smaller than the "
                 f"batch ({args.batch}); their draws sample with replacement")
     done_rounds = 0
-    if args.resume:
+    if args.resume and not args.async_mode:
         meta = sim.restore(args.resume)
         done_rounds = sim._t
         obs.log(f"resumed from {args.resume} at round {sim._t} "
@@ -416,6 +629,54 @@ def train_cnn(args) -> dict:
     if schedule is not None:
         result = _train_cnn_closed_loop(args, sim, schedule, train, test,
                                         parts, skip_batches=done_rounds)
+    elif args.async_mode:
+        from repro.core.protocol import round_seed
+
+        def data_fn(d, idx):
+            # pure in d (unlike the barrier loop's sequential rng): the
+            # event schedule interleaves generations, and resume must
+            # replay generation d's exact batches without a fast-forward
+            rng_d = np.random.RandomState(
+                int(round_seed(args.seed, d)) % (2**31 - 1))
+            return round_batches(train, parts, args.batch, args.tau, rng_d,
+                                 idx=np.asarray(idx))
+
+        eng = sim.async_engine(data_fn, buffer=args.buffer,
+                               lam=args.staleness_lam,
+                               straggler_factor=args.straggler)
+        obs.log(f"async engine: buffer B={eng.buffer} of "
+                f"K={sim.n_participants} in flight, straggler "
+                f"x{args.straggler:g}, lam={args.staleness_lam:g}")
+        if args.resume:
+            eng.restore(args.resume)
+            obs.log(f"resumed async schedule from {args.resume} at merge "
+                    f"{eng.merge_idx} (clock {eng.clock:.1f}s, "
+                    f"{eng.queue_depth} in flight)")
+        for r in range(args.rounds):
+            with _maybe_profile(args, r):
+                m = eng.step()
+            if (r + 1) % args.log_every == 0:
+                acc = sim.evaluate(test.x, test.y)
+                obs.log(f"merge {r+1}/{args.rounds} loss {m['loss']:.4f} "
+                        f"acc {acc:.3f} clock {m['clock']:.1f}s queue "
+                        f"{m['queue_depth']} stale {m['staleness_mean']:.1f}")
+        if args.checkpoint:
+            # keep the in-flight queue: the checkpoint IS the schedule
+            # state, and resume replays the identical merge order
+            eng.save(args.checkpoint, {"scheme_args": args.scheme})
+            obs.log(f"checkpoint -> {args.checkpoint} "
+                    f"(merge {eng.merge_idx}, {eng.queue_depth} in flight)")
+        else:
+            eng.drain()
+        st = eng.stats()
+        acc = sim.evaluate(test.x, test.y)
+        cb = sim.comm_bytes_per_round()
+        obs.log(f"final acc {acc:.3f}; virtual clock {st['clock']:.1f}s "
+                f"over {st['merges']} merges ({st['dispatches']} "
+                f"dispatches, {st['sync_steps']} degenerate-sync); "
+                f"comm/round {cb['total_bytes']/1e6:.3f} MB ({args.scheme})")
+        result = {"accuracy": acc, "replacement_fraction": rf,
+                  "async": st, **cb}
     else:
         rng = np.random.RandomState(args.seed)
         for t in range(done_rounds):
@@ -451,7 +712,9 @@ def train_cnn(args) -> dict:
                 f"{st['prefetch_hits']} hits / {st['prefetch_misses']} "
                 f"misses")
         result["bank"] = st
-    if args.checkpoint:
+    if args.checkpoint and not (args.async_mode and schedule is None):
+        # async runs already checkpointed through the engine above (the
+        # schedule state rides along with the model state)
         sim.save(args.checkpoint, {"scheme_args": args.scheme})
         obs.log(f"checkpoint -> {args.checkpoint} (round {sim._t})")
     return result
@@ -468,7 +731,7 @@ def _train_cnn_closed_loop(args, sim, schedule, train, test, parts,
     # P2.1 bandwidth split cover the K participants, not the N-bank
     env = CuttingPointEnv(cnn_env_config(
         n_clients=args.clients, batch=args.batch, seed=args.seed,
-        cohort=args.cohort))
+        cohort=args.cohort, async_obs=args.async_mode))
     if isinstance(schedule, str):  # "ddqn[:EPISODES]"
         from repro.ccc.strategy import run_algorithm1
 
@@ -476,13 +739,35 @@ def _train_cnn_closed_loop(args, sim, schedule, train, test, parts,
         obs.log(f"training Algorithm 1 policy ({episodes} episodes)...")
         res = run_algorithm1(CuttingPointEnv(cnn_env_config(
             n_clients=args.clients, batch=args.batch, seed=args.seed,
-            cohort=args.cohort)),
+            cohort=args.cohort, async_obs=args.async_mode)),
             episodes=episodes)
         schedule = res.cut_schedule(env)
+    eng = None
+    if args.async_mode:
+        if args.resume:
+            raise SystemExit("--async --dynamic-cut does not support "
+                             "--resume (checkpoint the fixed-cut async "
+                             "loop instead)")
+        from repro.core.protocol import round_seed
+        from repro.data.federated import round_batches
+
+        def data_fn(d, idx):
+            rng_d = np.random.RandomState(
+                int(round_seed(args.seed, d)) % (2**31 - 1))
+            return round_batches(train, parts, args.batch, args.tau, rng_d,
+                                 idx=np.asarray(idx))
+
+        eng = sim.async_engine(data_fn, buffer=args.buffer,
+                               lam=args.staleness_lam,
+                               straggler_factor=args.straggler)
+        obs.log(f"async closed loop: buffer B={eng.buffer} of "
+                f"K={sim.n_participants}, straggler x{args.straggler:g}; "
+                f"policy sees queue depth + staleness "
+                f"(state_dim {env.state_dim})")
     r = run_closed_loop(sim, env, schedule, train, test, parts,
                         rounds=args.rounds, eval_every=args.log_every,
                         batch_seed=args.seed, skip_batches=skip_batches,
-                        log_every=args.log_every)
+                        log_every=args.log_every, async_engine=eng)
     obs.log(f"final acc {r.final_acc:.3f}; wall-clock {r.total_latency_s:.2f}s "
             f"({r.n_migrations} migrations, "
             f"{r.migration_bits_total/8e6:.2f} MB migrated); cuts {r.cuts}")
@@ -514,6 +799,21 @@ def main(argv=None):
                    help="cohort sampler (core.cohort) when --cohort is set: "
                         "uniform (unbiased HT weights), rho (ρ-proportional "
                         "with replacement), latency (straggler-avoiding)")
+    p.add_argument("--async", dest="async_mode", action="store_true",
+                   help="event-driven buffered-async rounds (DESIGN.md §16): "
+                        "drop the global barrier; merge the --buffer "
+                        "earliest completions per step with staleness-"
+                        "discounted weights (both modes; --rounds/--steps "
+                        "count merges)")
+    p.add_argument("--buffer", type=int, default=None, metavar="B",
+                   help="async merge buffer B <= K (default K: with a "
+                        "zero-spread completion draw this IS the sync loop)")
+    p.add_argument("--straggler", type=float, default=4.0,
+                   help="async completion-time heterogeneity: slowest/fastest "
+                        "client speed ratio in sysmodel.latency draws")
+    p.add_argument("--staleness-lam", type=float, default=0.5, metavar="LAM",
+                   help="staleness discount exponent: deltas weigh "
+                        "(1+tau)^-LAM after tau merges in flight")
     p.add_argument("--dynamic-cut", default=None,
                    help="per-round cut schedule: comma list '1,2,1' (cycled) "
                         "or 'ddqn[:EPISODES]' (CNN mode: train Algorithm 1 "

@@ -10,6 +10,9 @@ Sections (each skipped when the run produced no matching events):
   any mismatch. **Exit code 1 on any mismatch** — this is the CI
   contract: a red report means a pricing bug, not a style issue.
 * cohort summary (participation counts, HT-weight stats, replacement)
+* async engine summary (merge cadence on the virtual clock, queue-depth
+  and staleness gauges) — async per-merge traffic events are ordinary
+  ``traffic`` events, so they sit under the same exit-1 gate
 * DDQN summary (per-episode reward/ε/loss + reward decomposition)
 * serve per-token latency (p50/p99)
 
@@ -262,6 +265,40 @@ def render_bank(events: List[dict]) -> Optional[str]:
     return "\n".join(lines)
 
 
+def render_async(events: List[dict]) -> Optional[str]:
+    """Event-engine summary (DESIGN.md §16): merge cadence on the
+    virtual clock, queue-depth/staleness gauges, degenerate-sync count.
+    The engine's per-merge traffic events are plain ``traffic`` events,
+    so the reconciliation gate above already fails CI when the async
+    measured wire diverges from ``sysmodel/traffic``."""
+    merges = [e for e in events
+              if e.get("kind") == "async" and e.get("name") == "merge"]
+    depth = [float(e["value"]) for e in events
+             if e.get("kind") == "gauge"
+             and e.get("name") == "async_queue_depth"]
+    stale = [float(e["value"]) for e in events
+             if e.get("kind") == "gauge"
+             and e.get("name") == "async_staleness"]
+    if not merges and not depth and not stale:
+        return None
+    lines = ["== async engine =="]
+    if merges:
+        clock = max(float(e.get("clock", 0.0)) for e in merges)
+        sizes = [int(e.get("merged", 0)) for e in merges]
+        dispatched = sum(len(e.get("dispatched") or []) for e in merges)
+        lines.append(f"  merges               {len(merges)}  "
+                     f"(buffer sizes min {min(sizes)} / max {max(sizes)}; "
+                     f"{dispatched} generations dispatched)")
+        lines.append(f"  virtual clock        {_fmt_s(clock)}")
+    if depth:
+        lines.append(f"  queue depth          mean "
+                     f"{sum(depth) / len(depth):.2f}  max {max(depth):.0f}")
+    if stale:
+        lines.append(f"  staleness (merges)   mean "
+                     f"{sum(stale) / len(stale):.2f}  max {max(stale):.2f}")
+    return "\n".join(lines)
+
+
 def render_serve(events: List[dict]) -> Optional[str]:
     toks = [e for e in events if e.get("kind") == "serve_token"]
     if not toks:
@@ -286,6 +323,7 @@ def render_report(events: List[dict],
     recon, bad = render_reconciliation(events)
     sections.append(recon)
     sections.append(render_cohort(events))
+    sections.append(render_async(events))
     sections.append(render_bank(events))
     sections.append(render_ddqn(events))
     sections.append(render_serve(events))

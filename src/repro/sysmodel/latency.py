@@ -57,6 +57,60 @@ def round_latency(model: LatencyModel, bw, p_tx, gains, f_client, f_server) -> D
     return {"chi": chi, "psi": psi, "total": chi + psi}
 
 
+def completion_time_fn(n_clients: int, seed: int = 0, *,
+                       straggler_factor: float = 4.0,
+                       smashed_bits: float = 1e6, batch: int = 32,
+                       comm: CommParams = None, comp: CompParams = None):
+    """Per-client heterogeneous round-completion times for the async
+    engine (``core.async_engine``): ``fn(t) -> (N,)`` seconds.
+
+    Each client's time is its OWN χ+ψ (eq. 29 terms, equal-split
+    bandwidth at max power, fresh Rayleigh block fading per ``t``)
+    scaled by a fixed per-client compute-speed factor log-spaced over
+    ``[1, straggler_factor]`` and permuted by ``seed`` — the persistent
+    device heterogeneity AdaptSFL (arXiv:2403.13101) makes first-class,
+    on top of the paper's per-round channel draws. Pure in ``(seed,
+    t)``: checkpoint/resume replays the identical event schedule with
+    no stored RNG state (the ``cohort_rng`` contract).
+    """
+    from repro.core.cohort import cohort_rng
+    from repro.sysmodel.comm import path_loss_gain
+
+    comm = comm or CommParams()
+    comp = comp or CompParams()
+    model = LatencyModel(comm, comp, smashed_bits, float(batch))
+    rng0 = np.random.RandomState(seed)
+    dists = rng0.uniform(0.05, 0.5, n_clients)
+    factor = max(float(straggler_factor), 1.0)
+    speed = np.exp(np.linspace(0.0, np.log(factor), n_clients))
+    speed = speed[rng0.permutation(n_clients)]
+    bw = np.full(n_clients, comm.total_bandwidth / n_clients)
+
+    def fn(t: int) -> np.ndarray:
+        gains = path_loss_gain(dists, cohort_rng(seed ^ 0x3C3C3C3C, t))
+        chi = model.chi_terms(bw, comm.client_power, gains,
+                              comp.client_cpu_max, comp.server_cpu_max)
+        psi = model.psi_terms(gains, comp.client_cpu_max)
+        return np.asarray((chi + psi) * speed, np.float64)
+
+    return fn
+
+
+def constant_completion_fn(n_clients: int, value: float = 1.0):
+    """Zero-spread completion times: every client finishes at ``value``.
+
+    The degenerate schedule under which the async engine's buffered
+    merge collapses to the synchronous barrier (every generation
+    completes at once) — the bit-parity case ``tests/test_async.py``
+    pins."""
+    times = np.full(n_clients, float(value), np.float64)
+
+    def fn(t: int) -> np.ndarray:
+        return times.copy()
+
+    return fn
+
+
 def migration_latency(up_bits: float, down_bits: float, gains,
                       comm: CommParams) -> float:
     """Wall-clock cost of a cut migration (per-client bits on each link).

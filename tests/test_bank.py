@@ -371,3 +371,121 @@ class TestBankObs:
         text, bad = render_report(rec.events)
         assert "== client bank ==" in text
         assert "host" in text and bad == 0
+
+
+# ------------------------------------------------- multi-chunk numerics
+class TestMultiChunkNumerics:
+    """PR 7 residue, pinned instead of folklore (DESIGN.md §15): when a
+    whole-bank reduction spans MULTIPLE chunks it accumulates in float64
+    and rounds once, so it stays within 1 ulp of the exact single-chunk
+    expression. Bit-exactness with the device path is NOT promised there
+    — float32 summation order differs — which is why the parity tests
+    pin the single-chunk form and this one pins the ulp bound."""
+
+    BIG = 70_000  # > DEFAULT_CHUNK_ROWS=65536 → two chunks
+
+    def _bank(self, t):
+        return ClientBank(jax.tree.map(np.copy, t), n_clients=self.BIG,
+                          stacked=True, backend="host")
+
+    def _tree(self):
+        rng = np.random.RandomState(0)
+        return {"w": rng.randn(self.BIG, 3).astype(np.float32),
+                "b": rng.randn(self.BIG).astype(np.float32)}
+
+    @staticmethod
+    def _assert_ulp(ref, got, bound=1.0):
+        ref, got = np.asarray(ref), np.asarray(got)
+        ulp = np.abs(ref - got) / np.spacing(np.abs(ref))
+        assert np.max(ulp) <= bound, f"max ulp {np.max(ulp)}"
+
+    def test_rho_mean_within_one_ulp(self):
+        t = self._tree()
+        bank = self._bank(t)
+        assert len(list(bank._chunks())) == 2
+        rho = np.random.RandomState(3).rand(self.BIG) + 0.5
+        rho = (rho / rho.sum()).astype(np.float32)
+        got = bank.rho_mean(rho)
+        r64 = rho.astype(np.float64)
+        for k in t:
+            ref = np.einsum("n...,n->...", t[k].astype(np.float64),
+                            r64).astype(np.float32)
+            self._assert_ulp(ref, got[k])
+
+    def test_merge_anchored_within_one_ulp(self):
+        t = self._tree()
+        bank = self._bank(t)
+        w = np.random.RandomState(4).rand(self.BIG).astype(np.float64)
+        w = (w / w.sum()).astype(np.float32)
+        got = bank.merge_anchored(t, w)
+        w64 = w.astype(np.float64)
+        for k in t:
+            a64 = t[k][0].astype(np.float64)
+            ref = (a64 + np.einsum(
+                "n...,n->...", t[k].astype(np.float64) - a64[None],
+                w64)).astype(np.float32)
+            self._assert_ulp(ref, got[k])
+
+    def test_single_chunk_stays_bit_exact_with_device(self):
+        """chunk_rows ≥ N keeps the literal f32 device expression — the
+        bit-parity contract the backend-parity tests rely on."""
+        rng = np.random.RandomState(1)
+        t = {"w": rng.randn(50, 3).astype(np.float32)}
+        rho = _rho(50, seed=2)
+        host = ClientBank(jax.tree.map(np.copy, t), n_clients=50,
+                          stacked=True, backend="host")
+        dev = ClientBank(jax.tree.map(np.copy, t), n_clients=50,
+                         stacked=True, backend="device")
+        np.testing.assert_array_equal(np.asarray(host.rho_mean(rho)["w"]),
+                                      np.asarray(dev.rho_mean(rho)["w"]))
+
+
+# ------------------------------------------------------- streamed drift
+class TestDriftStreamed:
+    """PR 7 residue: Γ chunk-streamed through the bank surface, so the
+    host backend's drift metric is a number again instead of NaN."""
+
+    def test_matches_exact_form(self):
+        from repro.core.protocol import ProtocolEngine
+
+        rng = np.random.RandomState(7)
+        t = {"w": rng.randn(9, 4).astype(np.float32)}
+        bank = ClientBank(jax.tree.map(np.copy, t), n_clients=9,
+                          stacked=True, backend="host", chunk_rows=2)
+        exact = float(jax.jit(ProtocolEngine.client_drift)(
+            jax.tree.map(jnp.asarray, t)))
+        assert exact > 0
+        np.testing.assert_allclose(bank.drift_streamed(), exact, rtol=1e-5)
+
+    def test_collapsed_bank_is_zero(self):
+        bank = ClientBank({"w": np.zeros((3,), np.float32)}, n_clients=4,
+                          stacked=False, backend="host")
+        assert bank.drift_streamed() == 0.0
+
+    @pytest.mark.parametrize("bank_backend", ["host", "sharded"])
+    def test_sim_default_reports_finite_drift(self, bank_backend):
+        """drift_metric=None (the default): host streams, sharded keeps
+        the in-place exact form — neither reports NaN for the drifting
+        schemes any more."""
+        ref = _sim(bank="device")  # exact, device
+        sim = FedSimulator(
+            LIGHT_CONFIG,
+            SimConfig(scheme="sfl_ga", cut=2, n_clients=N, batch=BATCH,
+                      cohort=K, sampler="uniform", bank=bank_backend),
+            seed=0)
+        for r in range(2):
+            me = ref.run_round(*_data(K, seed=r))
+            ms = sim.run_round(*_data(K, seed=r))
+            assert np.isfinite(ms["client_drift"])
+            np.testing.assert_allclose(ms["client_drift"],
+                                       me["client_drift"], rtol=1e-4)
+        ref.close(), sim.close()
+
+    def test_drift_metric_false_still_off(self):
+        sim = FedSimulator(
+            LIGHT_CONFIG,
+            SimConfig(scheme="sfl_ga", cut=2, n_clients=N, batch=BATCH,
+                      cohort=K, sampler="uniform", bank="host",
+                      drift_metric=False), seed=0)
+        assert np.isnan(sim.run_round(*_data(K, seed=0))["client_drift"])
+        sim.close()

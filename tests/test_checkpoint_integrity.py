@@ -262,3 +262,100 @@ class TestBankCheckpoint:
         assert meta == {"m": 1}
         for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
             np.testing.assert_array_equal(np.asarray(a), b)
+
+
+class TestAsyncResume:
+    """Checkpoint/resume through the event-driven engine (DESIGN.md
+    §16): admission and completion draws are pure in ``(seed, d)``, so
+    counters + the pending queue + in-flight generation payloads are
+    the WHOLE schedule state — an interrupted async run resumed from
+    the file replays the identical completion/merge order, bit for
+    bit, mid-flight queue and all."""
+
+    N, K, BATCH = 6, 3, 4
+
+    def _pair(self, scheme, bank="device"):
+        from repro.configs.paper_cnn import LIGHT_CONFIG
+        from repro.core.simulator import FedSimulator, SimConfig
+
+        sim = FedSimulator(
+            LIGHT_CONFIG,
+            SimConfig(scheme=scheme, cut=2, n_clients=self.N,
+                      batch=self.BATCH, cohort=self.K, sampler="uniform",
+                      bank=bank, drift_metric=True), seed=0)
+        eng = sim.async_engine(self._data_fn, buffer=2,
+                               straggler_factor=8.0)
+        return sim, eng
+
+    def _data_fn(self, d, idx):
+        rng = np.random.RandomState(d)
+        return (rng.rand(len(idx), 1, self.BATCH, 28, 28, 1)
+                .astype(np.float32),
+                rng.randint(0, 10, (len(idx), 1, self.BATCH)))
+
+    @pytest.mark.parametrize("scheme", ["sfl_ga", "sfl", "psl", "fl"])
+    def test_interrupt_resume_bit_identical(self, tmp_path, scheme):
+        ref_sim, ref_eng = self._pair(scheme)
+        ref = [ref_eng.step() for _ in range(6)]
+
+        half_sim, half_eng = self._pair(scheme)
+        got = [half_eng.step() for _ in range(3)]
+        path = os.path.join(tmp_path, f"{scheme}.ckpt")
+        half_eng.save(path)  # 3 merges done, K−B jobs still in flight
+        half_sim.close()
+
+        res_sim, res_eng = self._pair(scheme)
+        res_eng.restore(path)
+        assert res_eng.merge_idx == 3
+        assert res_eng.queue_depth == half_eng.queue_depth
+        got += [res_eng.step() for _ in range(3)]
+
+        for ma, mb in zip(ref, got):
+            for k, va in ma.items():
+                vb = mb[k]
+                ok = va == vb or (isinstance(va, float)
+                                  and np.isnan(va) and np.isnan(vb))
+                assert ok, f"{scheme}: {k}: {va} != {vb}"
+        for a, b in zip(jax.tree.leaves(ref_sim.state),
+                        jax.tree.leaves(res_sim.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        ref_sim.close(), res_sim.close()
+
+    def test_resume_on_host_bank(self, tmp_path):
+        """The restored in-flight refcounts gate the host prefetcher:
+        a resumed host-bank run must match the uninterrupted one."""
+        ref_sim, ref_eng = self._pair("sfl_ga", bank="host")
+        ref = [ref_eng.step() for _ in range(5)]
+        half_sim, half_eng = self._pair("sfl_ga", bank="host")
+        got = [half_eng.step() for _ in range(2)]
+        path = os.path.join(tmp_path, "host.ckpt")
+        half_eng.save(path)
+        half_sim.close()
+        res_sim, res_eng = self._pair("sfl_ga", bank="host")
+        res_eng.restore(path)
+        got += [res_eng.step() for _ in range(3)]
+        for ma, mb in zip(ref, got):
+            assert ma["loss"] == mb["loss"]
+        for a, b in zip(jax.tree.leaves(ref_sim.state),
+                        jax.tree.leaves(res_sim.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        ref_sim.close(), res_sim.close()
+
+    def test_schedule_param_mismatch_rejected(self, tmp_path):
+        """Resuming under a different buffer size or staleness λ would
+        change the merge schedule mid-run — fail loudly."""
+        sim, eng = self._pair("sfl_ga")
+        eng.step()
+        path = os.path.join(tmp_path, "b2.ckpt")
+        eng.save(path)
+        sim.close()
+        sim2, _ = self._pair("sfl_ga")
+        bad = sim2.async_engine(self._data_fn, buffer=1,
+                                straggler_factor=8.0)
+        with pytest.raises(ValueError, match="async_buffer"):
+            bad.restore(path)
+        bad2 = sim2.async_engine(self._data_fn, buffer=2, lam=0.9,
+                                 straggler_factor=8.0)
+        with pytest.raises(ValueError, match="async_lam"):
+            bad2.restore(path)
+        sim2.close()
