@@ -182,6 +182,20 @@ def bench_fig12():
                ga["mean_staleness"]))
 
 
+def bench_fig13():
+    """PEFT federation (DESIGN.md §17): full-granite-8b wire + migration
+    ratios vs LoRA rank (rank-8 must clear the 20x wire / 50x migration
+    bars) and a live reduced LoRA run reconciled exactly."""
+    from benchmarks import fig13_peft as f
+
+    out = f.run()
+    live = out["live"]
+    return ("r8_wire=%.0fx r8_migration=%.0fx live_events=%d "
+            "live_migrations=%d reconcile_exact=True"
+            % (out["wire_ratio_r8"], out["migration_ratio_r8"],
+               live["events"], live["migrations"]))
+
+
 def bench_kernels():
     from benchmarks import kernels_bench as f
 
@@ -203,6 +217,7 @@ BENCHES = [
     ("fig11_scale", bench_fig11),
     ("fig11_scale_bank_host", bench_fig11_bank_host),
     ("fig12_async", bench_fig12),
+    ("fig13_peft", bench_fig13),
 ]
 
 

@@ -20,7 +20,7 @@ from repro.ccc.convex import AllocationResult, solve_p21
 from repro.sysmodel.comm import CommParams, path_loss_gain, path_loss_linear
 from repro.sysmodel.comp import CompParams, scale_by_cut
 from repro.sysmodel.payload import spec_for
-from repro.sysmodel.traffic import wire_bits
+from repro.sysmodel.traffic import migration_bits, wire_bits
 from repro.sysmodel.privacy import privacy_ok
 
 
@@ -57,6 +57,15 @@ class CuttingEnvConfig:
     # state so the policy sees merge-pipeline pressure alongside the
     # channel. Default off — state_dim (and trained policies) unchanged.
     async_obs: bool = False
+    # cut-migration pricing (DESIGN.md §17): per-cut parameter counts that
+    # MOVE when the policy changes v between rounds — full φ(v) for
+    # full-parameter runs, the adapter sliver φ̂(v) under PEFT. When set,
+    # a v_{t-1} → v_t switch adds the migrating payload's latency (priced
+    # at the round's allocated uplink rate) to the cost, so the DDQN
+    # weighs migration against the gain — and learns that LoRA makes
+    # switching nearly free. None preserves the paper MDP exactly
+    # (scalar/batched parity and trained policies unchanged).
+    mig_phis: Optional[Tuple[int, ...]] = None
 
 
 class CuttingPointEnv:
@@ -139,6 +148,7 @@ class CuttingPointEnv:
     def reset(self) -> np.ndarray:
         self.t = 0
         self.cum_cost = 0.0
+        self.prev_v = None  # last executed cut (migration pricing)
         self.gains = self._draw_gains()
         return self._state()
 
@@ -176,18 +186,40 @@ class CuttingPointEnv:
         alloc = solve_p21(self.gains, X_bits, cfg.batch, self.comm, comp)
         return self.gamma_fn(v, codec), alloc.chi, alloc.psi, alloc
 
+    def migration_cost(self, v: int, chi: float, X_bits: float
+                       ) -> Tuple[float, int]:
+        """(latency, total bits) of moving the cut from ``prev_v`` to ``v``
+        (``cfg.mig_phis``). The migrating payload rides the round's
+        allocated uplink, so its latency is χ scaled by the per-client
+        payload ratio against X_t(v) — zero when the cut holds, pricing
+        OFF entirely when ``mig_phis`` is None."""
+        cfg = self.cfg
+        if (cfg.mig_phis is None or self.prev_v is None
+                or v == self.prev_v or X_bits <= 0):
+            return 0.0, 0
+        mb = migration_bits(cfg.mig_phis[self.prev_v - 1],
+                            cfg.mig_phis[v - 1],
+                            n_clients=self.n_participants,
+                            raw_bits_per_elem=cfg.bytes_per_elem * 8)
+        per_client = mb["total_bits"] / self.n_participants
+        return chi * (per_client / X_bits), mb["total_bits"]
+
     def step(self, action: int):
         """action ∈ [0, n_actions-1] decodes to (v, codec)."""
         cfg = self.cfg
         v, codec = self.decode_action(action)
         gamma, chi, psi, alloc = self.cost_terms(v, codec)
         ok = privacy_ok(cfg.phis[v - 1], cfg.total_params, cfg.epsilon)
+        mig_lat, mig_bits = 0.0, 0
         if ok and alloc.feasible:
-            cost = cfg.w * gamma + chi + psi
+            mig_lat, mig_bits = self.migration_cost(
+                v, chi, self.smashed_bits(v, codec))
+            cost = cfg.w * gamma + chi + psi + mig_lat
             reward = -cost
         else:
             cost = cfg.penalty
             reward = -cfg.penalty
+        self.prev_v = v
         self.cum_cost += cost
         self.t += 1
         done = self.t >= cfg.horizon
@@ -197,7 +229,8 @@ class CuttingPointEnv:
             "v": v, "codec": codec, "bits": self.smashed_bits(v, codec),
             "chi": chi, "psi": psi, "gamma": gamma,
             "gamma_conv": g_conv, "gamma_dist": g_dist,
-            "privacy_ok": ok, "latency": chi + psi}
+            "mig_bits": mig_bits, "mig_latency": mig_lat,
+            "privacy_ok": ok, "latency": chi + psi + mig_lat}
 
 
 class BatchedEnvState(NamedTuple):
@@ -230,6 +263,14 @@ class BatchedCuttingPointEnv:
 
         from repro.sysmodel.privacy import privacy_ok
 
+        if cfg.mig_phis is not None:
+            # Migration pricing makes the reward depend on v_{t-1}, which
+            # the precomputed per-action tables can't express. Train the
+            # base MDP batched, then evaluate/roll out with the scalar env
+            # (how the LM launcher's DDQN path uses it).
+            raise ValueError("mig_phis pricing is scalar-env only; "
+                             "construct BatchedCuttingPointEnv with "
+                             "mig_phis=None")
         self.cfg = cfg
         self.comm = comm or CommParams()
         self.base_comp = comp or CompParams()
@@ -392,3 +433,37 @@ def cnn_env_config(light: bool = True, flop_aware: bool = False,
         fracs = tuple(paper_frac for _ in range(1, V))
     return CuttingEnvConfig(phis=phis, smashed_elems=smashed, flop_fracs=fracs,
                             total_params=total, **kw)
+
+
+def lm_env_config(model_cfg, *, seq: int, peft=None,
+                  **kw) -> CuttingEnvConfig:
+    """Environment wired to an LM's φ(v)/X(v) splits (DESIGN.md §17).
+
+    φ(v) — which drives the privacy gate and the Γ convergence term — is
+    the FULL client-side parameter count (embed + layers[:v]): the frozen
+    base is resident client-side under PEFT too, so the privacy surface
+    is unchanged. What PEFT changes is the MIGRATION payload: with a
+    ``PeftSpec`` the per-cut ``mig_phis`` are the adapter slivers φ̂(v),
+    so the DDQN prices a cut move at adapter cost and learns that dynamic
+    splitting is nearly free; without one they are φ(v) itself and moves
+    are expensive. Smashed payload per sample is seq·d_model at every
+    cut (the transformer's residual stream), FLOP fractions come from
+    the analytic per-layer counts.
+    """
+    from repro.core.split import (client_adapter_numel, client_param_numel,
+                                  split_flops, total_param_numel)
+    from repro.models import lm as lm_mod
+
+    V = model_cfg.num_layers
+    plans = [lm_mod.build_plan(model_cfg, v, peft=peft) for v in range(1, V)]
+    phis = tuple(client_param_numel(p) for p in plans)
+    smashed = tuple(seq * model_cfg.d_model for _ in plans)
+    fracs = []
+    for v in range(1, V):
+        f = split_flops(model_cfg, v, seq)
+        fracs.append(f["client_fwd"] / (f["client_fwd"] + f["server_fwd"]))
+    mig = tuple(client_adapter_numel(p) for p in plans) if peft else phis
+    return CuttingEnvConfig(phis=phis, smashed_elems=smashed,
+                            flop_fracs=tuple(fracs),
+                            total_params=total_param_numel(plans[0]),
+                            mig_phis=mig, **kw)

@@ -143,6 +143,21 @@ INPUT_SHAPES = {
 
 
 @dataclass(frozen=True)
+class PeftSpec:
+    """Parameter-efficient fine-tuning spec carried by ``ModelPlan``.
+
+    ``targets`` selects which projection families get adapters: "attn"
+    (wq/wk/wv/wo), "mlp" (gate/up/down dense FFN), "ssm" (in_proj/out_proj),
+    "router" (MoE router — opt-in; expert einsum tensors stay frozen).
+    Frozen/hashable so plans remain valid static jit arguments.
+    """
+    kind: str = "lora"
+    rank: int = 8
+    alpha: float = 16.0
+    targets: Tuple[str, ...] = ("attn", "mlp", "ssm")
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     """Top-level run config consumed by the launcher."""
     model: ModelConfig
@@ -164,6 +179,12 @@ class TrainConfig:
     fsdp: bool = False  # reduce-scatter server params over data axis
     expert_parallel: bool = False  # shard experts over data axis (hillclimb)
     resync_every: int = 0  # 0 = never re-sync client-side models (paper default)
+    # PEFT: "none" keeps the full-parameter path bit-identical to before the
+    # adapter refactor; "lora" freezes the base model and federates only
+    # per-sublayer low-rank A/B factors (DESIGN.md §17).
+    peft: str = "none"  # none | lora
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
     seed: int = 0
 
     @property

@@ -63,6 +63,29 @@ def split_lm_params(params: Dict, n_clients: int) -> Dict:
     return {"client": client, "server": server}
 
 
+def split_lm_lora_params(params: Dict, loras: Dict, n_clients: int) -> Dict:
+    """PEFT layout (DESIGN.md §17): the FEDERATED unit is the adapter tree.
+
+    ``client``/``server`` hold only trainable adapters (client stacked to
+    (N,) like the full path — so the bank, cohort gather/scatter and the
+    aggregation rules apply unchanged, just orders of magnitude smaller);
+    the frozen ``init_lm`` tree rides under ``base``, logically replicated
+    on both sides of every cut — it never crosses the wire."""
+    client = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape),
+        {"groups": loras["client"]})
+    return {"client": client, "server": {"groups": loras["server"]},
+            "base": params}
+
+
+def trainable_params(split: Dict) -> Dict:
+    """The trainable partition of a split tree: everything except the
+    frozen base. On a full-parameter tree this is the whole tree, so
+    ``opt.init(trainable_params(p))`` is layout-agnostic — under PEFT the
+    optimizer moments exist only for adapter leaves."""
+    return {k: v for k, v in split.items() if k != "base"}
+
+
 def _ungroup_layers(groups_params, groups, layer_axis: int) -> list:
     """Flatten scan-stacked group params into a per-layer list of trees.
 
@@ -92,30 +115,12 @@ def _regroup_layers(layers: list, groups, layer_axis: int) -> list:
     return out
 
 
-def resplit_lm_params(split: Dict, old_plan: lm_mod.ModelPlan,
-                      new_plan: lm_mod.ModelPlan,
-                      rho: Optional[jnp.ndarray] = None) -> Dict:
-    """Migrate the split layout from ``old_plan.cut`` to ``new_plan.cut``.
-
-    Layers moving server→client are broadcast to every client (each gets
-    its own copy of the shared server layer); layers moving client→server
-    collapse the N per-client copies into one shared layer by ρ-average —
-    the eq.-7-style merge, exact (and v→v'→v lossless) whenever the client
-    copies agree, which holds at init and for client-aggregating schemes.
-    Works on any tree with the params structure, so optimizer moments
-    migrate through the same function (see ``resplit_opt_state``).
-    """
-    old_v, new_v = old_plan.cut, new_plan.cut
-    assert min(old_v, new_v) >= 1, "dynamic cut needs a client side (v >= 1)"
-    if old_v == new_v:
-        return split
-    n = jax.tree.leaves(split["client"])[0].shape[0]
-    w = uniform_rho(n) if rho is None else rho
-
-    client_layers = _ungroup_layers(split["client"]["groups"],
-                                    old_plan.client_groups, layer_axis=1)
-    server_layers = _ungroup_layers(split["server"]["groups"],
-                                    old_plan.server_groups, layer_axis=0)
+def _move_split_layers(client_layers: list, server_layers: list,
+                       old_v: int, new_v: int, n: int, w) -> tuple:
+    """Shared cut-move core: per-layer trees cross the boundary, with
+    server→client broadcast to N copies and client→server anchored-delta
+    ρ-average (exact — bit-identical — whenever the copies agree, making
+    v→v'→v round-trips lossless from equal copies)."""
     if new_v > old_v:  # server→client: broadcast shared layers to N clients
         moving = server_layers[:new_v - old_v]
         server_layers = server_layers[new_v - old_v:]
@@ -137,14 +142,73 @@ def resplit_lm_params(split: Dict, old_plan: lm_mod.ModelPlan,
                 .astype(p.dtype)
 
         server_layers = [jax.tree.map(mean, l) for l in moving] + server_layers
+    return client_layers, server_layers
 
-    client = {"embed": split["client"]["embed"],
-              "groups": _regroup_layers(client_layers,
+
+def resplit_lm_params(split: Dict, old_plan: lm_mod.ModelPlan,
+                      new_plan: lm_mod.ModelPlan,
+                      rho: Optional[jnp.ndarray] = None) -> Dict:
+    """Migrate the split layout from ``old_plan.cut`` to ``new_plan.cut``.
+
+    Layers moving server→client are broadcast to every client (each gets
+    its own copy of the shared server layer); layers moving client→server
+    collapse the N per-client copies into one shared layer by ρ-average —
+    the eq.-7-style merge, exact (and v→v'→v lossless) whenever the client
+    copies agree, which holds at init and for client-aggregating schemes.
+    Works on any tree with the params structure, so optimizer moments
+    migrate through the same function (see ``resplit_opt_state``).
+
+    Under PEFT (``old_plan.peft`` set) the tree holds ADAPTERS — same
+    machinery, orders-of-magnitude smaller payload — and the frozen base
+    (when present under ``"base"``) is re-partitioned by pure relayout via
+    :func:`resplit_base_params`: it is replicated on both sides of the
+    cut, so no averaging, no broadcast-to-N, no wire cost.
+    """
+    old_v, new_v = old_plan.cut, new_plan.cut
+    assert min(old_v, new_v) >= 1, "dynamic cut needs a client side (v >= 1)"
+    if old_v == new_v:
+        return split
+    n = jax.tree.leaves(split["client"])[0].shape[0]
+    w = uniform_rho(n) if rho is None else rho
+
+    client_layers = _ungroup_layers(split["client"]["groups"],
+                                    old_plan.client_groups, layer_axis=1)
+    server_layers = _ungroup_layers(split["server"]["groups"],
+                                    old_plan.server_groups, layer_axis=0)
+    client_layers, server_layers = _move_split_layers(
+        client_layers, server_layers, old_v, new_v, n, w)
+
+    client = {"groups": _regroup_layers(client_layers,
                                         new_plan.client_groups, layer_axis=1)}
+    if "embed" in split["client"]:  # full path; adapter trees have no embed
+        client["embed"] = split["client"]["embed"]
     server = dict(split["server"],
                   groups=_regroup_layers(server_layers,
                                          new_plan.server_groups, layer_axis=0))
-    return {"client": client, "server": server}
+    out = {"client": client, "server": server}
+    if "base" in split:
+        out["base"] = resplit_base_params(split["base"], old_plan, new_plan)
+    return out
+
+
+def resplit_base_params(base: Dict, old_plan: lm_mod.ModelPlan,
+                        new_plan: lm_mod.ModelPlan) -> Dict:
+    """Re-partition a frozen ``init_lm``-shaped base across a cut change.
+
+    Both sides hold the SAME shared weights (one copy each — the client
+    stack is not per-client under PEFT), so a cut move is a relayout of
+    the scan stacking: ungroup → slice at the new cut → regroup. Nothing
+    is averaged and nothing crosses the wire — this is why PEFT migration
+    prices only the adapter sliver."""
+    if old_plan.cut == new_plan.cut:
+        return base
+    layers = (_ungroup_layers(base["client"], old_plan.client_groups, 0)
+              + _ungroup_layers(base["server"], old_plan.server_groups, 0))
+    v = new_plan.cut
+    return dict(
+        base,
+        client=_regroup_layers(layers[:v], new_plan.client_groups, 0),
+        server=_regroup_layers(layers[v:], new_plan.server_groups, 0))
 
 
 def resplit_opt_state(opt_state: Dict, old_plan: lm_mod.ModelPlan,
@@ -230,6 +294,24 @@ def merge_lm_params(split: Dict, rho: Optional[jnp.ndarray] = None) -> Dict:
     return out
 
 
+def merge_lm_lora_params(split: Dict,
+                         rho: Optional[jnp.ndarray] = None) -> Dict:
+    """PEFT analogue of :func:`merge_lm_params`: ρ-mean the per-client
+    adapter rows, fold them into the frozen base (w' = w + s·AB), return
+    a plain ``init_lm``-shaped tree every non-PEFT consumer understands."""
+    n = jax.tree.leaves(split["client"])[0].shape[0]
+    w = uniform_rho(n) if rho is None else rho
+
+    def mean(p):
+        ww = w.reshape((n,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(p.astype(jnp.float32) * ww, axis=0).astype(p.dtype)
+
+    cad = jax.tree.map(mean, split["client"])
+    return lm_mod.merge_lm_loras(
+        split["base"], {"client": cad["groups"],
+                        "server": split["server"]["groups"]})
+
+
 def _client_forward_one(cparams, plan, tokens, inputs_embeds, impl, remat, dtype):
     full = {"embed": cparams["embed"], "client": cparams["groups"]}
     return lm_mod.client_forward(full, plan, tokens, inputs_embeds,
@@ -246,7 +328,8 @@ def _server_forward(sparams, plan, smashed, impl, remat):
 
 def _engine_for(tcfg: TrainConfig) -> ProtocolEngine:
     return ProtocolEngine(tcfg.algo, tcfg.uplink_codec, tcfg.downlink_codec,
-                          base_seed=tcfg.seed)
+                          base_seed=tcfg.seed,
+                          adapter_sync=(tcfg.peft != "none"))
 
 
 def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
@@ -256,6 +339,7 @@ def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
     dtype = jnp.dtype(tcfg.compute_dtype)
     impl = "jnp"
     engine = _engine_for(tcfg) if engine is None else engine
+    peft = plan.peft is not None
 
     def loss_fn(params, batch, seed=0, rho_w=None):
         # rho_w: cohort aggregation weights replacing the full-bank ρ
@@ -264,22 +348,46 @@ def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
         tokens = batch["tokens"]  # (N, b, S) int32 — or embeds (N, b, S, d)
         labels = batch["labels"]  # (N, b, S)
         n = tokens.shape[0]
+        if peft:
+            # PEFT: per-client trees are adapter slivers; the frozen base
+            # is shared (closed over → unbatched under vmap) and attached
+            # structurally at trace time. Only params["client"]/["server"]
+            # are differentiated — see _make_local_step.
+            base = params["base"]
+
+            def cfwd(ad, toks, embeds):
+                full = {"embed": base["embed"],
+                        "client": tf.attach_group_loras(base["client"],
+                                                        ad["groups"])}
+                return lm_mod.client_forward(full, plan, toks, embeds,
+                                             impl=impl, remat=tcfg.remat,
+                                             dtype=dtype)
+
+            sgroups = tf.attach_group_loras(base["server"],
+                                            params["server"]["groups"])
+            sparams = {"groups": sgroups, "final_norm": base["final_norm"]}
+            if "head" in base:
+                sparams["head"] = base["head"]
+        else:
+            def cfwd(cp, toks, embeds):
+                return _client_forward_one(cp, plan, toks, embeds, impl,
+                                           tcfg.remat, dtype)
+
+            sparams = params["server"]
         if jnp.issubdtype(tokens.dtype, jnp.floating):
             # stubbed-modality inputs: precomputed embeds
             smashed, aux_c = jax.vmap(
-                lambda cp, e: _client_forward_one(cp, plan, None, e, impl,
-                                                  tcfg.remat, dtype)
+                lambda cp, e: cfwd(cp, None, e)
             )(params["client"], tokens.astype(dtype))
         else:
             smashed, aux_c = jax.vmap(
-                lambda cp, t: _client_forward_one(cp, plan, t, None, impl,
-                                                  tcfg.remat, dtype)
+                lambda cp, t: cfwd(cp, t, None)
             )(params["client"], tokens)
         # the scheme's cut-layer transport: lossy uplink forward; eq.-5
         # aggregate-broadcast (sfl_ga) or per-client unicast backward
         smashed = engine.boundary(smashed, r, seed)
         nb, b, S, d = smashed.shape
-        logits, aux_s = _server_forward(params["server"], plan,
+        logits, aux_s = _server_forward(sparams, plan,
                                         smashed.reshape(nb * b, S, d),
                                         impl, tcfg.remat)
         ce = lm_mod.cross_entropy(logits, labels.reshape(nb * b, S))
@@ -287,6 +395,37 @@ def make_loss_fn(plan: lm_mod.ModelPlan, tcfg: TrainConfig,
         return loss, {"ce": ce}
 
     return loss_fn
+
+
+def _make_local_step(loss_fn: Callable, opt: Optimizer,
+                     peft: bool) -> Callable:
+    """One optimizer step. Full path: differentiate the whole split tree
+    (byte-identical to the pre-PEFT step). PEFT path: the frozen base is
+    held out as a non-differentiated argument, so grads — and the
+    optimizer state threaded through — exist only for adapter leaves."""
+    if not peft:
+        def local_step(params, opt_state, batch, seed, w):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, seed, w)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, dict(metrics, loss=loss)
+
+        return local_step
+
+    def tr_loss(tr, base, batch, seed, w):
+        return loss_fn(dict(tr, base=base), batch, seed, w)
+
+    def local_step(params, opt_state, batch, seed, w):
+        base = params["base"]
+        tr = {k: v for k, v in params.items() if k != "base"}
+        (loss, metrics), grads = jax.value_and_grad(
+            tr_loss, has_aux=True)(tr, base, batch, seed, w)
+        updates, opt_state = opt.update(grads, opt_state, tr)
+        tr = apply_updates(tr, updates)
+        return dict(tr, base=base), opt_state, dict(metrics, loss=loss)
+
+    return local_step
 
 
 def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
@@ -299,13 +438,7 @@ def make_train_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
     engine = _engine_for(tcfg) if engine is None else engine
     loss_fn = make_loss_fn(plan, tcfg, rho, engine=engine)
     tau = tcfg.resolved_tau
-
-    def local_step(params, opt_state, batch, seed, w):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch, seed, w)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, dict(metrics, loss=loss)
+    local_step = _make_local_step(loss_fn, opt, plan.peft is not None)
 
     def train_step(params, opt_state, batch):
         seed = batch.get("seed", 0)
@@ -385,13 +518,7 @@ def make_gen_step(plan: lm_mod.ModelPlan, tcfg: TrainConfig, opt: Optimizer,
     rho = uniform_rho(k) if rho is None else rho
     loss_fn = make_loss_fn(plan, tcfg, rho, engine=engine)
     tau = tcfg.resolved_tau
-
-    def local_step(params, opt_state, batch, seed, w):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch, seed, w)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, dict(metrics, loss=loss)
+    local_step = _make_local_step(loss_fn, opt, plan.peft is not None)
 
     def gen_step(params, opt_state, batch):
         seed = batch.get("seed", 0)
@@ -467,16 +594,20 @@ def comm_bytes_per_round(cfg: ModelConfig, plan: lm_mod.ModelPlan, algo: str,
     the cut-layer payloads; labels and model sync stay at the raw
     ``bytes_per_elem`` wire precision.
     """
-    from repro.core.split import client_param_numel, total_param_numel
+    from repro.core.split import (client_adapter_numel, client_param_numel,
+                                  total_param_numel)
     from repro.sysmodel.traffic import round_traffic_bytes
 
     be8 = bytes_per_elem * 8
+    peft = plan.peft is not None
     return round_traffic_bytes(
         algo, n_clients=n_clients, tau=tau,
         smashed_elems=per_client_batch * seq * cfg.d_model,
         label_bits=per_client_batch * seq * 32,
-        client_model_bits=client_param_numel(plan) * be8,
-        full_model_bits=total_param_numel(plan) * be8 if algo == "fl" else 0,
+        client_model_bits=0 if peft else client_param_numel(plan) * be8,
+        adapter_model_bits=client_adapter_numel(plan) * be8 if peft else 0,
+        full_model_bits=total_param_numel(plan) * be8
+        if (algo == "fl" and not peft) else 0,
         uplink_codec=uplink_codec, downlink_codec=downlink_codec,
         raw_bits_per_elem=be8)
 
@@ -491,16 +622,20 @@ def comm_breakdown_per_round(cfg: ModelConfig, plan: lm_mod.ModelPlan,
     BITS, the reconciliation target for the LLM path's traffic ledger.
     Model-sync payloads price the CLIENT-side parameters at the raw wire
     precision, matching ``ProtocolEngine.tap_model_sync``."""
-    from repro.core.split import client_param_numel, total_param_numel
+    from repro.core.split import (client_adapter_numel, client_param_numel,
+                                  total_param_numel)
     from repro.sysmodel.traffic import round_traffic_breakdown
 
     be8 = bytes_per_elem * 8
+    peft = plan.peft is not None
     return round_traffic_breakdown(
         algo, n_clients=n_clients, tau=tau,
         smashed_elems=per_client_batch * seq * cfg.d_model,
         label_bits=per_client_batch * seq * 32,
-        client_model_bits=client_param_numel(plan) * be8,
-        full_model_bits=total_param_numel(plan) * be8 if algo == "fl" else 0,
+        client_model_bits=0 if peft else client_param_numel(plan) * be8,
+        adapter_model_bits=client_adapter_numel(plan) * be8 if peft else 0,
+        full_model_bits=total_param_numel(plan) * be8
+        if (algo == "fl" and not peft) else 0,
         uplink_codec=uplink_codec, downlink_codec=downlink_codec,
         raw_bits_per_elem=be8)
 

@@ -177,11 +177,17 @@ class ProtocolEngine:
     """Scheme semantics + codec transport + seed schedule for one run."""
 
     def __init__(self, scheme: str, uplink_codec="fp32",
-                 downlink_codec="fp32", base_seed: int = 0):
+                 downlink_codec="fp32", base_seed: int = 0,
+                 adapter_sync: bool = False):
         self.spec = scheme_spec(scheme)
         self.uplink = get_codec(uplink_codec)
         self.downlink = get_codec(downlink_codec)
         self.base_seed = int(base_seed)
+        # PEFT (DESIGN.md §17): the trees this engine syncs are adapter
+        # slivers, not full client models — meter them under the
+        # up_adapter/down_adapter ledger categories so reconciliation
+        # names them. Sizing needs no change: taps measure real leaves.
+        self.adapter_sync = bool(adapter_sync)
         # traffic ledger (repro.obs): None = zero instrumentation — the
         # transport methods trace exactly the pre-obs graphs
         self._ledger = None
@@ -229,8 +235,11 @@ class ProtocolEngine:
 
         return wire_bits(codec.name, int(numel), self._raw_bits)
 
-    def _tap_model_sync(self, tree,
-                        directions=("up_model", "down_model")) -> None:
+    def _sync_categories(self):
+        return (("up_adapter", "down_adapter") if self.adapter_sync
+                else ("up_model", "down_model"))
+
+    def _tap_model_sync(self, tree, directions=None) -> None:
         """Client-model sync (sfl φ / fl q): the aggregated tree's
         leading axis is the cohort, so per-participant numel is size/K —
         priced raw (model payloads are never codec-compressed, matching
@@ -245,7 +254,7 @@ class ProtocolEngine:
         k = int(leaves[0].shape[0])
         per = sum(int(np.prod(l.shape)) for l in leaves) // k
         bits = k * int(_math.ceil(per * self._raw_bits))
-        for cat in directions:
+        for cat in (directions or self._sync_categories()):
             self._tap(cat, bits)
 
     # -- seed schedule --------------------------------------------------
@@ -320,8 +329,7 @@ class ProtocolEngine:
         to one leg (the async engine meters down_model at dispatch and
         up_model at merge); None taps the full round-trip."""
         if self._ledger is not None and self.spec.client_aggregate:
-            self._tap_model_sync(
-                tree, directions or ("up_model", "down_model"))
+            self._tap_model_sync(tree, directions or self._sync_categories())
 
     # -- per-round model aggregation (eq. 7 + baselines) -----------------
     @staticmethod

@@ -67,6 +67,31 @@ def _layer_param_counts(cfg: ModelConfig):
     return counts
 
 
+def layer_adapter_counts(cfg: ModelConfig, peft):
+    """Per-layer TRAINABLE adapter counts under a PeftSpec (incl. the scalar
+    scale leaf per target) — the PEFT analogue of ``_layer_param_counts``.
+    Must match ``init_group_loras`` leaf for leaf: the obs-ledger measures
+    real trees, so any drift here fails reconciliation."""
+    from repro.models.transformer import lora_numel
+
+    return [lora_numel(cfg, spec, peft) for spec in layer_specs(cfg)]
+
+
+def client_adapter_numel(plan: lm_mod.ModelPlan) -> int:
+    """φ̂(v): per-client TRAINABLE parameters under PEFT — adapters of
+    layers[:cut] only (embedding is frozen base and never crosses the
+    wire). This is what model-sync and cut-migration legs price."""
+    assert plan.peft is not None, "client_adapter_numel needs a PEFT plan"
+    counts = layer_adapter_counts(plan.cfg, plan.peft)
+    return sum(counts[:plan.cut])
+
+
+def server_adapter_numel(plan: lm_mod.ModelPlan) -> int:
+    assert plan.peft is not None, "server_adapter_numel needs a PEFT plan"
+    counts = layer_adapter_counts(plan.cfg, plan.peft)
+    return sum(counts[plan.cut:])
+
+
 def flops_per_token_per_layer(cfg: ModelConfig, context: int):
     """Forward FLOPs/token per layer (backward ≈ 2x)."""
     out = []

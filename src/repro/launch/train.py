@@ -15,10 +15,16 @@ Both modes run the same protocol engine (core.protocol): ``--uplink-codec``
 
 ``--dynamic-cut`` runs the paper's headline feature — per-round cut
 migration — in either mode: a comma list ("1,2,1") is cycled over
-rounds/steps, and CNN mode also accepts ``ddqn[:EPISODES]`` to train
-Algorithm 1 first and execute its policy against the live channel
-(core.closed_loop). Migration traffic (boundary layers moving between
-client and server) is priced by ``sysmodel.traffic.migration_bits``.
+rounds/steps, and ``ddqn[:EPISODES]`` trains Algorithm 1 first (CNN mode
+executes the policy against the live channel via core.closed_loop; LM
+mode freezes the greedy rollout). Migration traffic (boundary layers
+moving between client and server) is priced by
+``sysmodel.traffic.migration_bits``.
+
+``--peft lora`` (LM mode) federates LoRA adapters instead of full client
+layers (DESIGN.md §17): the frozen base never crosses the wire, model
+sync and cut migration ship only the adapter sliver — which is what
+makes ``--bank host --dynamic-cut`` viable at bank scale.
 
 ``--cohort K --sampler S`` runs PARTIAL participation in either mode:
 each round/step samples K of ``--clients`` devices from the bank
@@ -38,6 +44,9 @@ Examples:
       --steps 4 --dynamic-cut 1,2
   python -m repro.launch.train --arch paper-cnn --scheme sfl_ga --cut 2 --rounds 100
   python -m repro.launch.train --arch paper-cnn --rounds 40 --dynamic-cut ddqn:40
+  python -m repro.launch.train --arch granite-8b --preset smoke --layers 3 \
+      --steps 4 --peft lora --lora-rank 8 --cohort 4 --clients 16 \
+      --bank host --dynamic-cut ddqn:4
 """
 from __future__ import annotations
 
@@ -104,8 +113,15 @@ def train_lm(args) -> dict:
     if args.layers:
         cfg = cfg.with_overrides(num_layers=args.layers)
     from repro.core.protocol import round_seed
-    from repro.core.split import client_param_numel
-    from repro.sysmodel.traffic import migration_bits
+    from repro.core.split import client_adapter_numel, client_param_numel
+    from repro.sysmodel.traffic import adapter_migration_bits, migration_bits
+
+    peft = None
+    if args.peft == "lora":
+        from repro.configs.base import PeftSpec
+
+        peft = PeftSpec(kind="lora", rank=args.lora_rank,
+                        alpha=args.lora_alpha)
 
     n, b, S, tau = args.clients, args.batch, args.seq, args.tau
     K = args.cohort or n
@@ -118,12 +134,29 @@ def train_lm(args) -> dict:
         spec = scheme_spec(args.scheme)
         obs.log(f"cohort: {K}/{n} clients per step ({args.sampler} sampler)")
     schedule = _parse_dynamic_cut(args, lm_mode=True)
-    cut0 = schedule(0) if schedule else args.cut
+    if isinstance(schedule, str):  # "ddqn[:EPISODES]" — train Algorithm 1
+        schedule = _lm_ddqn_schedule(schedule, args, cfg, peft, n, b, S)
+    # LM resume: the checkpoint pins the cut (and the schedule replays
+    # the identical migrations from the absolute step index)
+    done = 0
+    if args.resume:
+        from repro.checkpoint import load_checkpoint_meta
+        rmeta = load_checkpoint_meta(args.resume)
+        if str(rmeta.get("peft", "none")) != args.peft:
+            raise SystemExit(f"--resume checkpoint was trained with "
+                             f"--peft {rmeta.get('peft', 'none')}, "
+                             f"run asked for --peft {args.peft}")
+        done = int(rmeta["step"])
+        cut0 = int(rmeta["cut"])
+    else:
+        cut0 = schedule(0) if schedule else args.cut
     tcfg = TrainConfig(model=cfg, algo=args.scheme, cut_layer=cut0,
                        compute_dtype="float32", param_dtype="float32",
                        lr=args.lr, remat=False, tau=tau,
                        uplink_codec=args.uplink_codec,
-                       downlink_codec=args.downlink_codec, seed=args.seed)
+                       downlink_codec=args.downlink_codec,
+                       peft=args.peft, lora_rank=args.lora_rank,
+                       lora_alpha=args.lora_alpha, seed=args.seed)
     # one engine for the whole run: the launcher owns it (instead of
     # make_train_step's internal default) so the obs traffic ledger can
     # meter the exact transport the steps trace. float32 compute → the
@@ -133,18 +166,40 @@ def train_lm(args) -> dict:
 
     rec = obs.get_recorder()
     engine = ProtocolEngine(args.scheme, args.uplink_codec,
-                            args.downlink_codec, base_seed=args.seed)
+                            args.downlink_codec, base_seed=args.seed,
+                            adapter_sync=peft is not None)
     if rec.enabled:
         engine.attach_ledger(rec.ledger, raw_bits_per_elem=32.0,
                              label_bits_per_epoch=b * S * 32)
-    plans = {cut0: lm.build_plan(cfg, cut0)}
+    plans = {cut0: lm.build_plan(cfg, cut0, peft=peft)}
     cut = cut0
     # the BANK holds all N per-client stacks; the jitted step only ever
     # sees the K gathered participants (server side is shared, O(1) in N)
-    params = alg.split_lm_params(
-        lm.init_lm(jax.random.key(args.seed), plans[cut0], jnp.float32), n)
+    base_init = lm.init_lm(jax.random.key(args.seed), plans[cut0],
+                           jnp.float32)
+    if peft is None:
+        params = alg.split_lm_params(base_init, n)
+    else:
+        # PEFT (DESIGN.md §17): client/server hold ONLY adapter slivers;
+        # the frozen base rides under params["base"] and never trains
+        loras = lm.init_lm_loras(
+            jax.random.fold_in(jax.random.key(args.seed), 1),
+            plans[cut0], jnp.float32)
+        params = alg.split_lm_lora_params(base_init, loras, n)
+        obs.log(f"peft: lora rank {args.lora_rank} alpha "
+                f"{args.lora_alpha:g} — {client_adapter_numel(plans[cut0])}"
+                f" trainable client params/client of "
+                f"{client_param_numel(plans[cut0])} resident")
     opt = make_optimizer(args.optimizer, args.lr)
-    opt_state = opt.init(params)
+    opt_state = opt.init(alg.trainable_params(params))
+    if args.resume:
+        from repro.checkpoint import load_checkpoint
+
+        state, _ = load_checkpoint(args.resume,
+                                   {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        obs.log(f"resumed from {args.resume} at step {done} (cut {cut0}); "
+                f"--steps {args.steps} more to run")
     # --bank host: the O(N) client-side stacks (params + any optimizer
     # moments) move into host-resident ClientBanks; each step gathers
     # only the K-cohort slice onto device and the banks double-buffer
@@ -155,10 +210,14 @@ def train_lm(args) -> dict:
             raise SystemExit("--bank sharded is CNN-mode only; LM runs "
                              "shard the client bank via launch.shardings "
                              "on real meshes")
-        if schedule is not None:
-            raise SystemExit("--bank host cannot run --dynamic-cut in LM "
-                             "mode: resplit_lm_params needs the full bank "
-                             "device-resident")
+        if schedule is not None and peft is None:
+            raise SystemExit("--bank host cannot run --dynamic-cut with "
+                             "--peft none: a full-parameter resplit would "
+                             "round-trip the whole O(N) bank through the "
+                             "device every migration. Run --peft lora "
+                             "(DESIGN.md §17): only the adapter sliver "
+                             "migrates, so the host bank re-splits in O(N·"
+                             "adapter) host work with zero model wire cost")
         if sampler is None:
             raise SystemExit("--bank host needs --cohort in LM mode (the "
                              "identity cohort re-gathers the whole bank "
@@ -182,6 +241,10 @@ def train_lm(args) -> dict:
         if schedule is not None:
             raise SystemExit("--async cannot run --dynamic-cut in LM mode: "
                              "in-flight payload shapes are cut-static")
+        if args.resume:
+            raise SystemExit("--async LM mode does not support --resume "
+                             "(the event schedule is not checkpointed; "
+                             "resume the barrier loop instead)")
         if args.bank != "device":
             raise SystemExit("--async LM mode needs --bank device")
         if engine.spec.client_aggregate:
@@ -197,17 +260,19 @@ def train_lm(args) -> dict:
                              opt_state, steps_by_cut[cut0], gen_fn, rec,
                              n, K, b, S, tau)
 
-    def per_client_numel(p):
-        leaves = jax.tree.leaves(p["client"])
+    def per_client_numel(client_tree):
+        leaves = jax.tree.leaves(client_tree)
         return sum(int(np.prod(l.shape)) for l in leaves) // n
 
     it = synthetic_token_batches(cfg.vocab_size, K * b * tau, S, seed=args.seed)
+    for _ in range(done):
+        next(it)  # resume: continue the uninterrupted batch sequence
     shape = (K, b, S) if tau == 1 else (K, tau, b, S)
     losses = []
     mig_total_bits = 0
     n_migrations = 0
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(done, done + args.steps):
         if rec.enabled:
             rec.set_round(i)
         if schedule is not None:
@@ -215,31 +280,61 @@ def train_lm(args) -> dict:
             if v != cut:
                 # migrate the boundary layers (and any optimizer moments)
                 # to the new cut; migration traffic is model parameters at
-                # the raw fp32 wire (sysmodel.traffic.migration_bits)
+                # the raw fp32 wire (sysmodel.traffic.migration_bits) —
+                # under PEFT only the adapter sliver moves, the frozen
+                # base is a pure relayout (resplit_base_params)
                 if v not in plans:
-                    plans[v] = lm.build_plan(cfg, v)
+                    plans[v] = lm.build_plan(cfg, v, peft=peft)
                     steps_by_cut[v] = jax.jit(
                         alg.make_train_step(plans[v], tcfg, opt, K,
                                             engine=engine))
                 # the whole BANK migrates (resplit is N-agnostic); wire
                 # cost is paid by the K participants of the step
-                per_old = per_client_numel(params)
-                params = alg.resplit_lm_params(params, plans[cut], plans[v])
-                opt_state = alg.resplit_opt_state(opt_state, plans[cut],
-                                                  plans[v])
-                mb = migration_bits(client_param_numel(plans[cut]),
-                                    client_param_numel(plans[v]),
-                                    n_clients=K, raw_bits_per_elem=32)
+                if pbank is None:
+                    per_old = per_client_numel(params["client"])
+                    params = alg.resplit_lm_params(params, plans[cut],
+                                                   plans[v])
+                    opt_state = alg.resplit_opt_state(opt_state, plans[cut],
+                                                      plans[v])
+                    per_new = per_client_numel(params["client"])
+                else:
+                    # host bank (LoRA-only, see the guard above): pull the
+                    # adapter rows onto device, resplit, swap the banks'
+                    # contents — any staged prefetch is invalidated by
+                    # replace(), so the next gather re-slices
+                    fp = dict(params, client=pbank.tree)
+                    fo = dict(opt_state)
+                    for mk, bk in obanks.items():
+                        fo[mk] = dict(opt_state[mk], client=bk.tree)
+                    per_old = per_client_numel(fp["client"])
+                    fp = alg.resplit_lm_params(fp, plans[cut], plans[v])
+                    fo = alg.resplit_opt_state(fo, plans[cut], plans[v])
+                    per_new = per_client_numel(fp["client"])
+                    pbank.replace(fp["client"])
+                    params = dict(fp, client=None)
+                    opt_state = fo
+                    for mk, bk in obanks.items():
+                        bk.replace(fo[mk]["client"])
+                        opt_state[mk] = dict(fo[mk], client=None)
+                if peft is None:
+                    mb = migration_bits(client_param_numel(plans[cut]),
+                                        client_param_numel(plans[v]),
+                                        n_clients=K, raw_bits_per_elem=32)
+                else:
+                    mb = adapter_migration_bits(
+                        client_adapter_numel(plans[cut]),
+                        client_adapter_numel(plans[v]),
+                        n_clients=K, raw_bits_per_elem=32)
                 mig_total_bits += mb["total_bits"]
                 n_migrations += 1
                 if rec.enabled:
                     # measured from the bank tensors that actually moved
                     # sides, vs the plan-φ-delta pricing
-                    per_new = per_client_numel(params)
                     payload = abs(per_new - per_old) * 32 * K
                     rec.event(
                         "migration", name="resplit", scheme=args.scheme,
                         cut=v, cut_from=cut, participants=K,
+                        peft=args.peft,
                         measured={
                             "up_bits": payload if per_new < per_old else 0,
                             "down_bits": payload if per_new > per_old else 0,
@@ -320,8 +415,8 @@ def train_lm(args) -> dict:
             rec.event("round", name="lm_step", loss=losses[-1], cut=cut,
                       participants=K)
         if (i + 1) % args.log_every == 0:
-            obs.log(f"step {i+1}/{args.steps} loss {losses[-1]:.4f} "
-                    f"({(time.time()-t0)/(i+1):.2f} s/step)")
+            obs.log(f"step {i+1}/{done+args.steps} loss {losses[-1]:.4f} "
+                    f"({(time.time()-t0)/(i+1-done):.2f} s/step)")
     if pbank is not None:
         # close() drains the pipeline AND releases the worker threads;
         # the banks stay readable for the stats/checkpoint reads below
@@ -337,12 +432,22 @@ def train_lm(args) -> dict:
         if rec.enabled:
             rec.event("bank", name="bank", **st)
     if args.checkpoint:
-        ckpt = params if pbank is None else dict(params, client=pbank.tree)
-        save_checkpoint(args.checkpoint, ckpt,
+        # payload carries params AND optimizer state with full-bank
+        # client trees (residency-agnostic: the host banks' numpy rows
+        # serialize identically to device arrays), so --resume is
+        # bit-exact under any --bank backend
+        pl = params if pbank is None else dict(params, client=pbank.tree)
+        ol = dict(opt_state)
+        for mk, bk in obanks.items():
+            ol[mk] = dict(opt_state[mk], client=bk.tree)
+        save_checkpoint(args.checkpoint, {"params": pl, "opt": ol},
                         {"arch": cfg.name, "algo": args.scheme, "cut": cut,
-                         "steps": args.steps, "final_loss": losses[-1],
+                         "step": done + args.steps, "peft": args.peft,
+                         "lora_rank": args.lora_rank,
+                         "lora_alpha": args.lora_alpha,
+                         "final_loss": losses[-1],
                          "bank_backend": args.bank})
-        obs.log(f"checkpoint -> {args.checkpoint}")
+        obs.log(f"checkpoint -> {args.checkpoint} (step {done + args.steps})")
     # unified per-round traffic (sysmodel.traffic via the LLM adapter)
     # priced for the K participants of a step; this run computes in
     # float32, so the raw wire is 4 bytes/element
@@ -541,9 +646,13 @@ def _run_lm_async(args, cfg, plan, tcfg, engine, params, opt_state,
     if args.checkpoint:
         from repro.checkpoint import save_checkpoint
 
-        save_checkpoint(args.checkpoint, state["params"],
+        save_checkpoint(args.checkpoint,
+                        {"params": state["params"],
+                         "opt": state["opt_state"]},
                         {"arch": cfg.name, "algo": args.scheme,
-                         "cut": tcfg.cut_layer, "steps": args.steps,
+                         "cut": tcfg.cut_layer, "step": args.steps,
+                         "peft": args.peft, "lora_rank": args.lora_rank,
+                         "lora_alpha": args.lora_alpha,
                          "final_loss": losses[-1], "bank_backend": "device"})
         obs.log(f"checkpoint -> {args.checkpoint}")
     cb = alg.comm_bytes_per_round(
@@ -558,23 +667,49 @@ def _run_lm_async(args, cfg, plan, tcfg, engine, params, opt_state,
 
 def _parse_dynamic_cut(args, lm_mode: bool):
     """``--dynamic-cut`` → CutSchedule (or None). Comma list ("1,2,1") in
-    both modes; ``ddqn[:EPISODES]`` (CNN mode) is resolved by the caller,
-    which owns the env."""
+    both modes; ``ddqn[:EPISODES]`` is resolved by the caller, which owns
+    the env (CNN: the live closed loop; LM: a frozen greedy rollout)."""
     spec = args.dynamic_cut
     if not spec:
         return None
     from repro.core.closed_loop import CutSchedule
 
     if spec.startswith("ddqn"):
-        if lm_mode:
-            raise SystemExit("--dynamic-cut ddqn is CNN-mode only; give an "
-                             "explicit comma schedule for LM runs")
-        return spec  # train_cnn trains the agent (needs the env)
+        return spec  # the mode-specific caller trains the agent
     return CutSchedule.from_sequence(
         [int(v) for v in spec.split(",")], name=f"sequence[{spec}]")
 
 
+def _lm_ddqn_schedule(spec: str, args, cfg, peft, n: int, b: int, S: int):
+    """LM ``--dynamic-cut ddqn[:EPISODES]``: train Algorithm 1 on the LM's
+    φ(v)/X(v) MDP — with cut-migration pricing, adapter-cost under PEFT —
+    then FREEZE the greedy rollout as a cycled schedule. Unlike the CNN
+    closed loop the policy is not queried live per step: a frozen
+    sequence is deterministic in the step index, which is what makes
+    ``--resume`` replay the identical migrations."""
+    from repro.ccc.env import CuttingPointEnv, lm_env_config
+    from repro.ccc.strategy import run_algorithm1
+
+    if cfg.num_layers < 2:
+        raise SystemExit(f"--dynamic-cut ddqn needs >= 2 layers to have a "
+                         f"cut to move ({cfg.name} has {cfg.num_layers}; "
+                         f"try --layers 3)")
+    episodes = int(spec.split(":")[1]) if ":" in spec else 30
+    ecfg = lm_env_config(cfg, seq=S, peft=peft, n_clients=n, batch=b,
+                         seed=args.seed, cohort=args.cohort)
+    mig = "adapter-priced (lora)" if peft is not None else "full-φ-priced"
+    obs.log(f"training Algorithm 1 policy on the LM MDP ({episodes} "
+            f"episodes, {len(ecfg.phis)} cuts, migration {mig})...")
+    res = run_algorithm1(CuttingPointEnv(ecfg), episodes=episodes)
+    sched = res.cut_schedule()  # frozen greedy rollout, cycled
+    obs.log(f"ddqn schedule: {res.greedy_policy}")
+    return sched
+
+
 def train_cnn(args) -> dict:
+    if args.peft != "none":
+        raise SystemExit("--peft is LM-mode only (the paper CNN trains "
+                         "full parameters)")
     from repro.configs.paper_cnn import LIGHT_CONFIG
     from repro.core.simulator import FedSimulator, SimConfig
     from repro.data import iid_partition, make_image_dataset
@@ -816,14 +951,26 @@ def main(argv=None):
                         "(1+tau)^-LAM after tau merges in flight")
     p.add_argument("--dynamic-cut", default=None,
                    help="per-round cut schedule: comma list '1,2,1' (cycled) "
-                        "or 'ddqn[:EPISODES]' (CNN mode: train Algorithm 1 "
-                        "and execute its policy via core.closed_loop)")
+                        "or 'ddqn[:EPISODES]' (train Algorithm 1 first; CNN "
+                        "mode executes the live policy via core.closed_loop, "
+                        "LM mode freezes the greedy rollout)")
+    p.add_argument("--peft", default="none", choices=["none", "lora"],
+                   help="LM mode: federate LoRA adapters instead of full "
+                        "client layers (DESIGN.md §17) — the frozen base "
+                        "never crosses the wire, model sync and cut "
+                        "migration ship only the adapter sliver")
+    p.add_argument("--lora-rank", type=int, default=8,
+                   help="LoRA rank r per targeted projection (--peft lora)")
+    p.add_argument("--lora-alpha", type=float, default=16.0,
+                   help="LoRA scale numerator: adapters apply at alpha/r")
     p.add_argument("--layers", type=int, default=None,
                    help="override num_layers after the preset (e.g. give the "
                         "smoke preset 3 layers so --dynamic-cut 1,2 has room)")
     p.add_argument("--resume", default=None,
-                   help="CNN mode: resume a FedSimulator checkpoint (restores "
-                        "params, round counter and cut)")
+                   help="resume a checkpoint: CNN mode restores the "
+                        "FedSimulator (params, round counter, cut); LM mode "
+                        "restores params + optimizer state and fast-forwards "
+                        "the data stream (bit-exact continuation)")
     p.add_argument("--bank", default="device",
                    choices=["device", "host", "sharded"],
                    help="client-bank residency (core.bank): device (stacked "

@@ -87,7 +87,41 @@ def linear(params, x):
     y = x @ params["w"].astype(x.dtype)
     if "b" in params:
         y = y + params["b"].astype(x.dtype)
+    if "lora" in params:
+        # Factored LoRA path: y += ((x A) B) * s with s = alpha/rank. The
+        # scale rides the adapter tree as a leaf (so it survives bank/wire/
+        # checkpoint round-trips) but must stay a constant — stop_gradient
+        # keeps its grad identically zero so optimizer moments never move it.
+        lo = params["lora"]
+        s = jax.lax.stop_gradient(lo["s"]).astype(x.dtype)
+        y = y + ((x @ lo["a"].astype(x.dtype)) @ lo["b"].astype(x.dtype)) * s
     return y
+
+
+def init_lora(key, d_in: int, d_out: int, rank: int, alpha: float,
+              dtype=jnp.float32):
+    """One LoRA adapter for a ``linear``: ``{"a","b","s"}`` with B zero-init
+    (adapters start as an exact no-op) and s = alpha/rank."""
+    a = (jax.random.normal(key, (d_in, rank), jnp.float32)
+         / math.sqrt(d_in)).astype(dtype)
+    return {"a": a, "b": jnp.zeros((rank, d_out), dtype),
+            "s": jnp.asarray(alpha / rank, jnp.float32)}
+
+
+def merge_lora(base, adapter):
+    """Fold an adapter into its base linear: w' = w + s * (A @ B).
+
+    Works on stacked leaves too (leading layer axes broadcast). Exact
+    unmerge is ``w' - s * (A @ B)`` — each direction is a single rounding.
+    """
+    a32 = adapter["a"].astype(jnp.float32)
+    b32 = adapter["b"].astype(jnp.float32)
+    s = adapter["s"].astype(jnp.float32)[..., None, None]
+    delta = jnp.einsum("...ir,...ro->...io", a32, b32) * s
+    w = base["w"]
+    out = dict(base)
+    out["w"] = (w.astype(jnp.float32) + delta).astype(w.dtype)
+    return out
 
 
 def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):

@@ -16,7 +16,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PeftSpec
 from repro.models import transformer as tf
 from repro.models.blocks import cast_tree, embed, init_embedding, init_linear, init_rmsnorm, linear, rmsnorm, unembed
 
@@ -27,18 +27,24 @@ class ModelPlan:
     cut: int  # 0 = no split (everything server-side); v in [1, L-1] for SFL
     client_groups: Tuple[tf.LayerGroup, ...]
     server_groups: Tuple[tf.LayerGroup, ...]
+    # PEFT: when set, the federated/trainable unit is the adapter tree and
+    # the init_lm tree above is a frozen base (DESIGN.md §17). None keeps
+    # every full-parameter code path byte-identical to the pre-PEFT repo.
+    peft: Optional[PeftSpec] = None
 
     @property
     def num_layers(self) -> int:
         return self.cfg.num_layers
 
 
-def build_plan(cfg: ModelConfig, cut: int = 0) -> ModelPlan:
+def build_plan(cfg: ModelConfig, cut: int = 0,
+               peft: Optional[PeftSpec] = None) -> ModelPlan:
     specs = tf.layer_specs(cfg)
     assert 0 <= cut < cfg.num_layers, (cut, cfg.num_layers)
     cg = tuple(tf.group_specs(specs[:cut])) if cut else ()
     sg = tuple(tf.group_specs(specs[cut:]))
-    return ModelPlan(cfg=cfg, cut=cut, client_groups=cg, server_groups=sg)
+    return ModelPlan(cfg=cfg, cut=cut, client_groups=cg, server_groups=sg,
+                     peft=peft)
 
 
 def init_lm(key, plan: ModelPlan, dtype=jnp.float32):
@@ -55,6 +61,40 @@ def init_lm(key, plan: ModelPlan, dtype=jnp.float32):
     if not cfg.tie_embeddings or plan.cut >= 1:
         params["head"] = init_linear(kh, cfg.d_model, cfg.vocab_size, False, dtype)
     return params
+
+
+def init_lm_loras(key, plan: ModelPlan, dtype=jnp.float32):
+    """Adapter trees for a PEFT plan: ``{"client": [...], "server": [...]}``
+    group lists mirroring :func:`init_lm`'s stacking. Embedding, norms and
+    head carry no adapters — they stay frozen with the base."""
+    assert plan.peft is not None, "init_lm_loras needs a plan with peft set"
+    kc, ks = jax.random.split(key)
+    return {
+        "client": tf.init_group_loras(kc, plan.cfg, plan.client_groups,
+                                      plan.peft, dtype),
+        "server": tf.init_group_loras(ks, plan.cfg, plan.server_groups,
+                                      plan.peft, dtype),
+    }
+
+
+def attach_lm_loras(base, loras):
+    """init_lm-shaped tree with adapters attached on both halves — the
+    forward-ready view of (frozen base, trainable adapters)."""
+    return dict(
+        base,
+        client=tf.attach_group_loras(base["client"], loras["client"]),
+        server=tf.attach_group_loras(base["server"], loras["server"]),
+    )
+
+
+def merge_lm_loras(base, loras):
+    """Fold adapters into the frozen base: a plain full-parameter tree
+    (w' = w + s·AB) usable by every non-PEFT code path."""
+    return dict(
+        base,
+        client=tf.merge_group_loras(base["client"], loras["client"]),
+        server=tf.merge_group_loras(base["server"], loras["server"]),
+    )
 
 
 def _positions(cfg: ModelConfig, B: int, S: int, offset: int = 0):

@@ -17,11 +17,12 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PeftSpec
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.blocks import init_mlp, init_rmsnorm, mlp, rmsnorm
+from repro.models.blocks import (init_lora, init_mlp, init_rmsnorm,
+                                 merge_lora, mlp, rmsnorm)
 
 Spec = Tuple[str, str]  # (mixer, ffn)
 
@@ -94,6 +95,131 @@ def init_groups(key, cfg: ModelConfig, groups: Sequence[LayerGroup], dtype):
         keys = jax.random.split(sub, g.repeat)
         out.append(jax.vmap(one_layer)(keys))
     return out
+
+
+# ---------------------------------------------------------------------------
+# LoRA adapters (DESIGN.md §17)
+#
+# Adapter trees MIRROR the group param trees: a list of stacked trees, one
+# per group, tuple-per-period, nested dicts — but each targeted linear is
+# replaced by its ``{"a","b","s"}`` factor dict and everything untargeted is
+# simply absent. Because the shapes stack/scan exactly like base params, the
+# whole bank / resplit / aggregation machinery applies to adapters unchanged.
+# ---------------------------------------------------------------------------
+
+def lora_target_dims(cfg: ModelConfig, spec: Spec,
+                     peft: PeftSpec) -> dict:
+    """(d_in, d_out) per targeted projection of one sublayer, keyed like the
+    param tree (``{"attn": {"wq": ...}}``). Single source of truth for both
+    adapter init and the analytic traffic/param counts."""
+    mixer, ffn = spec
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    out: dict = {}
+    if mixer == "attn" and "attn" in peft.targets:
+        out["attn"] = {
+            "wq": (d, cfg.num_heads * hd),
+            "wk": (d, cfg.num_kv_heads * hd),
+            "wv": (d, cfg.num_kv_heads * hd),
+            "wo": (cfg.num_heads * hd, d),
+        }
+    if mixer == "ssm" and "ssm" in peft.targets:
+        s = cfg.ssm
+        d_inner = s.expand * d
+        heads = d_inner // s.head_dim
+        d_in_proj = 2 * d_inner + 2 * s.n_groups * s.state_dim + heads
+        out["ssm"] = {"in_proj": (d, d_in_proj), "out_proj": (d_inner, d)}
+    if ffn == "dense" and "mlp" in peft.targets:
+        mats = {"up": (d, cfg.d_ff), "down": (cfg.d_ff, d)}
+        if cfg.mlp_act == "swiglu":
+            mats["gate"] = (d, cfg.d_ff)
+        out["mlp"] = mats
+    if ffn == "moe" and "router" in peft.targets:
+        out["moe"] = {"router": (d, cfg.moe.num_experts)}
+    return out
+
+
+def lora_numel(cfg: ModelConfig, spec: Spec, peft: PeftSpec) -> int:
+    """Exact trainable-leaf count of one sublayer's adapters, including the
+    scalar scale leaf — must match ``init_sublayer_lora`` element for
+    element so modeled wire/migration bits reconcile with the measured
+    ledger."""
+    n = 0
+    for mats in lora_target_dims(cfg, spec, peft).values():
+        for d_in, d_out in mats.values():
+            n += peft.rank * (d_in + d_out) + 1  # A + B + s
+    return n
+
+
+def init_sublayer_lora(key, cfg: ModelConfig, spec: Spec, peft: PeftSpec,
+                       dtype):
+    p: dict = {}
+    for name, mats in sorted(lora_target_dims(cfg, spec, peft).items()):
+        key, sub = jax.random.split(key)
+        ks = jax.random.split(sub, len(mats))
+        p[name] = {m: init_lora(ks[i], dims[0], dims[1], peft.rank,
+                                peft.alpha, dtype)
+                   for i, (m, dims) in enumerate(sorted(mats.items()))}
+    return p
+
+
+def init_group_loras(key, cfg: ModelConfig, groups: Sequence[LayerGroup],
+                     peft: PeftSpec, dtype):
+    """Stacked adapter trees, one per group — same key-split/vmap pattern as
+    :func:`init_groups` so layouts line up leaf for leaf."""
+    out = []
+    for g in groups:
+        key, sub = jax.random.split(key)
+
+        def one_layer(k):
+            ks = jax.random.split(k, len(g.period))
+            return tuple(init_sublayer_lora(ks[i], cfg, s, peft, dtype)
+                         for i, s in enumerate(g.period))
+
+        keys = jax.random.split(sub, g.repeat)
+        out.append(jax.vmap(one_layer)(keys))
+    return out
+
+
+def _is_adapter(node) -> bool:
+    return isinstance(node, dict) and set(node) == {"a", "b", "s"}
+
+
+def _walk_attach(base, ad):
+    if _is_adapter(ad):
+        return dict(base, lora=ad)
+    if isinstance(ad, dict):
+        return {k: _walk_attach(base[k], ad[k]) if k in ad else base[k]
+                for k in base}
+    if isinstance(ad, (tuple, list)):
+        return type(ad)(_walk_attach(b, a) for b, a in zip(base, ad))
+    return base
+
+
+def attach_group_loras(params_list, lora_list):
+    """Structurally merge adapters into base group params: every targeted
+    linear dict gains a ``"lora"`` entry that :func:`repro.models.blocks.
+    linear` applies on the factored path. Trace-time dict surgery — no
+    copies, no extra ops on untargeted leaves."""
+    return [_walk_attach(gp, la) for gp, la in zip(params_list, lora_list)]
+
+
+def _walk_merge(base, ad):
+    if _is_adapter(ad):
+        return merge_lora(base, ad)
+    if isinstance(ad, dict):
+        return {k: _walk_merge(base[k], ad[k]) if k in ad else base[k]
+                for k in base}
+    if isinstance(ad, (tuple, list)):
+        return type(ad)(_walk_merge(b, a) for b, a in zip(base, ad))
+    return base
+
+
+def merge_group_loras(params_list, lora_list):
+    """Fold adapters into the base weights (w' = w + s·AB), returning
+    base-shaped group params — for serving/eval or parity against the
+    full-parameter path."""
+    return [_walk_merge(gp, la) for gp, la in zip(params_list, lora_list)]
 
 
 # ---------------------------------------------------------------------------

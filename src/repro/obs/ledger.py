@@ -28,11 +28,15 @@ LEDGER_CATEGORIES: Tuple[str, ...] = (
     "up_smashed",   # per-participant smashed-data payloads X(v)
     "up_labels",    # labels riding the uplink, uncompressed
     "up_model",     # client-model sync up (sfl φ, fl q)
+    "up_adapter",   # PEFT adapter sync up (lora φ̂ — DESIGN.md §17)
     "down_grad",    # cut-layer gradients (ONE broadcast for sfl_ga)
     "down_model",   # client-model sync down (sfl φ, fl q)
+    "down_adapter",  # PEFT adapter sync down
 )
-UP_CATEGORIES: Tuple[str, ...] = ("up_smashed", "up_labels", "up_model")
-DOWN_CATEGORIES: Tuple[str, ...] = ("down_grad", "down_model")
+UP_CATEGORIES: Tuple[str, ...] = ("up_smashed", "up_labels", "up_model",
+                                  "up_adapter")
+DOWN_CATEGORIES: Tuple[str, ...] = ("down_grad", "down_model",
+                                    "down_adapter")
 
 
 class TrafficLedger:

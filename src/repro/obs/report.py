@@ -165,13 +165,25 @@ def render_reconciliation(events: List[dict]) -> (Optional[str], int):
         ])
     lines = ["== traffic reconciliation (measured ledger vs "
              "sysmodel/traffic) ==", _table(headers, tab)]
+    from repro.sysmodel.payload import kind_for_category
+
     for r in rows:
         for m in r["mismatches"]:
             lines.append(
                 f"  !! round {r.get('round')} {r['kind']} "
-                f"[{m['category']}]: measured {m['measured_bits']} b != "
+                f"[{m['category']}: {kind_for_category(m['category'])}]: "
+                f"measured {m['measured_bits']} b != "
                 f"modeled {m['modeled_bits']} b "
                 f"(delta {m['delta_bits']:+d} b)")
+    # Name the adapter flows when a PEFT run priced them, so the traffic
+    # section says what kind of payload those bytes were (ISSUE 9 §6).
+    adapter_bits = sum(
+        int((e.get("measured") or {}).get(c, 0))
+        for e in events if e.get("kind") == "traffic"
+        for c in ("up_adapter", "down_adapter"))
+    if adapter_bits:
+        lines.append(f"  adapter payloads: {_fmt_bits(adapter_bits)} "
+                     f"({kind_for_category('up_adapter')})")
     n_ok = len(rows) - bad
     lines.append(f"  {n_ok}/{len(rows)} events reconcile exactly"
                  + ("" if not bad else f"; {bad} MISMATCHED — pricing bug"))

@@ -87,6 +87,43 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
     return Optimizer(init, update)
 
 
+def masked(inner: Optimizer, mask) -> Optimizer:
+    """Trainable/frozen partition at the optimizer level (DESIGN.md §17).
+
+    ``mask`` is a params-shaped pytree of bools (True = trainable). Inner
+    state is built over the trainable leaves ONLY — moments literally do
+    not exist for frozen leaves, so a LoRA run's optimizer state is
+    adapter-sized. Frozen leaves get exact-zero updates.
+    """
+    mask_leaves = [bool(m) for m in jax.tree.leaves(mask)]
+
+    def _flat(tree):
+        leaves, treedef = jax.tree.flatten(tree)
+        assert len(leaves) == len(mask_leaves), \
+            "masked(): tree/mask structure mismatch"
+        return leaves, treedef
+
+    def _select(leaves):
+        return [x for x, m in zip(leaves, mask_leaves) if m]
+
+    def init(params):
+        leaves, _ = _flat(params)
+        return inner.init(_select(leaves))
+
+    def update(grads, state, params=None):
+        g_leaves, treedef = _flat(grads)
+        p_sel = None
+        if params is not None:
+            p_sel = _select(_flat(params)[0])
+        upd_sel, state = inner.update(_select(g_leaves), state, p_sel)
+        it = iter(upd_sel)
+        out = [next(it) if m else jnp.zeros_like(g)
+               for g, m in zip(g_leaves, mask_leaves)]
+        return jax.tree.unflatten(treedef, out), state
+
+    return Optimizer(init, update)
+
+
 def make_optimizer(name: str, lr, weight_decay: float = 0.0) -> Optimizer:
     if name == "sgd":
         return sgd(lr)

@@ -62,6 +62,7 @@ def round_traffic_breakdown(scheme: str, *, n_clients: int, tau: int = 1,
                             smashed_elems: int = 0, label_bits: int = 0,
                             client_model_bits: int = 0,
                             full_model_bits: int = 0,
+                            adapter_model_bits: int = 0,
                             uplink_codec: str = "fp32",
                             downlink_codec: str = "fp32",
                             raw_bits_per_elem: float = 32.0
@@ -74,15 +75,27 @@ def round_traffic_breakdown(scheme: str, *, n_clients: int, tau: int = 1,
     (not just as up/down totals). The ``fl`` full-model exchange lands
     in the model-sync rows (``up_model``/``down_model``): it IS model
     sync, with q in place of φ.
+
+    PEFT (DESIGN.md §17): with ``adapter_model_bits`` set, the federated
+    unit is the adapter sliver φ̂, not φ/q — model-sync legs move to the
+    ``up_adapter``/``down_adapter`` categories (the smashed-data boundary
+    is unchanged; only the parameter legs shrink). Mutually exclusive
+    with ``client_model_bits``/``full_model_bits``.
     """
     if scheme not in SCHEMES:
         raise ValueError(f"unknown scheme {scheme!r}; known: {SCHEMES}")
+    if adapter_model_bits and (client_model_bits or full_model_bits):
+        raise ValueError("adapter_model_bits replaces client/full model "
+                         "bits — pass one or the other, not both")
     N = n_clients
-    bd = {"up_smashed": 0, "up_labels": 0, "up_model": 0,
-          "down_grad": 0, "down_model": 0}
+    bd = {"up_smashed": 0, "up_labels": 0, "up_model": 0, "up_adapter": 0,
+          "down_grad": 0, "down_model": 0, "down_adapter": 0}
+    up_sync, down_sync = ("up_adapter", "down_adapter") \
+        if adapter_model_bits else ("up_model", "down_model")
     if scheme == "fl":
-        bd["up_model"] = N * full_model_bits
-        bd["down_model"] = N * full_model_bits
+        q = adapter_model_bits or full_model_bits
+        bd[up_sync] = N * q
+        bd[down_sync] = N * q
     else:
         X_up = wire_bits(uplink_codec, smashed_elems, raw_bits_per_elem)
         X_dn = wire_bits(downlink_codec, smashed_elems, raw_bits_per_elem)
@@ -93,9 +106,10 @@ def round_traffic_breakdown(scheme: str, *, n_clients: int, tau: int = 1,
         elif scheme == "psl":
             bd["down_grad"] = N * tau * X_dn
         else:  # sfl: per-client unicast + client-model sync round-trip
-            bd["up_model"] = N * client_model_bits
+            phi = adapter_model_bits or client_model_bits
+            bd[up_sync] = N * phi
             bd["down_grad"] = N * tau * X_dn
-            bd["down_model"] = N * client_model_bits
+            bd[down_sync] = N * phi
     return {k: int(v) for k, v in bd.items()}
 
 
@@ -112,8 +126,8 @@ def round_traffic_bits(scheme: str, **kw) -> Dict[str, int]:
     cannot drift apart.
     """
     bd = round_traffic_breakdown(scheme, **kw)
-    up = bd["up_smashed"] + bd["up_labels"] + bd["up_model"]
-    down = bd["down_grad"] + bd["down_model"]
+    up = bd["up_smashed"] + bd["up_labels"] + bd["up_model"] + bd["up_adapter"]
+    down = bd["down_grad"] + bd["down_model"] + bd["down_adapter"]
     return {"up_bits": int(up), "down_bits": int(down),
             "total_bits": int(up + down)}
 
@@ -142,6 +156,19 @@ def migration_bits(phi_old: int, phi_new: int, *, n_clients: int,
     payload = int(math.ceil(abs(delta) * raw_bits_per_elem)) * n_clients
     up, down = (payload, 0) if delta < 0 else (0, payload)
     return {"up_bits": up, "down_bits": down, "total_bits": up + down}
+
+
+def adapter_migration_bits(adapter_phi_old: int, adapter_phi_new: int, *,
+                           n_clients: int,
+                           raw_bits_per_elem: float = 32.0) -> Dict[str, int]:
+    """PEFT cut migration (DESIGN.md §17): the frozen base is replicated on
+    both sides of every cut, so a cut move ships ONLY the adapter sliver
+    φ̂(v) — same direction/unicast structure as :func:`migration_bits`,
+    with adapter counts from ``core.split.client_adapter_numel`` in place
+    of φ. This is what makes dynamic cuts nearly free under LoRA."""
+    return migration_bits(adapter_phi_old, adapter_phi_new,
+                          n_clients=n_clients,
+                          raw_bits_per_elem=raw_bits_per_elem)
 
 
 def round_traffic_bytes(scheme: str, **kw) -> Dict[str, int]:

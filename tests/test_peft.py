@@ -1,0 +1,436 @@
+"""PEFT federation tests (DESIGN.md §17): LoRA adapters as the federated
+unit across models, optimizer, resplit, bank, traffic and the launcher.
+
+Invariants pinned here:
+
+* ``--peft none`` bit-parity: the trainable/frozen partition is the
+  identity on full-parameter trees, so ``opt.init(trainable_params(p))``
+  is structurally and numerically ``opt.init(p)``.
+* LoRA exactness: zero-init adapters are an exact forward no-op; a
+  merge→unmerge round-trip recovers the base weights to ≤ 1 ulp (each
+  direction is a single f32 rounding).
+* Adapter-only resplit parity: with equal client copies, folding
+  adapters commutes with moving the cut — the adapter path and the
+  full-parameter path land on bit-identical merged models.
+* Bank residency is invisible: ``--bank device`` and ``--bank host``
+  produce byte-identical checkpoint payloads under LoRA.
+* Traffic: adapter model-sync/migration legs price exactly per the
+  closed forms, and the closed forms match the real trees leaf count
+  for leaf count (the obs-ledger reconciliation invariant).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_config, reduced_config
+from repro.configs.base import PeftSpec
+from repro.core import algorithms as alg
+from repro.core.split import (client_adapter_numel, client_param_numel,
+                              layer_adapter_counts, server_adapter_numel)
+from repro.models import lm
+from repro.models.blocks import init_lora, merge_lora
+from repro.optim.optimizers import adamw, make_optimizer, masked
+
+PEFT8 = PeftSpec(kind="lora", rank=8, alpha=16.0)
+
+
+def _cfg(layers=3):
+    return reduced_config(get_config("granite-8b")).with_overrides(
+        num_layers=layers)
+
+
+def _randomize_b(loras, scale=0.02, seed=7):
+    """Give every zero-init B a nonzero value (keyed per leaf) so merge /
+    forward tests exercise a non-trivial adapter."""
+    leaves, treedef = jax.tree.flatten(loras)
+    rng = np.random.RandomState(seed)
+    out = []
+    for x in leaves:
+        if x.ndim >= 2:  # a/b matrices; leave the scalar "s" leaves alone
+            out.append(jnp.asarray(rng.randn(*x.shape) * scale, x.dtype))
+        else:
+            out.append(x)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _batch(cfg, n, b, s, seed=0):
+    rng = np.random.RandomState(seed)
+    return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (n, b, s))),
+            "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (n, b, s)))}
+
+
+class TestLoraPrimitives:
+    def test_zero_init_is_exact_noop(self):
+        cfg = _cfg()
+        plan = lm.build_plan(cfg, cut=1, peft=PEFT8)
+        base = lm.init_lm(jax.random.key(0), plan, jnp.float32)
+        loras = lm.init_lm_loras(jax.random.key(1), plan, jnp.float32)
+        toks = _batch(cfg, 1, 2, 16)["tokens"][0]
+        labels = _batch(cfg, 1, 2, 16)["labels"][0]
+        l0, _ = lm.lm_loss(base, plan, toks, labels, dtype=jnp.float32)
+        l1, _ = lm.lm_loss(lm.attach_lm_loras(base, loras), plan, toks,
+                           labels, dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+    def test_merge_unmerge_within_one_ulp(self):
+        rng = np.random.RandomState(0)
+        d_in, d_out, r = 64, 48, 8
+        base = {"w": jnp.asarray(rng.randn(d_in, d_out), jnp.float32)}
+        ad = init_lora(jax.random.key(0), d_in, d_out, r, alpha=16.0)
+        ad["b"] = jnp.asarray(rng.randn(r, d_out) * 0.02, jnp.float32)
+        merged = merge_lora(base, ad)
+        delta = (jnp.einsum("...ir,...ro->...io",
+                            ad["a"].astype(jnp.float32),
+                            ad["b"].astype(jnp.float32))
+                 * ad["s"].astype(jnp.float32))
+        rec = np.asarray(merged["w"], np.float64) - np.asarray(delta,
+                                                               np.float64)
+        w = np.asarray(base["w"], np.float64)
+        tol = np.spacing(np.abs(np.asarray(merged["w"],
+                                           np.float32))).astype(np.float64)
+        assert np.all(np.abs(rec - w) <= tol), "merge/unmerge drifts > 1 ulp"
+
+    def test_merged_forward_matches_factored(self):
+        cfg = _cfg()
+        plan = lm.build_plan(cfg, cut=1, peft=PEFT8)
+        base = lm.init_lm(jax.random.key(0), plan, jnp.float32)
+        loras = _randomize_b(lm.init_lm_loras(jax.random.key(1), plan,
+                                              jnp.float32))
+        toks = _batch(cfg, 1, 2, 16)["tokens"][0]
+        labels = _batch(cfg, 1, 2, 16)["labels"][0]
+        lf, _ = lm.lm_loss(lm.attach_lm_loras(base, loras), plan, toks,
+                           labels, dtype=jnp.float32)
+        lmg, _ = lm.lm_loss(lm.merge_lm_loras(base, loras), plan, toks,
+                            labels, dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lmg),
+                                   rtol=2e-5, atol=1e-6)
+
+
+class TestPeftLayout:
+    def test_adapter_counts_match_real_trees(self):
+        """Closed-form φ̂ == real adapter-tree leaf counts — the invariant
+        the obs-ledger reconciliation rests on."""
+        cfg = _cfg()
+        for cut in (1, 2):
+            plan = lm.build_plan(cfg, cut=cut, peft=PEFT8)
+            loras = lm.init_lm_loras(jax.random.key(0), plan, jnp.float32)
+            n_client = sum(int(np.asarray(x).size)
+                           for x in jax.tree.leaves(loras["client"]))
+            n_server = sum(int(np.asarray(x).size)
+                           for x in jax.tree.leaves(loras["server"]))
+            assert client_adapter_numel(plan) == n_client
+            assert server_adapter_numel(plan) == n_server
+        counts = layer_adapter_counts(cfg, PEFT8)
+        assert len(counts) == cfg.num_layers and all(c > 0 for c in counts)
+
+    def test_trainable_params_identity_for_full_trees(self):
+        """``--peft none`` bit-parity: opt.init(trainable_params(p)) must
+        be opt.init(p) — same structure, same values."""
+        cfg = _cfg(layers=2)
+        plan = lm.build_plan(cfg, cut=1)
+        split = alg.split_lm_params(lm.init_lm(jax.random.key(0), plan,
+                                               jnp.float32), 2)
+        opt = make_optimizer("adamw", 1e-3)
+        a, b = opt.init(alg.trainable_params(split)), opt.init(split)
+        assert jax.tree.structure(a) == jax.tree.structure(b)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_trainable_params_drops_frozen_base(self):
+        cfg = _cfg(layers=2)
+        plan = lm.build_plan(cfg, cut=1, peft=PEFT8)
+        base = lm.init_lm(jax.random.key(0), plan, jnp.float32)
+        loras = lm.init_lm_loras(jax.random.key(1), plan, jnp.float32)
+        split = alg.split_lm_lora_params(base, loras, 2)
+        tr = alg.trainable_params(split)
+        assert set(tr) == {"client", "server"} and "base" in split
+        # the trainable slice is adapter-sized, not model-sized
+        n_tr = sum(x.size for x in jax.tree.leaves(tr))
+        n_base = sum(x.size for x in jax.tree.leaves(split["base"]))
+        assert n_tr < n_base / 10
+
+
+class TestMaskedOptimizer:
+    def test_frozen_leaves_get_exact_zero_updates(self):
+        params = {"a": jnp.asarray([1.0, 2.0]), "b": jnp.asarray([3.0, 4.0])}
+        grads = {"a": jnp.asarray([0.5, -0.5]), "b": jnp.asarray([1.0, 1.0])}
+        mask = {"a": True, "b": False}
+        opt = masked(adamw(1e-2), mask)
+        state = opt.init(params)
+        upd, state = opt.update(grads, state, params)
+        np.testing.assert_array_equal(np.asarray(upd["b"]), 0.0)
+        # trainable leaf matches the unmasked inner on the sub-tree
+        ref = adamw(1e-2)
+        rstate = ref.init([params["a"]])
+        rupd, _ = ref.update([grads["a"]], rstate, [params["a"]])
+        np.testing.assert_array_equal(np.asarray(upd["a"]),
+                                      np.asarray(rupd[0]))
+
+    def test_moments_exist_only_for_trainable_leaves(self):
+        params = {"a": jnp.zeros(3), "b": jnp.zeros(5)}
+        opt = masked(adamw(1e-2), {"a": True, "b": False})
+        state = opt.init(params)
+        n_moment = sum(x.size for x in jax.tree.leaves(state)
+                       if hasattr(x, "size") and x.ndim > 0)
+        assert n_moment == 2 * 3  # adamw m+v over "a" only
+
+
+class TestResplit:
+    def test_adapter_resplit_roundtrip_lossless(self):
+        cfg = _cfg()
+        p1 = lm.build_plan(cfg, cut=1, peft=PEFT8)
+        p2 = lm.build_plan(cfg, cut=2, peft=PEFT8)
+        base = lm.init_lm(jax.random.key(0), p1, jnp.float32)
+        loras = _randomize_b(lm.init_lm_loras(jax.random.key(1), p1,
+                                              jnp.float32))
+        split = alg.split_lm_lora_params(base, loras, 3)
+        back = alg.resplit_lm_params(
+            alg.resplit_lm_params(split, p1, p2), p2, p1)
+        for x, y in zip(jax.tree.leaves(split), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    @pytest.mark.parametrize("v_new", [2, 1])
+    def test_adapter_resplit_matches_full_resplit(self, v_new):
+        """Folding adapters commutes with moving the cut: the adapter-only
+        migration path and the full-parameter path reach bit-identical
+        merged models (n=2: the ρ-mean of equal copies is exact)."""
+        cfg = _cfg()
+        n, v_old = 2, 1 if v_new == 2 else 2
+        po_f, pn_f = lm.build_plan(cfg, v_old), lm.build_plan(cfg, v_new)
+        po_a = lm.build_plan(cfg, v_old, peft=PEFT8)
+        pn_a = lm.build_plan(cfg, v_new, peft=PEFT8)
+        base = lm.init_lm(jax.random.key(0), po_a, jnp.float32)
+        loras = _randomize_b(lm.init_lm_loras(jax.random.key(1), po_a,
+                                              jnp.float32))
+        # full-parameter world: fold first, then split+move
+        full0 = lm.merge_lm_loras(base, loras)
+        rs_full = alg.resplit_lm_params(
+            alg.split_lm_params(full0, n), po_f, pn_f)
+        # adapter world: split+move adapters (base relayout only), fold last
+        rs_peft = alg.resplit_lm_params(
+            alg.split_lm_lora_params(base, loras, n), po_a, pn_a)
+        ma = alg.merge_lm_lora_params(rs_peft)
+        mf = alg.merge_lm_params(rs_full)
+        assert jax.tree.structure(ma) == jax.tree.structure(mf)
+        for x, y in zip(jax.tree.leaves(ma), jax.tree.leaves(mf)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_resplit_base_pure_relayout(self):
+        cfg = _cfg()
+        p1 = lm.build_plan(cfg, cut=1, peft=PEFT8)
+        p2 = lm.build_plan(cfg, cut=2, peft=PEFT8)
+        base = lm.init_lm(jax.random.key(0), p1, jnp.float32)
+        back = alg.resplit_base_params(
+            alg.resplit_base_params(base, p1, p2), p2, p1)
+        for x, y in zip(jax.tree.leaves(base), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestAdapterTraffic:
+    def test_adapter_breakdown_golden(self):
+        from repro.sysmodel.traffic import (round_traffic_breakdown,
+                                            wire_bits)
+
+        N, tau, X, lab, ph = 4, 2, 1000, 256, 7777
+        bd = round_traffic_breakdown("sfl", n_clients=N, tau=tau,
+                                     smashed_elems=X, label_bits=lab,
+                                     adapter_model_bits=ph,
+                                     uplink_codec="int8")
+        assert bd["up_adapter"] == N * ph and bd["down_adapter"] == N * ph
+        assert bd["up_model"] == 0 and bd["down_model"] == 0
+        assert bd["up_smashed"] == N * tau * wire_bits("int8", X)
+        assert bd["up_labels"] == N * tau * lab
+        assert bd["down_grad"] == N * tau * wire_bits("fp32", X)
+        # fl: the adapter IS the exchanged model
+        bd = round_traffic_breakdown("fl", n_clients=N,
+                                     adapter_model_bits=ph)
+        assert bd["up_adapter"] == bd["down_adapter"] == N * ph
+        assert sum(bd.values()) == 2 * N * ph
+
+    def test_adapter_bits_mutually_exclusive(self):
+        from repro.sysmodel.traffic import round_traffic_breakdown
+
+        with pytest.raises(ValueError, match="adapter_model_bits"):
+            round_traffic_breakdown("sfl", n_clients=2, smashed_elems=10,
+                                    adapter_model_bits=5,
+                                    client_model_bits=100)
+
+    def test_adapter_migration_bits(self):
+        from repro.sysmodel.traffic import (adapter_migration_bits,
+                                            migration_bits)
+
+        grow = adapter_migration_bits(100, 250, n_clients=3)
+        assert grow == migration_bits(100, 250, n_clients=3)
+        assert grow["down_bits"] == 150 * 32 * 3 and grow["up_bits"] == 0
+        shrink = adapter_migration_bits(250, 100, n_clients=3)
+        assert shrink["up_bits"] == 150 * 32 * 3
+        assert shrink["down_bits"] == 0
+
+    def test_comm_accounting_uses_adapter_legs_under_peft(self):
+        cfg = _cfg()
+        full = lm.build_plan(cfg, cut=1)
+        peft = lm.build_plan(cfg, cut=1, peft=PEFT8)
+        K, b, S = 4, 2, 32
+        bd_f = alg.comm_breakdown_per_round(cfg, full, "sfl", K, b, S,
+                                            bytes_per_elem=4)
+        bd_a = alg.comm_breakdown_per_round(cfg, peft, "sfl", K, b, S,
+                                            bytes_per_elem=4)
+        assert bd_f["up_adapter"] == bd_f["down_adapter"] == 0
+        assert bd_a["up_model"] == bd_a["down_model"] == 0
+        assert bd_a["up_adapter"] == K * client_adapter_numel(peft) * 32
+        assert bd_a["up_adapter"] < bd_f["up_model"]
+        # the smashed-data boundary is peft-agnostic
+        assert bd_a["up_smashed"] == bd_f["up_smashed"]
+        assert bd_a["down_grad"] == bd_f["down_grad"]
+
+    def test_ledger_and_payload_name_adapter_categories(self):
+        from repro.obs.ledger import LEDGER_CATEGORIES
+        from repro.sysmodel.payload import kind_for_category
+
+        assert {"up_adapter", "down_adapter"} <= set(LEDGER_CATEGORIES)
+        assert "adapter" in kind_for_category("up_adapter").lower()
+
+    def test_engine_sync_categories_follow_adapter_flag(self):
+        from repro.core.protocol import ProtocolEngine
+
+        assert ProtocolEngine("sfl")._sync_categories() == \
+            ("up_model", "down_model")
+        assert ProtocolEngine("sfl", adapter_sync=True)._sync_categories() \
+            == ("up_adapter", "down_adapter")
+
+
+class TestEnvMigrationPricing:
+    def _cfg_env(self, **kw):
+        from repro.ccc.env import CuttingEnvConfig
+
+        return CuttingEnvConfig(phis=(100, 200, 300),
+                                smashed_elems=(64, 32, 16),
+                                flop_fracs=(0.2, 0.5, 0.8),
+                                total_params=1000, n_clients=3, **kw)
+
+    def test_migration_cost_prices_the_switch(self):
+        from repro.ccc.env import CuttingPointEnv
+        from repro.sysmodel.traffic import migration_bits
+
+        env = CuttingPointEnv(self._cfg_env(mig_phis=(10, 20, 30)))
+        env.reset()
+        assert env.migration_cost(2, 1.0, 1e6) == (0.0, 0)  # no prior cut
+        env.prev_v = 1
+        lat, bits = env.migration_cost(2, 2.0, 1e6)
+        want = migration_bits(10, 20, n_clients=3)["total_bits"]
+        assert bits == want and lat == pytest.approx(2.0 * (want / 3) / 1e6)
+        assert env.migration_cost(1, 2.0, 1e6) == (0.0, 0)  # same cut
+
+    def test_default_none_is_free_and_step_reports_keys(self):
+        from repro.ccc.env import CuttingPointEnv
+
+        env = CuttingPointEnv(self._cfg_env())
+        env.reset()
+        env.prev_v = 1
+        assert env.migration_cost(3, 1.0, 1e6) == (0.0, 0)
+        _, _, _, info = env.step(1)
+        assert info["mig_bits"] == 0 and info["mig_latency"] == 0.0
+
+    def test_batched_env_rejects_mig_phis(self):
+        from repro.ccc.env import BatchedCuttingPointEnv
+
+        with pytest.raises(ValueError, match="scalar-env only"):
+            BatchedCuttingPointEnv(self._cfg_env(mig_phis=(10, 20, 30)), 2)
+
+    def test_lm_env_config_adapter_sized_migration(self):
+        from repro.ccc.env import lm_env_config
+
+        cfg = _cfg()
+        seq = 32
+        ec = lm_env_config(cfg, seq=seq, peft=PEFT8, n_clients=4)
+        assert len(ec.phis) == cfg.num_layers - 1
+        assert ec.smashed_elems == tuple(seq * cfg.d_model
+                                         for _ in ec.phis)
+        for v in range(1, cfg.num_layers):
+            plan = lm.build_plan(cfg, v, peft=PEFT8)
+            assert ec.mig_phis[v - 1] == client_adapter_numel(plan)
+            assert ec.phis[v - 1] == client_param_numel(plan)
+            assert ec.mig_phis[v - 1] < ec.phis[v - 1]
+        # without peft, migration moves the full client slice
+        ec0 = lm_env_config(cfg, seq=seq, n_clients=4)
+        assert ec0.mig_phis == ec0.phis
+
+
+def _payload_bytes(path):
+    """Checkpoint bytes after the msgpack header (headers may differ in
+    meta — e.g. bank_backend — while payloads must agree)."""
+    import msgpack
+
+    data = open(path, "rb").read()
+    unp = msgpack.Unpacker(raw=False)
+    unp.feed(data)
+    unp.unpack()
+    return data[unp.tell():]
+
+
+BASE_FLAGS = ["--arch", "granite-8b", "--preset", "smoke", "--layers", "3",
+              "--peft", "lora", "--lora-rank", "8", "--scheme", "sfl",
+              "--optimizer", "adamw", "--cohort", "2", "--clients", "4",
+              "--batch", "1", "--seq", "32", "--quiet"]
+
+
+class TestLauncherPeft:
+    def test_host_dynamic_cut_requires_lora(self):
+        from repro.launch.train import main
+
+        with pytest.raises(SystemExit, match="lora"):
+            main(["--arch", "granite-8b", "--preset", "smoke", "--layers",
+                  "3", "--steps", "1", "--bank", "host", "--dynamic-cut",
+                  "1,2", "--quiet"])
+
+    def test_peft_is_lm_only(self):
+        from repro.launch.train import main
+
+        with pytest.raises(SystemExit, match="LM"):
+            main(["--arch", "paper-cnn", "--rounds", "1", "--peft", "lora"])
+
+    def test_resume_peft_mismatch_rejected(self, tmp_path):
+        from repro.launch.train import main
+
+        ck = os.path.join(tmp_path, "lora.ckpt")
+        main(BASE_FLAGS + ["--steps", "1", "--cut", "1", "--checkpoint", ck])
+        with pytest.raises(SystemExit, match="peft"):
+            main(["--arch", "granite-8b", "--preset", "smoke", "--layers",
+                  "3", "--steps", "1", "--resume", ck, "--quiet"])
+
+    def test_bank_residency_bit_parity(self, tmp_path):
+        """--bank device and --bank host must be numerically invisible:
+        byte-identical checkpoint payloads under LoRA + adamw."""
+        from repro.launch.train import main
+
+        cks = {}
+        for bank in ("device", "host"):
+            cks[bank] = os.path.join(tmp_path, f"{bank}.ckpt")
+            main(BASE_FLAGS + ["--steps", "2", "--cut", "1", "--bank", bank,
+                               "--checkpoint", cks[bank]])
+        dev, host = (_payload_bytes(cks[b]) for b in ("device", "host"))
+        assert dev == host, "bank residency changed the trained bits"
+
+    def test_resume_bit_identity_host_dynamic(self, tmp_path):
+        """End-to-end acceptance: LoRA + host bank + dynamic cut resumes
+        bit-identically (migrations replay deterministically)."""
+        from repro.checkpoint import load_checkpoint_meta
+        from repro.launch.train import main
+
+        flags = BASE_FLAGS + ["--bank", "host", "--dynamic-cut", "1,2"]
+        ck_full = os.path.join(tmp_path, "full.ckpt")
+        ck_half = os.path.join(tmp_path, "half.ckpt")
+        ck_res = os.path.join(tmp_path, "res.ckpt")
+        main(flags + ["--steps", "4", "--checkpoint", ck_full])
+        main(flags + ["--steps", "2", "--checkpoint", ck_half])
+        main(flags + ["--steps", "2", "--resume", ck_half,
+                      "--checkpoint", ck_res])
+        mf, mr = load_checkpoint_meta(ck_full), load_checkpoint_meta(ck_res)
+        assert mf["step"] == mr["step"] == 4
+        assert mf["peft"] == mr["peft"] == "lora"
+        assert mf["cut"] == mr["cut"]
+        with open(ck_full, "rb") as a, open(ck_res, "rb") as b:
+            assert a.read() == b.read(), "resume diverged from straight run"
