@@ -203,6 +203,27 @@ def bench_kernels():
     return " ".join(f"{n}={us:.0f}us" for n, us in rows)
 
 
+def bench_serve():
+    """Continuous-batching split decode (DESIGN.md §18): aggregate tok/s
+    vs the fixed-batch sequential baseline at equal slot count with a
+    heavy-tailed queue — must clear 2x — plus p50/p99 per-token latency
+    and exact decode/prefill traffic reconciliation."""
+    from benchmarks import serve_bench as f
+
+    out = f.run()
+    assert out["traffic_mismatches"] == 0, \
+        f"serve traffic ledger mismatches: {out['traffic_mismatches']}"
+    assert out["speedup"] >= 2.0, \
+        f"continuous batching speedup {out['speedup']:.2f}x < 2x gate"
+    cont = next(r for r in out["rows"] if r["scheduler"] == "continuous"
+                and r["users"] == max(r2["users"] for r2 in out["rows"]))
+    return ("speedup=%.2fx cont_tok_s=%.0f p50_ms=%.1f p99_ms=%.1f "
+            "slo=%.3f traffic_events=%d reconcile_exact=True"
+            % (out["speedup"], cont["tok_per_s"], cont["p50_s"] * 1e3,
+               cont["p99_s"] * 1e3, cont["slo_attainment"],
+               out["traffic_events"]))
+
+
 BENCHES = [
     ("kernels_micro", bench_kernels),
     ("fig8_latency_vs_bandwidth", bench_fig8),
@@ -218,6 +239,7 @@ BENCHES = [
     ("fig11_scale_bank_host", bench_fig11_bank_host),
     ("fig12_async", bench_fig12),
     ("fig13_peft", bench_fig13),
+    ("serve_continuous_batching", bench_serve),
 ]
 
 

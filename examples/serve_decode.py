@@ -1,17 +1,56 @@
-"""Serving example: prefill + batched greedy decode for two architecture
-families — a dense GQA model and an attention-free Mamba-2 (whose decode
+"""Serving example: the continuous-batching split decode engine for two
+architecture families — a dense GQA model (paged KV cache + the Pallas
+paged-attention kernel path) and an attention-free Mamba-2 (whose decode
 state is O(1) in context length — the long_500k story).
 
-Each arch emits the per-token latency schema (``serve_token`` /
-``serve_summary`` events, repro.obs.v1) into its own metrics dir when
-``--metrics-dir`` is given; render with ``python -m repro.obs.report DIR``.
+The GQA model goes through the ``repro.launch.serve`` CLI; the Mamba-2
+model drives the :class:`repro.core.serve_engine.ServeEngine` API
+directly — launcher and example share one engine code path (ROADMAP
+item 4). Each arch emits the per-token latency schema (``serve_token`` /
+``serve_summary`` events plus per-step ``traffic`` reconciliation,
+repro.obs.v1) into its own metrics dir when ``--metrics-dir`` is given;
+render with ``python -m repro.obs.report DIR``.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--metrics-dir DIR]
 """
 import argparse
 import os
 
+from repro import obs
 from repro.launch import serve as serve_mod
+
+
+def _engine_api_demo(arch: str, metrics_dir=None, quiet: bool = False):
+    """Drive the ServeEngine directly (what the launcher wraps)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced_config
+    from repro.core.serve_engine import ServeEngine, make_requests
+    from repro.models import lm
+
+    rec = None
+    if metrics_dir:
+        rec = obs.Recorder(metrics_dir, quiet=quiet, config={"arch": arch})
+        obs.set_recorder(rec)
+    obs.set_quiet(quiet)
+    try:
+        cfg = reduced_config(get_config(arch))
+        plan = lm.build_plan(cfg, 1)
+        params = lm.init_lm(jax.random.key(0), plan, jnp.float32)
+        engine = ServeEngine(params, plan, slots=2, max_len=48,
+                             page_size=16, codec="fp32", slo_ms=500.0)
+        for req in make_requests(4, 32, 12, vocab_size=cfg.vocab_size):
+            engine.submit(req)
+        engine.run()
+        s = engine.emit_summary()
+        print(f"  {arch}: {s['users']} users, {s['tokens']} tokens, "
+              f"{s['tok_per_s']:.1f} tok/s, p50 {s['p50_s'] * 1e3:.1f}ms")
+    finally:
+        if rec is not None:
+            rec.close()
+            obs.set_recorder(None)
+        obs.set_quiet(False)
 
 
 def main(argv=None):
@@ -21,15 +60,22 @@ def main(argv=None):
     p.add_argument("--quiet", action="store_true")
     args = p.parse_args(argv)
 
-    for arch in ("granite-8b", "mamba2-130m"):
-        print(f"\n=== {arch} (reduced config) ===")
-        extra = []
-        if args.metrics_dir:
-            extra += ["--metrics-dir", os.path.join(args.metrics_dir, arch)]
-        if args.quiet:
-            extra += ["--quiet"]
-        serve_mod.main(["--arch", arch, "--preset", "smoke", "--batch", "2",
-                        "--prompt-len", "32", "--gen", "12"] + extra)
+    print("\n=== granite-8b (reduced config, via the serve launcher) ===")
+    extra = []
+    if args.metrics_dir:
+        extra += ["--metrics-dir", os.path.join(args.metrics_dir, "granite-8b")]
+    if args.quiet:
+        extra += ["--quiet"]
+    serve_mod.main(["--arch", "granite-8b", "--preset", "smoke",
+                    "--users", "4", "--slots", "2", "--prompt-len", "32",
+                    "--gen", "12", "--codec", "int8"] + extra)
+
+    print("\n=== mamba2-130m (reduced config, via the engine API) ===")
+    _engine_api_demo(
+        "mamba2-130m",
+        metrics_dir=(os.path.join(args.metrics_dir, "mamba2-130m")
+                     if args.metrics_dir else None),
+        quiet=args.quiet)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.grad_agg import grad_agg_reduce
+from repro.kernels.paged_attention import paged_attention_decode
 from repro.kernels.quantize import dequant_agg_reduce, quantize_pack
 from repro.kernels.ssd_scan import ssd_intra_chunk
 
@@ -46,6 +47,42 @@ def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
                                        block_q, block_k,
                                        interpret=not _ON_TPU)
     return jnp.swapaxes(out, 1, 2)
+
+
+def paged_attention(q, pages_k, pages_v, page_table, lengths,
+                    backend: str = "pallas"):
+    """Batched single-token decode over a paged KV cache.
+
+    q: (slots, Hq, D) — one query token per slot, model head layout;
+    pages_k/pages_v: (Hkv, num_pages, page_size, D) physical pools;
+    page_table: (slots, max_pages) int32; lengths: (slots,) int32
+    including the just-written token. Returns (slots, Hq, D).
+
+    The kernel wants GQA group-major q (slots, Hkv, G, D); G is padded to
+    the f32 sublane width (8) so each grid step's q block is a legal VMEM
+    tile. The padding happens BEFORE the backend branch — both the kernel
+    and the oracle see the same padded shapes, so the per-row reduction
+    order matches and bitwise parity survives (matmul bitwise results can
+    legitimately depend on the M dimension).
+    """
+    slots, Hq, D = q.shape
+    Hkv = pages_k.shape[0]
+    G = Hq // Hkv
+    Gp = G if G % 8 == 0 else G + 8 - G % 8
+    qg = q.reshape(slots, Hkv, G, D)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    if backend == "jnp":
+        out = ref.paged_attention_ref(qg, pages_k, pages_v,
+                                      page_table, lengths)
+    else:
+        if D not in (64, 128):
+            raise NotImplementedError(
+                f"paged_attention pallas backend needs head_dim in "
+                f"(64, 128), got {D}; use backend='jnp'")
+        out = paged_attention_decode(qg, pages_k, pages_v, page_table,
+                                     lengths, interpret=not _ON_TPU)
+    return out[:, :, :G].reshape(slots, Hq, D)
 
 
 def ssd(x, dt, A, B, C, chunk: int, initial_state=None, backend: str = "pallas"):

@@ -52,6 +52,60 @@ def ssd_sequential_ref(x, dt, A, B, C, initial_state=None):
     return jnp.moveaxis(ys, 0, 1), state
 
 
+def paged_attention_ref(q, pages_k, pages_v, page_table, lengths):
+    """Oracle for kernels.paged_attention.paged_attention_decode —
+    bit-identical output: the same f32 online-softmax update sequence,
+    page by page in grid order, with the same page-skip predicate (a
+    fully-masked page leaves the running state untouched, exactly like
+    the kernel's ``pl.when``; a dead slot — length 0 — yields zeros).
+
+    q: (slots, Hkv, G, D); pools: (Hkv, P, page, D); page_table:
+    (slots, max_pages) int32; lengths: (slots,) int32.
+    """
+    import math
+
+    B, Hkv, G, D = q.shape
+    maxp = page_table.shape[1]
+    page = pages_k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    NEG_INF = -1e30
+    kg = jnp.moveaxis(pages_k[:, page_table], 0, 1)  # (B, Hkv, maxp, page, D)
+    vg = jnp.moveaxis(pages_v[:, page_table], 0, 1)
+
+    def one_head(qbh, kpages, vpages, length):
+        qf = qbh.astype(jnp.float32) * scale            # (G, D)
+
+        def step(carry, inp):
+            m, l, acc = carry
+            j, k, v = inp
+            s = jax.lax.dot_general(qf, k.astype(jnp.float32),
+                                    (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(pos < length, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+            pv = jax.lax.dot_general(p, v.astype(jnp.float32),
+                                     (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            acc_new = acc * alpha + pv
+            hit = j * page < length  # the kernel's pl.when page skip
+            return (jnp.where(hit, m_new, m), jnp.where(hit, l_new, l),
+                    jnp.where(hit, acc_new, acc)), None
+
+        init = (jnp.full((G, 1), NEG_INF, jnp.float32),
+                jnp.zeros((G, 1), jnp.float32),
+                jnp.zeros((G, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            step, init, (jnp.arange(maxp, dtype=jnp.int32), kpages, vpages))
+        return (acc / jnp.maximum(l, 1e-30)).astype(qbh.dtype)
+
+    per_slot = jax.vmap(one_head, in_axes=(0, 0, 0, None))  # over Hkv
+    return jax.vmap(per_slot)(q, kg, vg, lengths)           # over slots
+
+
 def grad_agg_ref(g, rho):
     """out = Σ_n ρ_n g_n. g: (N, T, D); rho: (N,)."""
     return jnp.einsum("ntd,n->td", g.astype(jnp.float32),

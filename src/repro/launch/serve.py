@@ -1,38 +1,55 @@
-"""Serving launcher: prefill a batch of requests, then batched decode.
+"""Serving launcher: continuous-batching split decode (DESIGN.md §18).
 
-  python -m repro.launch.serve --arch mamba2-130m --preset smoke \
-      --batch 4 --prompt-len 64 --gen 32
+  python -m repro.launch.serve --arch granite-8b --preset smoke \
+      --users 8 --slots 4 --prompt-len 16 --gen 24 --codec int8 \
+      --page-size 16 --slo-ms 200 --cut 1
 
-Emits the split-inference telemetry contract (ROADMAP item 4) through
-``repro.obs``: one ``serve_token`` event per decode step —
-``{model, step, batch, latency_s}`` host wall-clock, synced per step —
-plus a ``serve_summary`` event with p50/p99/mean. ``--metrics-dir``
-persists them; ``python -m repro.obs.report DIR`` renders the
-percentiles. The SLO measurements for real serving land on this same
-schema.
+``U`` users queue for ``B`` decode slots of the
+:class:`repro.core.serve_engine.ServeEngine`: prefill-on-admit, per-step
+backfill, per-slot retirement over the paged KV cache, with boundary
+activations crossing the priced codec wire. Emits the split-inference
+telemetry contract (ROADMAP item 4) through ``repro.obs``: one
+``serve_token`` event per decode step (``{model, step, batch,
+latency_s}`` host wall-clock plus live/occupancy fields), per-step
+``traffic`` events reconciling the measured decode/prefill ledger
+against ``sysmodel.traffic`` (the report CLI's exit-1 gate), and a
+``serve_summary`` event with p50/p99/mean latency, tok/s and SLO
+attainment. ``--no-backfill`` degrades to the fixed-batch sequential
+baseline that ``benchmarks/serve_bench.py`` compares against.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from repro import obs
 
 
-def _pct(vals, q: float) -> float:
-    s = sorted(vals)
-    return s[min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))]
-
-
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--preset", default="smoke", choices=["smoke", "full"])
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=64)
-    p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--users", type=int, default=8,
+                   help="queued requests (U > slots exercises backfill)")
+    p.add_argument("--slots", type=int, default=4,
+                   help="decode batch width B")
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen", type=int, default=32,
+                   help="max new tokens per request")
+    p.add_argument("--codec", default="fp32",
+                   help="boundary activation codec (repro.compress)")
+    p.add_argument("--page-size", type=int, default=16)
+    p.add_argument("--slo-ms", type=float, default=None,
+                   help="per-token latency SLO (compute + modeled comm)")
+    p.add_argument("--sample", type=float, default=0.0, metavar="TEMPERATURE",
+                   help="0 = greedy (fused argmax); >0 = temperature sampling")
+    p.add_argument("--cut", type=int, default=1,
+                   help="split layer: client = embed + layers[:cut]")
+    p.add_argument("--no-backfill", action="store_true",
+                   help="fixed-batch sequential baseline (drain barrier)")
+    p.add_argument("--attn-impl", default="jnp", choices=["jnp", "flash"])
+    p.add_argument("--eos-id", type=int, default=None)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--checkpoint", default=None)
     p.add_argument("--metrics-dir", default=None,
@@ -61,61 +78,41 @@ def _serve(args):
 
     from repro.checkpoint import load_checkpoint
     from repro.configs import get_config, reduced_config
+    from repro.core.serve_engine import ServeEngine, make_requests
     from repro.models import lm
 
-    rec = obs.get_recorder()
     cfg = get_config(args.arch)
     if args.preset == "smoke":
         cfg = reduced_config(cfg)
-    plan = lm.build_plan(cfg, 0)
+    plan = lm.build_plan(cfg, args.cut)
     params = lm.init_lm(jax.random.key(args.seed), plan, jnp.float32)
     if args.checkpoint:
         params, meta = load_checkpoint(args.checkpoint, params)
         obs.log(f"restored checkpoint meta={meta}")
 
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.gen
-    rng = np.random.RandomState(args.seed)
-    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
-
-    t0 = time.perf_counter()
-    with rec.span("prefill", batch=B, prompt_len=S):
-        logits, caches = lm.prefill(params, plan, toks, max_len=max_len,
-                                    dtype=jnp.float32)
-        logits.block_until_ready()
-    prefill_s = time.perf_counter() - t0
-    obs.log(f"prefill {B}x{S} in {prefill_s:.2f}s")
-    rec.gauge("prefill_s", prefill_s, batch=B, prompt_len=S)
-
-    decode = jax.jit(lambda p, t, c: lm.decode_step(p, plan, t, c,
-                                                    dtype=jnp.float32))
-    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-    outs = [tok]
-    lat = []
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        ts = time.perf_counter()
-        logits, caches = decode(params, tok, caches)
-        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        tok.block_until_ready()  # per-token latency needs a per-step sync
-        step_s = time.perf_counter() - ts
-        outs.append(tok)
-        lat.append(step_s)
-        rec.event("serve_token", name="decode", model=cfg.name, step=i,
-                  batch=B, latency_s=step_s)
-    dt = time.perf_counter() - t0
-    gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
-    obs.log(f"decoded {args.gen-1} steps in {dt:.2f}s "
-            f"({(args.gen-1)*B/max(dt,1e-9):.1f} tok/s)")
-    if lat:
-        rec.event("serve_summary", name="decode", model=cfg.name,
-                  tokens=len(lat), batch=B,
-                  p50_s=_pct(lat, 0.50), p99_s=_pct(lat, 0.99),
-                  mean_s=sum(lat) / len(lat),
-                  tok_per_s=(args.gen - 1) * B / max(dt, 1e-9))
+    engine = ServeEngine(
+        params, plan, slots=args.slots,
+        max_len=args.prompt_len + args.gen, page_size=args.page_size,
+        codec=args.codec, attn_impl=args.attn_impl,
+        temperature=args.sample, eos_id=args.eos_id,
+        backfill=not args.no_backfill, slo_ms=args.slo_ms, seed=args.seed)
+    for req in make_requests(args.users, args.prompt_len, args.gen,
+                             vocab_size=cfg.vocab_size, seed=args.seed):
+        engine.submit(req)
+    obs.log(f"serving {args.users} users over {args.slots} slots "
+            f"(cut {args.cut}, codec {args.codec}, "
+            f"page {args.page_size}, backfill {not args.no_backfill})")
+    completions = engine.run()
+    s = engine.emit_summary()
+    obs.log(f"served {s['users']} users / {s['tokens']} tokens in "
+            f"{s['steps']} steps ({s['wall_s']:.2f}s, "
+            f"{s['tok_per_s']:.1f} tok/s)  "
+            f"p50 {s['p50_s'] * 1e3:.1f}ms p99 {s['p99_s'] * 1e3:.1f}ms"
+            + (f"  SLO({args.slo_ms:.0f}ms) {s['slo_attainment']:.1%}"
+               if args.slo_ms is not None else ""))
     obs.log("sample generations (token ids):")
-    for row in gen[: min(4, B)]:
-        obs.log("   " + str(row[:16].tolist()) + " ...")
+    for c in completions[: min(4, len(completions))]:
+        obs.log(f"   uid {c.uid}: {np.asarray(c.tokens)[:16].tolist()} ...")
 
 
 if __name__ == "__main__":

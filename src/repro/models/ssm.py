@@ -165,15 +165,58 @@ def _ssm_inner(cfg, params, xBC_conv, dt_raw, use_kernel: bool, prev_state=None)
     Cmat = Cm.reshape(B_sz, S, s.n_groups, s.state_dim)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
-    if use_kernel:
-        from repro.kernels import ops as kops
-        y, final_state = kops.ssd(x, dt, A, Bmat, Cmat, chunk=s.chunk_size,
-                                  initial_state=prev_state)
-    else:
-        y, final_state = ssd_chunked(x, dt, A, Bmat, Cmat, chunk=s.chunk_size,
-                                     initial_state=prev_state)
+    y, final_state = _ssd_any_length(x, dt, A, Bmat, Cmat, s.chunk_size,
+                                     prev_state, use_kernel)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * x
     return y.reshape(B_sz, S, d_inner), final_state, (x, dt, A, Bmat, Cmat)
+
+
+def _ssd_tail_sequential(x, dt, A, B, C, state):
+    """O(S) recurrent sweep (scan of ``ssd_step``) — the ragged tail of
+    ``_ssd_any_length``. Same recurrence the decode path runs token by
+    token, so a prefill at any length hands decode the exact state it
+    would have reached itself."""
+    b, _, h, p = x.shape
+    n = B.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(st, inp):
+        x_t, dt_t, B_t, C_t = inp
+        y, st = ssd_step(st, x_t, dt_t, A, B_t, C_t)
+        return st, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _ssd_any_length(x, dt, A, B, C, chunk: int, prev_state, use_kernel: bool):
+    """SSD over an arbitrary sequence length: the chunk-aligned head runs
+    the chunked dual form (or the Pallas kernel), the remainder runs the
+    sequential recurrence seeded with the head's final state. Serving
+    prompts (exact-length prefill, DESIGN.md §18) are rarely multiples
+    of the chunk size; training lengths still are, so the aligned path
+    is byte-identical to before."""
+    S = x.shape[1]
+    s0 = (S // chunk) * chunk
+    if s0 == S:
+        if use_kernel:
+            from repro.kernels import ops as kops
+            return kops.ssd(x, dt, A, B, C, chunk=chunk,
+                            initial_state=prev_state)
+        return ssd_chunked(x, dt, A, B, C, chunk=chunk,
+                           initial_state=prev_state)
+    state = prev_state
+    if s0:
+        y_head, state = _ssd_any_length(x[:, :s0], dt[:, :s0], A, B[:, :s0],
+                                        C[:, :s0], chunk, state, use_kernel)
+    y_tail, state = _ssd_tail_sequential(x[:, s0:], dt[:, s0:], A, B[:, s0:],
+                                         C[:, s0:], state)
+    if s0:
+        y_tail = jnp.concatenate([y_head, y_tail.astype(y_head.dtype)], axis=1)
+    return y_tail.astype(x.dtype), state
 
 
 def mamba2_train(params, cfg: ModelConfig, x, use_kernel: bool = False):

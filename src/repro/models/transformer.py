@@ -305,15 +305,26 @@ def apply_groups_prefill(params_list, cfg, groups, x, positions, max_len,
     return x, caches
 
 
+def _attend_decode_any(p, cfg, h, cache, impl):
+    """Dispatch on cache type: a PagedKVCache (continuous-batching server,
+    per-slot positions) vs the dense ring-buffer KVCache (lock-step batch,
+    one shared position)."""
+    from repro.models import paging as paging_mod
+
+    if isinstance(cache, paging_mod.PagedKVCache):
+        return paging_mod.attend_decode_paged(p, cfg, h, cache, impl)
+    return attn_mod.attend_decode(p, cfg, h, cache, impl)
+
+
 def _sublayer_decode(cfg, spec, p, x, cache, impl):
     mixer, ffn = spec
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if cfg.parallel_block and mixer == "attn" and ffn == "dense":
-        a, cache = attn_mod.attend_decode(p["attn"], cfg, h, cache, impl)
+        a, cache = _attend_decode_any(p["attn"], cfg, h, cache, impl)
         m = mlp(p["mlp"], h, cfg.mlp_act)
         return x + a + m, cache
     if mixer == "attn":
-        out, cache = attn_mod.attend_decode(p["attn"], cfg, h, cache, impl)
+        out, cache = _attend_decode_any(p["attn"], cfg, h, cache, impl)
         x = x + out
     else:
         out, cache = ssm_mod.mamba2_decode(p["ssm"], cfg, h, cache)

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 from repro.obs.ledger import LEDGER_CATEGORIES, TrafficLedger, reconcile
 from repro.obs.recorder import NullRecorder, Recorder, null_recorder
+from repro.obs.stats import percentile
 
 _active = null_recorder
 
@@ -80,6 +81,6 @@ def log(msg: str) -> None:
 
 __all__ = [
     "LEDGER_CATEGORIES", "NullRecorder", "Recorder", "TrafficLedger",
-    "get_recorder", "log", "null_recorder", "reconcile", "set_quiet",
-    "set_recorder", "use_recorder",
+    "get_recorder", "log", "null_recorder", "percentile", "reconcile",
+    "set_quiet", "set_recorder", "use_recorder",
 ]

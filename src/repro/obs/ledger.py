@@ -29,14 +29,16 @@ LEDGER_CATEGORIES: Tuple[str, ...] = (
     "up_labels",    # labels riding the uplink, uncompressed
     "up_model",     # client-model sync up (sfl φ, fl q)
     "up_adapter",   # PEFT adapter sync up (lora φ̂ — DESIGN.md §17)
+    "up_activation",  # split-inference boundary activations (DESIGN.md §18)
     "down_grad",    # cut-layer gradients (ONE broadcast for sfl_ga)
     "down_model",   # client-model sync down (sfl φ, fl q)
     "down_adapter",  # PEFT adapter sync down
+    "down_token",   # split-inference sampled token ids back to the user
 )
 UP_CATEGORIES: Tuple[str, ...] = ("up_smashed", "up_labels", "up_model",
-                                  "up_adapter")
+                                  "up_adapter", "up_activation")
 DOWN_CATEGORIES: Tuple[str, ...] = ("down_grad", "down_model",
-                                    "down_adapter")
+                                    "down_adapter", "down_token")
 
 
 class TrafficLedger:

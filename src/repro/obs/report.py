@@ -29,6 +29,7 @@ from collections import defaultdict
 from typing import Dict, Iterable, List, Optional
 
 from repro.obs.ledger import reconcile_events, totals
+from repro.obs.stats import percentile as _pct
 
 
 def _fmt_bits(bits) -> str:
@@ -73,14 +74,6 @@ def _table(headers: List[str], rows: List[List[str]]) -> str:
     out = [line(headers), line("-" * w for w in widths)]
     out.extend(line(r) for r in rows)
     return "\n".join(out)
-
-
-def _pct(values: List[float], q: float) -> float:
-    if not values:
-        return float("nan")
-    s = sorted(values)
-    idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
-    return s[idx]
 
 
 # ----------------------------------------------------------------------
@@ -312,18 +305,39 @@ def render_async(events: List[dict]) -> Optional[str]:
 
 
 def render_serve(events: List[dict]) -> Optional[str]:
+    """Serving engine summary (DESIGN.md §18): per-step decode latency,
+    batch occupancy and page usage from ``serve_token`` events, plus the
+    end-to-end ``serve_summary`` (step wall-clock + modeled comm)."""
     toks = [e for e in events if e.get("kind") == "serve_token"]
-    if not toks:
+    summaries = [e for e in events if e.get("kind") == "serve_summary"]
+    if not toks and not summaries:
         return None
-    lines = ["== serving (per-token latency) =="]
-    by_model: Dict[str, List[float]] = defaultdict(list)
+    lines = ["== serving =="]
+    by_model: Dict[str, List[dict]] = defaultdict(list)
     for e in toks:
-        by_model[e.get("model") or "?"].append(float(e.get("latency_s", 0.0)))
-    for model, lat in sorted(by_model.items()):
+        by_model[e.get("model") or "?"].append(e)
+    for model, evs in sorted(by_model.items()):
+        lat = [float(e.get("latency_s", 0.0)) for e in evs]
+        batch = [int(e.get("batch", 0)) for e in evs]
         lines.append(
-            f"  {model}: {len(lat)} tokens  "
-            f"p50 {_fmt_s(_pct(lat, 0.50))}  p99 {_fmt_s(_pct(lat, 0.99))}  "
+            f"  {model}: {len(evs)} steps  "
+            f"step p50 {_fmt_s(_pct(lat, 0.50))}  p99 {_fmt_s(_pct(lat, 0.99))}  "
             f"mean {_fmt_s(sum(lat) / len(lat))}")
+        lines.append(
+            f"    occupancy mean {sum(batch) / len(batch):.2f} slots  "
+            f"admitted {sum(int(e.get('admitted', 0)) for e in evs)}  "
+            f"retired {sum(int(e.get('retired', 0)) for e in evs)}"
+            + (f"  peak pages {max(int(e.get('pages_in_use', 0)) for e in evs)}"
+               if any("pages_in_use" in e for e in evs) else ""))
+    for s in summaries:
+        line = (f"  summary [{s.get('model', '?')}]: {s.get('users', '?')} "
+                f"users  {s.get('tokens', '?')} tokens  "
+                f"{float(s.get('tok_per_s', 0.0)):.1f} tok/s  "
+                f"token p50 {_fmt_s(s.get('p50_s'))}  "
+                f"p99 {_fmt_s(s.get('p99_s'))}")
+        if s.get("slo_attainment") is not None:
+            line += f"  SLO {float(s['slo_attainment']):.1%}"
+        lines.append(line)
     return "\n".join(lines)
 
 

@@ -42,6 +42,18 @@ from repro.sysmodel.payload import spec_for
 
 SCHEMES: Tuple[str, ...] = ("sfl_ga", "sfl", "psl", "fl")
 
+# bits of one sampled token id on the serving downlink (int32 on the wire)
+TOKEN_ID_BITS = 32
+
+
+def _empty_breakdown() -> Dict[str, int]:
+    """All ledger categories, zeroed — kept in lockstep with
+    ``repro.obs.ledger.LEDGER_CATEGORIES`` (tests pin the key sets equal)
+    without importing obs from the stdlib-only system model."""
+    return {"up_smashed": 0, "up_labels": 0, "up_model": 0, "up_adapter": 0,
+            "up_activation": 0, "down_grad": 0, "down_model": 0,
+            "down_adapter": 0, "down_token": 0}
+
 
 def wire_bits(codec: str, numel: int, raw_bits_per_elem: float = 32.0) -> int:
     """Bits on the wire for a ``numel``-element cut-layer payload.
@@ -88,8 +100,7 @@ def round_traffic_breakdown(scheme: str, *, n_clients: int, tau: int = 1,
         raise ValueError("adapter_model_bits replaces client/full model "
                          "bits — pass one or the other, not both")
     N = n_clients
-    bd = {"up_smashed": 0, "up_labels": 0, "up_model": 0, "up_adapter": 0,
-          "down_grad": 0, "down_model": 0, "down_adapter": 0}
+    bd = _empty_breakdown()
     up_sync, down_sync = ("up_adapter", "down_adapter") \
         if adapter_model_bits else ("up_model", "down_model")
     if scheme == "fl":
@@ -126,10 +137,47 @@ def round_traffic_bits(scheme: str, **kw) -> Dict[str, int]:
     cannot drift apart.
     """
     bd = round_traffic_breakdown(scheme, **kw)
-    up = bd["up_smashed"] + bd["up_labels"] + bd["up_model"] + bd["up_adapter"]
-    down = bd["down_grad"] + bd["down_model"] + bd["down_adapter"]
+    up = sum(v for k, v in bd.items() if k.startswith("up_"))
+    down = sum(v for k, v in bd.items() if k.startswith("down_"))
     return {"up_bits": int(up), "down_bits": int(down),
             "total_bits": int(up + down)}
+
+
+# ---------------------------------------------------------------------------
+# Split-inference serving legs (DESIGN.md §18): during decode each LIVE user
+# uplinks ONE boundary activation per token (the cut-layer hidden state,
+# priced under the transport codec) and receives ONE sampled token id back.
+# Prefill-on-admit ships the whole prompt's activations once.
+# ---------------------------------------------------------------------------
+
+def decode_step_traffic(*, n_live: int, d_model: int, codec: str = "fp32",
+                        raw_bits_per_elem: float = 32.0,
+                        token_bits: int = TOKEN_ID_BITS) -> Dict[str, int]:
+    """Modeled per-decode-step serving traffic, in ledger categories.
+
+    ``n_live`` is the number of OCCUPIED decode slots this step (retired
+    slots transmit nothing — the serving analogue of partial
+    participation's O(K) rule). Uplink: one ``d_model``-element smashed
+    activation per live user through ``codec``; downlink: one token id.
+    """
+    bd = _empty_breakdown()
+    n = max(0, int(n_live))
+    bd["up_activation"] = n * wire_bits(codec, d_model, raw_bits_per_elem)
+    bd["down_token"] = n * int(token_bits)
+    return bd
+
+
+def prefill_traffic(*, prompt_len: int, d_model: int, codec: str = "fp32",
+                    raw_bits_per_elem: float = 32.0,
+                    token_bits: int = TOKEN_ID_BITS) -> Dict[str, int]:
+    """Modeled admission traffic for ONE user: the prompt's
+    ``prompt_len × d_model`` boundary activation payload up, the first
+    sampled token id down."""
+    bd = _empty_breakdown()
+    bd["up_activation"] = wire_bits(codec, int(prompt_len) * int(d_model),
+                                    raw_bits_per_elem)
+    bd["down_token"] = int(token_bits)
+    return bd
 
 
 def migration_bits(phi_old: int, phi_new: int, *, n_clients: int,
